@@ -1,0 +1,77 @@
+"""Shared FL benchmark runner with disk cache (experiments/fl/*.json).
+
+The paper's experiments run 60 devices for hundreds of rounds on real
+datasets; this container is a single CPU core, so benchmarks run a reduced
+but structurally identical configuration (devices/rounds scale via
+BENCH_SCALE env: fast|full). Cached results are reused across benchmark
+scripts (Table I and Fig. 4 share runs, as in the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.sysmodel.population import FleetConfig  # noqa: E402
+from repro.train.fl_loop import run_fl, FLRunConfig  # noqa: E402
+
+CACHE_DIR = "experiments/fl"
+
+SCALES = {
+    "fast": dict(n_devices=8, rounds=15, n_train=768, n_test=256,
+                 eval_every=3),
+    "full": dict(n_devices=20, rounds=60, n_train=4096, n_test=1024,
+                 eval_every=5),
+}
+
+
+def scale() -> dict:
+    return SCALES[os.environ.get("BENCH_SCALE", "fast")]
+
+
+def run_cached(method: str, *, seed: int = 0, iid: bool = True,
+               fleet_kw: dict | None = None, run_kw: dict | None = None,
+               tag: str = "") -> dict:
+    sc = scale()
+    fleet_kw = fleet_kw or {}
+    run_kw = run_kw or {}
+    name = (f"{method}_{'iid' if iid else 'niid'}_s{seed}"
+            f"_{os.environ.get('BENCH_SCALE', 'fast')}"
+            f"{('_' + tag) if tag else ''}")
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, name + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    run_cfg = FLRunConfig(method=method, seed=seed, iid=iid,
+                          rounds=sc["rounds"], n_train=sc["n_train"],
+                          n_test=sc["n_test"], eval_every=sc["eval_every"],
+                          lr=0.1, **run_kw)
+    fleet = FleetConfig(n_devices=sc["n_devices"], **fleet_kw)
+    hist = run_fl(run_cfg, fleet)
+    result = {
+        "method": method, "tag": tag, "iid": iid, "seed": seed,
+        "best_acc": hist.best_acc,
+        "rows": hist.to_rows(),
+        "mean_alpha": float(np.mean([r.mean_alpha for r in hist.rounds])),
+        "mean_beta": float(np.mean([r.mean_beta for r in hist.rounds])),
+    }
+    with open(path, "w") as f:
+        json.dump(result, f)
+    return result
+
+
+def cost_to_accuracy(result: dict, target: float):
+    """(rounds, latency_s, energy_j, flops, comm_bits) to reach target acc,
+    or None if never reached."""
+    for row in result["rows"]:
+        if row["test_acc"] is not None and row["test_acc"] >= target:
+            return (row["round"] + 1, row["cum_latency_s"],
+                    row["cum_energy_j"], row["cum_flops"],
+                    row["cum_comm_bits"])
+    return None

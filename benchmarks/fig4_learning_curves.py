@@ -1,0 +1,34 @@
+"""Fig. 4: global accuracy vs cumulative time / energy, per method.
+
+Emits CSV (method, cum_latency_s, cum_energy_j, test_acc) from the shared
+cached runs — the paper's claim is that the AnycostFL curve dominates at
+every cost level.
+"""
+from __future__ import annotations
+
+from benchmarks.common import run_cached
+
+METHODS = ("anycostfl", "stc", "qsgd", "uveqfed", "heterofl", "fedhq")
+
+
+def main(iid: bool = True):
+    print("method,cum_latency_s,cum_energy_j,test_acc")
+    curves = {}
+    for m in METHODS:
+        res = run_cached(m, iid=iid)
+        pts = [(r["cum_latency_s"], r["cum_energy_j"], r["test_acc"])
+               for r in res["rows"] if r["test_acc"] is not None]
+        curves[m] = pts
+        for t, e, a in pts:
+            print(f"{m},{t:.1f},{e:.1f},{a:.4f}")
+    # dominance summary: acc achieved within the smallest shared time budget
+    budget = min(pts[-1][0] for pts in curves.values())
+    print(f"# acc at shared time budget {budget:.0f}s:")
+    for m, pts in curves.items():
+        within = [a for t, e, a in pts if t <= budget]
+        print(f"# {m}: {max(within) if within else 0.0:.4f}")
+    return curves
+
+
+if __name__ == "__main__":
+    main()

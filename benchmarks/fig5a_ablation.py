@@ -1,0 +1,30 @@
+"""Fig. 5a: mechanism ablation — remove EMS / FGC / AIO one at a time and
+measure the cost to reach the target accuracy."""
+from __future__ import annotations
+
+from benchmarks.common import cost_to_accuracy, run_cached
+
+VARIANTS = (
+    ("anycostfl", {}),
+    ("w/o EMS", {"use_ems": False}),
+    ("w/o FGC", {"use_fgc": False}),
+    ("w/o AIO", {"use_aio": False}),
+)
+
+
+def main(target: float = 0.45):
+    rows = []
+    for name, kw in VARIANTS:
+        res = run_cached("anycostfl", run_kw=kw,
+                         tag=name.replace("/", "").replace(" ", ""))
+        cost = cost_to_accuracy(res, target)
+        row = {"variant": name, "best_acc": round(res["best_acc"], 4),
+               "latency_to_target_s": round(cost[1], 1) if cost else None,
+               "energy_to_target_j": round(cost[2], 1) if cost else None}
+        rows.append(row)
+        print(row)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

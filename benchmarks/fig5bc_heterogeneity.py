@@ -1,0 +1,45 @@
+"""Fig. 5b-c: resilience to computation / communication heterogeneity.
+
+Fix the mean energy coefficient (5b) and the mean BS distance (5c), scale
+the variance, and measure energy/latency to target accuracy. The paper's
+claim: AnycostFL degrades the least as heterogeneity grows.
+"""
+from __future__ import annotations
+
+from benchmarks.common import cost_to_accuracy, run_cached
+
+# fast-scale default: the low/high variance endpoints for two methods
+# (BENCH_SCALE=full widens to 3 methods x 3 variance points)
+import os
+
+if os.environ.get("BENCH_SCALE", "fast") == "full":
+    METHODS = ("anycostfl", "stc", "heterofl")
+    VARS = (0.25, 1.0, 4.0)
+else:
+    METHODS = ("anycostfl", "stc")
+    VARS = (0.25, 4.0)
+
+
+def main(target: float = 0.45, kind: str = "compute"):
+    rows = []
+    for var in VARS:
+        if kind == "compute":
+            fleet_kw = {"eps_var_scale": var}
+        else:
+            fleet_kw = {"dist_mean_m": 400.0, "dist_var_scale": var}
+        for m in METHODS:
+            res = run_cached(m, fleet_kw=fleet_kw,
+                             tag=f"het_{kind}_{var}")
+            cost = cost_to_accuracy(res, target)
+            row = {"kind": kind, "var_scale": var, "method": m,
+                   "best_acc": round(res["best_acc"], 4),
+                   "energy_to_target_j": round(cost[2], 1) if cost else None,
+                   "latency_to_target_s": round(cost[1], 1) if cost else None}
+            rows.append(row)
+            print(row)
+    return rows
+
+
+if __name__ == "__main__":
+    main(kind="compute")
+    main(kind="comm")

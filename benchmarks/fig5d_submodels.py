@@ -1,0 +1,89 @@
+"""Fig. 5d: accuracy of width-shrunk sub-models sliced from the trained
+global model, WITHOUT retraining (anycost inference).
+
+The paper's surprise result: AnycostFL's global model keeps usable accuracy
+at reduced widths, unlike compression-only baselines.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import scale  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.core import shrinking  # noqa: E402
+from repro.data.synthetic import make_image_task  # noqa: E402
+from repro.models.registry import build_model  # noqa: E402
+from repro.sysmodel.population import FleetConfig  # noqa: E402
+from repro.train import fl_loop  # noqa: E402
+
+WIDTHS = (1.0, 0.7, 0.55, 0.4, 0.25)
+
+
+def _train_and_slice(method: str, sc: dict, seed=0):
+    """Re-run FL keeping the final params, then evaluate sub-models."""
+    run_cfg = fl_loop.FLRunConfig(method=method, seed=seed,
+                                  rounds=sc["rounds"],
+                                  n_train=sc["n_train"], n_test=sc["n_test"],
+                                  eval_every=sc["rounds"], lr=0.1)
+    # reproduce the loop but capture final params: reuse run_fl by monkey
+    # patching would be ugly; simplest: call internal pieces
+    hist, params, model, spec, test = _run_keep_params(run_cfg,
+                                                       FleetConfig(
+                                                           n_devices=sc[
+                                                               "n_devices"]))
+    tx, ty = jnp.asarray(test.x), np.asarray(test.y)
+    sorted_p = shrinking.sort_channels(params, spec)
+    accs = {}
+    for w in WIDTHS:
+        sub = shrinking.shrink(sorted_p, w, spec)
+        logits = model.forward(sub, {"images": tx})
+        accs[w] = float(np.mean(np.argmax(np.asarray(logits), -1) == ty))
+    return accs
+
+
+def _run_keep_params(run_cfg, fleet_cfg):
+    """fl_loop.run_fl variant that returns final params (same code path)."""
+    import repro.train.fl_loop as FL
+    captured = {}
+    orig_agg = FL.AnycostServer.aggregate
+
+    def capture_agg(self, params, updates, weights=None):
+        new = orig_agg(self, params, updates, weights=weights)
+        captured["params"] = new
+        return new
+
+    FL.AnycostServer.aggregate = capture_agg
+    try:
+        hist = FL.run_fl(run_cfg, fleet_cfg)
+    finally:
+        FL.AnycostServer.aggregate = orig_agg
+    cfg = get_config(run_cfg.arch)
+    model = build_model(cfg)
+    spec = shrinking.cnn_shrink_spec(cfg)
+    rng = np.random.default_rng(run_cfg.seed)
+    from repro.models.cnn import image_shape
+    train, test = make_image_task(rng, run_cfg.n_train, run_cfg.n_test,
+                                  shape=image_shape(cfg))
+    return hist, captured["params"], model, spec, test
+
+
+def main():
+    sc = dict(scale())
+    rows = []
+    for method in ("anycostfl", "heterofl", "stc"):
+        accs = _train_and_slice(method, sc)
+        for w, a in accs.items():
+            rows.append({"method": method, "width": w, "acc": round(a, 4)})
+            print(rows[-1])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Regenerate the auto-generated sections of EXPERIMENTS.md from
+experiments/dryrun/*.json (between the AUTOGEN markers)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from roofline_report import load, markdown_table  # noqa: E402
+
+MD = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+
+
+def dryrun_table() -> str:
+    lines = ["| arch | shape | mesh | lower (s) | compile (s) | "
+             "args (GB/dev) | temps (GB/dev) | collectives (ops) |",
+             "|---|---|---|---|---|---|---|---|"]
+    for rec in load(None, "baseline"):
+        ma = rec["memory_analysis"]
+        args_gb = (ma.get("argument_size_in_bytes") or 0) / 1e9
+        temp_gb = (ma.get("temp_size_in_bytes") or 0) / 1e9
+        n_coll = sum(int(d["count"])
+                     for d in rec["collectives"]["by_op"].values())
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+            f"{rec['lower_s']} | {rec['compile_s']} | {args_gb:.2f} | "
+            f"{temp_gb:.2f} | {n_coll} |")
+    skips = [p for p in glob.glob("experiments/dryrun/*baseline.json")
+             if json.load(open(p)).get("skipped")]
+    for p in sorted(skips):
+        rec = json.load(open(p))
+        lines.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                     f"SKIP | — | — | — | {rec['reason']} |")
+    return "\n".join(lines)
+
+
+def perf_rows() -> str:
+    lines = ["| tag | arch x shape (mesh) | compute (s) | memory (s) | "
+             "collective (s) | bottleneck |", "|---|---|---|---|---|---|"]
+    for p in sorted(glob.glob("experiments/dryrun/*.json")):
+        rec = json.load(open(p))
+        if rec.get("skipped") or rec.get("tag", "baseline") == "baseline":
+            continue
+        r = rec["roofline"]
+        lines.append(
+            f"| {rec['tag']} | {rec['arch']} x {rec['shape']} "
+            f"({rec['mesh']}) | {r['t_compute']:.3e} | {r['t_memory']:.3e} "
+            f"| {r['t_collective']:.3e} | {r['bottleneck']} |")
+    return "\n".join(lines)
+
+
+def regen():
+    with open(MD) as f:
+        text = f.read()
+    blocks = {
+        "DRYRUN": dryrun_table(),
+        "ROOFLINE_SINGLE": markdown_table("single"),
+        "ROOFLINE_MULTI": markdown_table("multi"),
+        "PERF_VARIANTS": perf_rows(),
+    }
+    for key, content in blocks.items():
+        start = f"<!-- AUTOGEN:{key} -->"
+        end = f"<!-- /AUTOGEN:{key} -->"
+        i, j = text.index(start), text.index(end)
+        text = text[:i + len(start)] + "\n" + content + "\n" + text[j:]
+    with open(MD, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md regenerated")
+
+
+if __name__ == "__main__":
+    regen()

@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU / compiled on TPU) vs
+the pure-jnp oracle. Prints ``name,us_per_call,derived`` CSV.
+
+On this CPU container the *oracle* timing is the meaningful number (it is
+what the FL loop runs); interpret-mode timings are recorded for reference
+only — on TPU the compiled kernels take over (kernels/ops.py dispatch).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.kernels import ref  # noqa: E402
+
+
+def _bench(fn, *args, reps=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    I, N = 16, 1 << 20
+    u = jax.random.normal(key, (I, N))
+    m = (jax.random.uniform(jax.random.PRNGKey(1), (I, N)) > 0.5
+         ).astype(jnp.float32)
+    w = jax.random.uniform(jax.random.PRNGKey(2), (I,))
+    us = _bench(jax.jit(ref.aio_aggregate_ref), u, m, w)
+    gbps = (I * N * 2 * 4) / (us / 1e6) / 1e9
+    print(f"aio_aggregate_ref_{I}x{N},{us:.1f},{gbps:.2f}GB/s")
+
+    x = jax.random.normal(key, (4096, 1152))
+    us = _bench(jax.jit(ref.kernel_l2_ref), x)
+    gbps = x.size * 4 / (us / 1e6) / 1e9
+    print(f"kernel_l2_ref_4096x1152,{us:.1f},{gbps:.2f}GB/s")
+
+    v = jax.random.normal(key, (N,))
+    mask = jnp.ones((N,))
+    rand = jax.random.uniform(jax.random.PRNGKey(3), (N,))
+    us = _bench(jax.jit(lambda a, b, c: ref.quantize_ref(
+        a, b, jnp.float32(1e-3), jnp.float32(3.0), jnp.float32(256), c)),
+        v, mask, rand)
+    print(f"quantize_ref_{N},{us:.1f},-")
+
+    # pallas interpret-mode sanity timing on a small size (NOT a perf claim)
+    from repro.kernels import aio_agg
+    small_u, small_m = u[:, :4096], m[:, :4096]
+    us = _bench(lambda a, b, c: aio_agg.aio_aggregate(a, b, c,
+                                                      interpret=True),
+                small_u, small_m, w, reps=3)
+    print(f"aio_aggregate_pallas_interpret_{I}x4096,{us:.1f},interpret-mode")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

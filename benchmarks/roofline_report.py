@@ -1,0 +1,94 @@
+"""Generate the EXPERIMENTS.md §Roofline table from experiments/dryrun/*.json.
+
+Per (arch x shape x mesh): the three roofline terms, the dominant term,
+MODEL_FLOPS/HLO_FLOPs useful ratio, and a what-would-move-it note.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+DRYRUN_DIR = "experiments/dryrun"
+
+
+def _advice(rec: dict) -> str:
+    r = rec["roofline"]
+    b = r["bottleneck"]
+    shape = rec["shape"]
+    arch = rec["arch"]
+    if b == "memory":
+        if "decode" in shape or shape == "long_500k":
+            return ("decode is KV/state-bandwidth bound: shard or quantize "
+                    "the KV cache (kv heads replicated over `model` today).")
+        if rec.get("remat") == "full":
+            return ("full remat doubles activation traffic: move to "
+                    "policy-based remat (checkpoint_dots) or larger fused "
+                    "blocks.")
+        return "reduce activation materialization (fusion / dtype)."
+    if b == "collective":
+        return ("cut cross-device bytes: FSDP all-gather batching, "
+                "anycost compressed pod sync (--grad-sync anycost), or "
+                "rebalance data/model axes.")
+    return ("compute-bound: close the useful-ratio gap (causal block "
+            "skipping, smaller dispatch overhead) or it is healthy.")
+
+
+def load(mesh: str = None, tag: str = "baseline") -> list[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            rec = json.load(f)
+        if rec.get("skipped"):
+            continue
+        if tag and rec.get("tag", "baseline") != tag:
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        out.append(rec)
+    return out
+
+
+def markdown_table(mesh: str = "single", tag: str = "baseline") -> str:
+    rows = load(mesh, tag)
+    lines = [
+        f"### Roofline — {mesh} mesh ({'16x16' if mesh == 'single' else '2x16x16'}, tag={tag})",
+        "",
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "bottleneck | useful ratio | note |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in rows:
+        r = rec["roofline"]
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['t_compute']:.2e} | "
+            f"{r['t_memory']:.2e} | {r['t_collective']:.2e} | "
+            f"**{r['bottleneck']}** | {r['useful_ratio']:.2f} | "
+            f"{_advice(rec)} |")
+    return "\n".join(lines)
+
+
+def summary(mesh: str = "single") -> dict:
+    rows = load(mesh)
+    worst = min(rows, key=lambda r: r["roofline"]["useful_ratio"] or 1e9)
+    most_coll = max(rows, key=lambda r: r["roofline"]["t_collective"])
+    return {"n": len(rows), "worst_useful": worst["arch"] + "/"
+            + worst["shape"], "most_collective": most_coll["arch"] + "/"
+            + most_coll["shape"]}
+
+
+def main():
+    for mesh in ("single", "multi"):
+        rows = load(mesh)
+        print(f"{mesh}: {len(rows)} combos, "
+              f"bottlenecks: "
+              f"{ {b: sum(1 for r in rows if r['roofline']['bottleneck'] == b) for b in ('compute', 'memory', 'collective')} }")
+    print(markdown_table("single"))
+    return 0
+
+
+if __name__ == "__main__":
+    main()

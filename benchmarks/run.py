@@ -1,0 +1,58 @@
+"""Benchmark entry point: one section per paper table/figure + roofline.
+
+``PYTHONPATH=src python -m benchmarks.run``  (BENCH_SCALE=fast|full)
+
+Prints ``name,us_per_call,derived`` CSV lines per section plus the per-
+table outputs. FL sections share cached runs under experiments/fl/.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _section(name, fn):
+    print(f"\n===== {name} =====")
+    t0 = time.time()
+    try:
+        fn()
+        print(f"{name},{(time.time() - t0) * 1e6:.0f},ok")
+        return True
+    except Exception:
+        traceback.print_exc()
+        print(f"{name},{(time.time() - t0) * 1e6:.0f},FAILED")
+        return False
+
+
+def main() -> None:
+    from benchmarks import (fig4_learning_curves, fig5a_ablation,
+                            fig5bc_heterogeneity, fig5d_submodels,
+                            kernel_micro, lemma1_divergence,
+                            roofline_report, schedule_solver,
+                            table1_cost_to_acc, theorem2_convergence)
+    from benchmarks import fig1_breakdown
+    ok = True
+    ok &= _section("fig1_breakdown", fig1_breakdown.main)
+    ok &= _section("kernel_micro", kernel_micro.main)
+    ok &= _section("lemma1_divergence", lemma1_divergence.main)
+    ok &= _section("theorem2_convergence", theorem2_convergence.main)
+    ok &= _section("schedule_solver", schedule_solver.main)
+    ok &= _section("roofline_report", roofline_report.main)
+    ok &= _section("table1_cost_to_acc", table1_cost_to_acc.main)
+    ok &= _section("fig4_learning_curves", fig4_learning_curves.main)
+    ok &= _section("fig5a_ablation", fig5a_ablation.main)
+    ok &= _section("fig5bc_heterogeneity",
+                   lambda: (fig5bc_heterogeneity.main(kind="compute"),
+                            fig5bc_heterogeneity.main(kind="comm")))
+    ok &= _section("fig5d_submodels", fig5d_submodels.main)
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

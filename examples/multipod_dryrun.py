@@ -1,0 +1,34 @@
+"""Drive the production multi-pod dry-run for one architecture and print
+its roofline (subprocess so the 512-device XLA flag never leaks into your
+session).
+
+  PYTHONPATH=src python examples/multipod_dryrun.py [arch] [shape]
+"""
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+arch = sys.argv[1] if len(sys.argv) > 1 else "qwen2-7b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+
+for mesh in ("single", "multi"):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh]
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    print(f"$ {' '.join(cmd[1:])}")
+    out = subprocess.run(cmd, env=env, cwd=ROOT, capture_output=True,
+                         text=True)
+    print(out.stdout.strip().splitlines()[-1] if out.stdout else out.stderr)
+    path = os.path.join(ROOT, "experiments", "dryrun",
+                        f"{arch}__{shape}__{mesh}__baseline.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        r = rec["roofline"]
+        print(f"  mesh={rec['mesh_desc']}  bottleneck={r['bottleneck']}  "
+              f"compute={r['t_compute']:.3e}s memory={r['t_memory']:.3e}s "
+              f"collective={r['t_collective']:.3e}s  "
+              f"useful={r['useful_ratio']:.2f}")
+        print(f"  memory_analysis: {rec['memory_analysis']}")

@@ -1,0 +1,75 @@
+"""AIO — All-in-One aggregation (paper §III-D, Theorem 1).
+
+Element-wise masked weighted averaging of heterogeneous local updates
+(different sub-model widths, different sparsity patterns):
+
+    u[j] = sum_i p_i m_i[j] u_i[j] / sum_i p_i m_i[j]     (Eq. 5)
+           0 where no device covers j
+
+with optimal coefficients (Theorem 1):
+
+    p_i* ∝ 1 / (1 - alpha_i (2 - alpha_i) sqrt(beta_i))^2  (Eq. 13)
+
+Updates arrive zero-padded to full coordinates (see shrinking.expand_update)
+with their {0,1} masks; stacking them gives the (I, ...) arrays the Pallas
+``aio_aggregate`` kernel consumes on TPU (kernels/aio_agg.py; the pure-jnp
+path below is the oracle).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def divergence_factor(alpha, beta) -> jax.Array:
+    """(1 - alpha(2-alpha)sqrt(beta)) — the Lemma-1 contraction factor."""
+    alpha = jnp.asarray(alpha, jnp.float32)
+    beta = jnp.asarray(beta, jnp.float32)
+    return 1.0 - alpha * (2.0 - alpha) * jnp.sqrt(beta)
+
+
+def optimal_coefficients(alphas, betas) -> jax.Array:
+    """Theorem 1 (Eq. 13): p* minimizing the global divergence bound."""
+    d = divergence_factor(jnp.asarray(alphas), jnp.asarray(betas))
+    inv = 1.0 / jnp.maximum(jnp.square(d), 1e-12)
+    return inv / jnp.sum(inv)
+
+
+def fedavg_coefficients(data_sizes) -> jax.Array:
+    """Conventional FedAvg weights |D_i|/|D| (the w/o-AIO ablation)."""
+    d = jnp.asarray(data_sizes, jnp.float32)
+    return d / jnp.sum(d)
+
+
+def aio_aggregate(updates: Sequence[PyTree], masks: Sequence[PyTree],
+                  weights: jax.Array, *, use_kernel: bool = False) -> PyTree:
+    """Eq. 5 over pytrees. updates/masks: per-device, same treedef."""
+    stacked_u = jax.tree.map(lambda *xs: jnp.stack(xs), *updates)
+    stacked_m = jax.tree.map(lambda *xs: jnp.stack(xs), *masks)
+
+    def agg(u, m):
+        if use_kernel:
+            from repro.kernels.ops import aio_aggregate_op
+            shape = u.shape[1:]
+            flat = aio_aggregate_op(u.reshape(u.shape[0], -1),
+                                    m.reshape(m.shape[0], -1), weights)
+            return flat.reshape(shape)
+        w = weights.reshape((-1,) + (1,) * (u.ndim - 1))
+        num = jnp.sum(w * m * u, axis=0)
+        den = jnp.sum(w * m, axis=0)
+        return jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+
+    return jax.tree.map(agg, stacked_u, stacked_m)
+
+
+def aio_aggregate_stacked(u: jax.Array, m: jax.Array, weights: jax.Array
+                          ) -> jax.Array:
+    """Vector form used by tests/benchmarks. u,m: (I, N); weights: (I,)."""
+    w = weights[:, None]
+    num = jnp.sum(w * m * u, axis=0)
+    den = jnp.sum(w * m, axis=0)
+    return jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)

@@ -1,0 +1,147 @@
+"""AnycostFL single-round orchestration (client + server), paper §III-A.
+
+The three-step round:
+  1) elastic local training  — shrink(w_t, alpha_i), tau local epochs of SGD
+  2) flexible gradient upload — cmprs(u_i, beta_i) (FGC)
+  3) parameter aggregation    — aioagg({u~_i}) with Theorem-1 weights
+
+The simulation runs real numerics on CPU for the paper's models; the same
+client/server code drives the pod-scale integration through
+``core.distributed`` (where devices = data-parallel replicas).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, compression, shrinking
+from repro.core.schedule import Strategy
+from repro.models.registry import Model, build_model, loss_fn
+from repro.utils.pytree import tree_sub
+
+PyTree = Any
+
+# discrete alpha buckets: bounds jit re-compilation of the local step to a
+# handful of sub-model widths (the paper's alpha is continuous; widths on
+# real hardware are also bucketed to efficient sizes)
+DEFAULT_ALPHA_BUCKETS = (0.25, 0.4, 0.55, 0.7, 0.85, 1.0)
+
+
+def bucket_alpha(alpha: float, buckets=DEFAULT_ALPHA_BUCKETS) -> float:
+    """Largest bucket <= alpha (never exceed the computed budget)."""
+    below = [b for b in buckets if b <= alpha + 1e-9]
+    return below[-1] if below else buckets[0]
+
+
+@dataclasses.dataclass
+class ClientUpdate:
+    """What the device uploads (server view, decoded)."""
+    values: PyTree             # full-coordinate update, zeros where absent
+    mask: PyTree               # {0,1} transmitted-coordinate mask
+    alpha: float
+    beta_target: float
+    beta_realized: float       # modelled wire bits / (32 * |update|)
+    bits: float
+    n_samples: int
+    flops: float               # actual local training FLOPs spent
+
+
+class AnycostClient:
+    """Device-side logic. Holds jit caches keyed by sub-model width."""
+
+    def __init__(self, model: Model, spec: shrinking.ShrinkSpec, *,
+                 lr: float, batch_size: int,
+                 alpha_buckets=DEFAULT_ALPHA_BUCKETS):
+        self.model = model
+        self.spec = spec
+        self.lr = lr
+        self.batch_size = batch_size
+        self.alpha_buckets = alpha_buckets
+        self._step_cache: dict = {}
+
+    def _local_steps(self, alpha: float, n_steps: int):
+        key = (alpha, n_steps)
+        if key in self._step_cache:
+            return self._step_cache[key]
+        sub_cfg = shrinking.shrunk_config(self.model.cfg, alpha, self.spec)
+        sub_model = build_model(sub_cfg)
+        lr = self.lr
+
+        @jax.jit
+        def run(params, batches):
+            def step(p, batch):
+                g = jax.grad(lambda q: loss_fn(sub_model, q, batch,
+                                               remat="none"))(p)
+                new = jax.tree.map(lambda a, b: a - lr * b.astype(a.dtype),
+                                   p, g)
+                return new, None
+
+            out, _ = jax.lax.scan(step, params, batches)
+            return out
+
+        self._step_cache[key] = run
+        return run
+
+    def local_round(self, sorted_global: PyTree, strategy: Strategy,
+                    batches: PyTree, key, *,
+                    planner: Optional[compression.BetaPlanner] = None,
+                    w_per_sample: float = 0.0) -> ClientUpdate:
+        """One full device round: shrink -> train -> compress -> (upload)."""
+        alpha = bucket_alpha(strategy.alpha, self.alpha_buckets)
+        sub = shrinking.shrink(sorted_global, alpha, self.spec)
+        n_steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
+        trained = self._local_steps(alpha, n_steps)(sub, batches)
+        update_sub = tree_sub(sub, trained)          # u = w_before - w_after
+        full_update, width_mask = shrinking.expand_update(
+            update_sub, sorted_global, alpha, self.spec)
+        beta = float(strategy.beta)
+        if planner is not None:
+            rho, levels = planner.plan(beta)
+            comp = compression.compress_update(full_update, beta, key,
+                                               rho=jnp.float32(rho),
+                                               n_levels=jnp.float32(levels))
+        else:
+            comp = compression.compress_update(full_update, beta, key)
+        # the transmitted mask = width mask AND sparsity mask
+        mask = jax.tree.map(lambda a, b: a * b, width_mask, comp.mask)
+        values = jax.tree.map(lambda v, m: v * m, comp.values, mask)
+        from repro.utils.pytree import tree_size
+        n = tree_size(full_update)
+        n_samples = (jax.tree_util.tree_leaves(batches)[0].shape[0]
+                     * self.batch_size)
+        return ClientUpdate(
+            values=values, mask=mask, alpha=alpha, beta_target=beta,
+            beta_realized=float(comp.bits) / (32.0 * n),
+            bits=float(comp.bits), n_samples=n_samples,
+            flops=alpha * w_per_sample * n_samples)
+
+
+class AnycostServer:
+    """Server-side: channel sorting, AIO aggregation, model update."""
+
+    def __init__(self, model: Model, spec: shrinking.ShrinkSpec,
+                 *, server_lr: float = 1.0):
+        self.model = model
+        self.spec = spec
+        self.server_lr = server_lr
+
+    def sort(self, params: PyTree) -> PyTree:
+        return shrinking.sort_channels(params, self.spec)
+
+    def aggregate(self, params: PyTree, updates: list[ClientUpdate],
+                  *, weights: Optional[jax.Array] = None) -> PyTree:
+        if weights is None:
+            weights = aggregation.optimal_coefficients(
+                [u.alpha for u in updates],
+                [max(u.beta_target, 1e-6) for u in updates])
+        agg = aggregation.aio_aggregate([u.values for u in updates],
+                                        [u.mask for u in updates], weights)
+        return jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - self.server_lr * g.astype(jnp.float32)
+                          ).astype(p.dtype), params, agg)

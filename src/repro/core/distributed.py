@@ -1,0 +1,155 @@
+"""AnycostFL on the pod: compressed cross-pod gradient synchronization.
+
+The paper compresses each device's uplink before server aggregation. On a
+multi-pod TPU mesh the analogue (DESIGN.md §3) treats each *pod* as a
+device: per-pod gradients are FGC-compressed — magnitude-threshold
+sparsification + int8 probabilistic quantization — exchanged with
+``all_gather`` over the "pod" axis, and combined with the AIO masked mean.
+The wire payload per leaf drops from the baseline psum's 2*(G-1)/G * N * 2
+bytes (bf16 all-reduce) to (G-1)/G * N * 1 byte: ~4x.
+
+Partitioner constraints (measured, not hypothetical): inside a
+partial-manual shard_map (manual "pod", auto "data"/"model"), gathers and
+scatter-adds on auto-sharded operands abort XLA's SPMD partitioner
+(``PartitionGather`` CHECK — the class of issues its warnings defer to the
+Shardy rewrite). The implementation therefore avoids index-based top-k
+entirely: sparsification uses a *moment-based magnitude threshold* (the
+keep_frac quantile of a half-normal fitted to the leaf — the same
+keep-the-largest semantics as FGC's kernel norms, Eq. 2, at elementwise
+grain), and the compressed exchange stays value-dense int8. On hardware, a
+packed sparse representation would buy the remaining keep_frac factor;
+XLA cannot express it through this path today (EXPERIMENTS.md §Perf P3
+documents the gap).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import erfinv
+
+PyTree = Any
+
+
+def magnitude_threshold(g: jax.Array, keep_frac: float) -> jax.Array:
+    """Approximate keep_frac-quantile of |g| via a half-normal moment fit
+    (elementwise + scalar reductions only — partitioner-safe)."""
+    if keep_frac >= 1.0:
+        return jnp.zeros((), jnp.float32)
+    std = jnp.sqrt(jnp.mean(jnp.square(g.astype(jnp.float32))) + 1e-30)
+    # |g| ~ HalfNormal(std): P(|g| > t) = keep -> t = std*sqrt(2)*erfinv(1-keep)
+    return std * jnp.sqrt(2.0) * erfinv(1.0 - keep_frac)
+
+
+def anycost_sync_leaf(g: jax.Array, axis_name: str, keep_frac: float,
+                      quantize: bool = True, axes=None) -> jax.Array:
+    """Compressed AIO all-reduce of one gradient leaf over ``axis_name``.
+
+    ``axes``: the leaf's logical axes (models.layers.LogicalAxes). Inside
+    the partial-manual region XLA's sharding propagation loses the grad's
+    data/model sharding through the int8 ops and replicates the exchange
+    buffers per device; re-constraining to the parameter's own sharding
+    keeps the compression *shard-wise* (each device compresses and
+    exchanges only its ZeRO shard over the pod axis — measured 30x wire
+    difference, EXPERIMENTS.md §Perf P3).
+    """
+    from repro import sharding as shd
+
+    def _pin(x, lead=0):
+        if axes is None or not shd.active():
+            return x
+        names = ((None,) * lead) + tuple(axes.names)
+        return jax.lax.with_sharding_constraint(
+            x, shd.sharding_for(x.shape, names))
+
+    gf = _pin(g.astype(jnp.float32))
+    thr = magnitude_threshold(gf, keep_frac)
+    sparse = _pin(jnp.where(jnp.abs(gf) >= thr, gf, 0.0))
+    if quantize:
+        amax = jnp.max(jnp.abs(sparse))
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = _pin(jnp.clip(jnp.round(sparse / scale), -127, 127)
+                 .astype(jnp.int8))
+        q_all = _pin(jax.lax.all_gather(q, axis_name), lead=1)  # (P,...)
+        s_all = jax.lax.all_gather(scale, axis_name)            # (P,)
+        vals = q_all.astype(jnp.float32) \
+            * s_all.reshape((-1,) + (1,) * g.ndim)
+    else:
+        vals = _pin(jax.lax.all_gather(sparse, axis_name), lead=1)
+    # AIO (Eq. 5) at uniform p (pods see equal local batches): element-wise
+    # masked mean over the pods that transmitted the coordinate. At
+    # keep_frac >= 1 every coordinate is transmitted (plain mean).
+    num = jnp.sum(vals, axis=0)
+    if keep_frac >= 1.0:
+        return (num / vals.shape[0]).astype(g.dtype)
+    mask = (vals != 0.0).astype(jnp.float32)
+    den = jnp.sum(mask, axis=0)
+    out = jnp.where(den > 0, num / jnp.maximum(den, 1.0), 0.0)
+    return out.astype(g.dtype)
+
+
+def anycost_gradient_sync(grads: PyTree, axis_name: str = "pod", *,
+                          keep_frac: float = 1.0 / 16.0,
+                          quantize: bool = True,
+                          axes_tree: PyTree = None,
+                          key: jax.Array | None = None) -> PyTree:
+    """FGC+AIO compressed mean of per-pod gradients (vs plain psum)."""
+    del key
+    if axes_tree is None:
+        return jax.tree.map(
+            lambda g: anycost_sync_leaf(g, axis_name, keep_frac, quantize),
+            grads)
+    from repro.models.layers import LogicalAxes
+    return jax.tree.map(
+        lambda g, ax: anycost_sync_leaf(g, axis_name, keep_frac, quantize,
+                                        axes=ax),
+        grads, axes_tree)
+
+
+def mean_gradient_sync(grads: PyTree, axis_name: str = "pod") -> PyTree:
+    """The uncompressed baseline: plain psum mean over the pod axis."""
+    size = jax.lax.psum(1, axis_name)
+    return jax.tree.map(lambda g: jax.lax.psum(g, axis_name) / size, grads)
+
+
+# ------------------------------------------------------------ error feedback
+
+def init_error_feedback(params: PyTree) -> PyTree:
+    """Residual accumulators for EF compressed sync (Seide et al. / EF-SGD).
+
+    The paper's FL clients retransmit fresh gradients every round; for
+    *repeated* pod-sync steps the compression error compounds unless the
+    dropped mass is fed back — a beyond-paper addition that makes the
+    compressed sync usable at training length.
+    """
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def anycost_gradient_sync_ef(grads: PyTree, residual: PyTree,
+                             axis_name: str = "pod", *,
+                             keep_frac: float = 1.0 / 16.0,
+                             quantize: bool = True,
+                             axes_tree: PyTree = None
+                             ) -> tuple[PyTree, PyTree]:
+    """EF variant: compress (grad + residual); residual' = input - sent."""
+    def one(g, r, ax=None):
+        corrected = g.astype(jnp.float32) + r
+        synced = anycost_sync_leaf(corrected.astype(g.dtype), axis_name,
+                                   keep_frac, quantize, axes=ax)
+        # the locally-transmitted part (pre-aggregation view): recompute the
+        # local sparse value to track what this pod actually contributed
+        thr = magnitude_threshold(corrected, keep_frac)
+        sent = jnp.where(jnp.abs(corrected) >= thr, corrected, 0.0)
+        return synced, corrected - sent
+
+    if axes_tree is None:
+        pairs = jax.tree.map(one, grads, residual)
+    else:
+        pairs = jax.tree.map(lambda g, r, ax: one(g, r, ax), grads,
+                             residual, axes_tree)
+    synced = jax.tree.map(lambda t: t[0], pairs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree.map(lambda t: t[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return synced, new_res

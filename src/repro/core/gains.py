@@ -1,0 +1,47 @@
+"""Learning gains and convergence bounds (paper §IV-B/C).
+
+Definition 3:  g_{t,i} = alpha^4 * beta   (local learning gain)
+               g_t = mean_i g_{t,i}       (global learning gain)
+Lemma 1:       E||delta||^2 <= (1 - a(2-a)sqrt(b))^2 E||u||^2
+Theorem 2:     E(F(w_T) - F*) <= Z^{T-1} E(F(w_0) - F*),
+               Z = 1 - (nu/lambda)(1 - eps(1 - g_min))
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import divergence_factor
+
+
+def local_gain(alpha, beta) -> jax.Array:
+    """Definition 3: g = alpha^4 * beta."""
+    return jnp.asarray(alpha, jnp.float32) ** 4 * jnp.asarray(beta,
+                                                              jnp.float32)
+
+
+def global_gain(alphas, betas) -> jax.Array:
+    return jnp.mean(local_gain(jnp.asarray(alphas), jnp.asarray(betas)))
+
+
+def local_divergence_bound(alpha, beta, u_sq_norm) -> jax.Array:
+    """Lemma 1 upper bound on E||u - u~||^2."""
+    return jnp.square(divergence_factor(alpha, beta)) * u_sq_norm
+
+
+def contraction_factor(g_min, *, nu: float, lam: float, eps: float
+                       ) -> jax.Array:
+    """Theorem 2's Z. Convergence requires Z < 1, i.e.
+    eps (1 - g_min) < 1."""
+    g_min = jnp.asarray(g_min, jnp.float32)
+    return 1.0 - (nu / lam) * (1.0 - eps * (1.0 - g_min))
+
+
+def rounds_to_epsilon(target: float, f0_gap: float, g_min: float, *,
+                      nu: float, lam: float, eps: float) -> float:
+    """Rounds T with Z^{T-1} * f0_gap <= target (Theorem 2, solved for T)."""
+    z = float(contraction_factor(g_min, nu=nu, lam=lam, eps=eps))
+    if z >= 1.0:
+        return float("inf")
+    import math
+    return 1.0 + math.log(target / f0_gap) / math.log(z)

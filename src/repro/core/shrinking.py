@@ -1,0 +1,326 @@
+"""EMS — Elastic Model Shrinking (paper §III-B).
+
+A :class:`ShrinkSpec` describes the *width groups* of a model: sets of
+parameter dims that share one hidden width and must be sliced consistently.
+Per group:
+
+* ``sort_by`` names the producing weight whose per-channel L2 norm ranks
+  importance (server-side channel sorting, §III-B.1). The permutation is
+  applied to every entry of the group — output side of the producing layer
+  and input side of the consuming layer(s) — preserving the function
+  (permutation invariance, [34]).
+* ``shrink`` keeps the first ``ceil(size * sqrt(alpha))`` channels
+  (layer-wise uniform shrinking, §III-B.2: hidden sizes scale by
+  ``sqrt(alpha)`` so training FLOPs scale by ``alpha``), rounded to
+  ``round_to`` (1 for CNition channels; the TPU configs round to whole heads
+  / lanes — DESIGN.md §3).
+
+Because sorting is function-preserving, the server keeps the global model
+permanently in sorted coordinates: sort -> distribute slices -> aggregate
+sub-updates (zero-padded back to full width) -> apply. No inverse
+permutation is needed across rounds.
+
+Entries address a dim that may be *structured*: ``(path, axis, outer,
+block)`` views the axis as (outer, size, block) — e.g. flattened conv
+feature maps (outer=H*W spatial positions, block=1) feeding a dense layer,
+or attention projections where a channel = one head of ``block=head_dim``
+lanes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Entry:
+    path: str          # dotted path into the params dict
+    axis: int
+    outer: int = 1     # axis viewed as (outer, size, block)
+    block: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class WidthGroup:
+    name: str
+    size: int                    # number of channels (groups of lanes)
+    entries: tuple                # tuple[Entry, ...]
+    sort_by: Entry               # producing weight used for importance
+    round_to: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ShrinkSpec:
+    groups: tuple                 # tuple[WidthGroup, ...]
+
+    def widths(self, alpha: float) -> dict[str, int]:
+        m = math.sqrt(alpha)
+        out = {}
+        for g in self.groups:
+            n = max(int(math.ceil(g.size * m)), g.round_to)
+            n = min(int(math.ceil(n / g.round_to)) * g.round_to, g.size)
+            out[g.name] = n
+        return out
+
+
+# ------------------------------------------------------------ dict plumbing
+
+def _get(tree: PyTree, path: str):
+    node = tree
+    for part in path.split("."):
+        node = node[part]
+    return node
+
+
+def _set(tree: PyTree, path: str, value):
+    parts = path.split(".")
+    node = tree
+    for part in parts[:-1]:
+        node = node[part]
+    node[parts[-1]] = value
+
+
+def _view(x: jax.Array, e: Entry, size: int):
+    """Reshape entry axis (outer*size*block) -> (outer, size, block)."""
+    shape = x.shape
+    assert shape[e.axis] == e.outer * size * e.block, (shape, e, size)
+    new = shape[:e.axis] + (e.outer, size, e.block) + shape[e.axis + 1:]
+    return x.reshape(new)
+
+
+def _unview(x: jax.Array, e: Entry):
+    shape = x.shape
+    new = shape[:e.axis] + (shape[e.axis] * shape[e.axis + 1]
+                            * shape[e.axis + 2],) + shape[e.axis + 3:]
+    return x.reshape(new)
+
+
+def _take(x: jax.Array, e: Entry, size: int, idx: jax.Array):
+    v = _view(x, e, size)
+    v = jnp.take(v, idx, axis=e.axis + 1)
+    return _unview(v, e)
+
+
+# ------------------------------------------------------------------ sorting
+
+def channel_importance(params: PyTree, g: WidthGroup) -> jax.Array:
+    """Per-channel L2 norm of the producing weight (descending = important)."""
+    w = _get(params, g.sort_by.path)
+    v = _view(w, g.sort_by, g.size)
+    axes = tuple(i for i in range(v.ndim) if i != g.sort_by.axis + 1)
+    return jnp.sqrt(jnp.sum(jnp.square(v.astype(jnp.float32)), axis=axes))
+
+
+def sort_channels(params: PyTree, spec: ShrinkSpec) -> PyTree:
+    """Server-side channel sorting (§III-B.1). Function-preserving."""
+    out = _deepcopy_dicts(params)
+    for g in spec.groups:
+        imp = channel_importance(out, g)
+        perm = jnp.argsort(-imp)
+        for e in g.entries:
+            _set(out, e.path, _take(_get(out, e.path), e, g.size, perm))
+    return out
+
+
+def _deepcopy_dicts(tree: PyTree) -> PyTree:
+    if isinstance(tree, dict):
+        return {k: _deepcopy_dicts(v) for k, v in tree.items()}
+    return tree
+
+
+# ----------------------------------------------------------------- shrinking
+
+def shrink(params: PyTree, alpha: float, spec: ShrinkSpec) -> PyTree:
+    """Slice the (already sorted) params to the alpha sub-model."""
+    widths = spec.widths(alpha)
+    out = _deepcopy_dicts(params)
+    for g in spec.groups:
+        n = widths[g.name]
+        idx = jnp.arange(n)
+        for e in g.entries:
+            _set(out, e.path, _take(_get(out, e.path), e, g.size, idx))
+    return out
+
+
+def expand_update(sub_update: PyTree, full_template: PyTree, alpha: float,
+                  spec: ShrinkSpec) -> tuple[PyTree, PyTree]:
+    """Zero-pad a sub-model update back to full width (sorted coords).
+
+    Returns (full_update, elementwise {0,1} mask of covered coordinates).
+    """
+    widths = spec.widths(alpha)
+    # start from the sub update; progressively pad each group axis
+    upd = _deepcopy_dicts(sub_update)
+    mask = jax.tree.map(lambda x: jnp.ones_like(x, jnp.float32), upd)
+    # map: path -> list of (entry, group) to pad
+    todo: dict[str, list] = {}
+    for g in spec.groups:
+        for e in g.entries:
+            todo.setdefault(e.path, []).append((e, g))
+
+    def pad_leaf(tree, path):
+        x = _get(tree, path)
+        for e, g in todo.get(path, []):
+            n = widths[g.name]
+            v = _view(x, e, n)
+            pads = [(0, 0)] * v.ndim
+            pads[e.axis + 1] = (0, g.size - n)
+            v = jnp.pad(v, pads)
+            x = _unview(v, e)
+        _set(tree, path, x)
+
+    for path in _all_paths(upd):
+        pad_leaf(upd, path)
+        pad_leaf(mask, path)
+    return upd, mask
+
+
+def _all_paths(tree: PyTree, prefix: str = "") -> list[str]:
+    if isinstance(tree, dict):
+        out = []
+        for k, v in tree.items():
+            out.extend(_all_paths(v, f"{prefix}{k}."))
+        return out
+    return [prefix[:-1]]
+
+
+def effective_alpha(spec: ShrinkSpec, alpha: float, full_template: PyTree
+                    ) -> float:
+    """Realized FLOP fraction ~ param fraction of the alpha sub-model."""
+    full = sum(int(np.prod(_get(full_template, p).shape))
+               for p in _all_paths(full_template))
+    # computed analytically per leaf from the group widths
+    widths = spec.widths(alpha)
+    todo: dict[str, list] = {}
+    for g in spec.groups:
+        for e in g.entries:
+            todo.setdefault(e.path, []).append((e, g))
+    sub_total = 0
+    for p in _all_paths(full_template):
+        shape = list(_get(full_template, p).shape)
+        factor = 1.0
+        for e, g in todo.get(p, []):
+            factor *= widths[g.name] / g.size
+        sub_total += int(np.prod(shape)) * factor
+    return sub_total / full
+
+
+# ------------------------------------------------------- spec constructors
+
+def cnn_shrink_spec(cfg) -> ShrinkSpec:
+    """Width groups for the paper's CNN / VGG-9 (§V-A models)."""
+    c = cfg.d_model
+    if cfg.name.startswith("fmnist"):
+        g1 = WidthGroup(
+            "conv1", c,
+            entries=(Entry("conv1.w", 3), Entry("conv1.b", 0),
+                     Entry("conv2.w", 2)),
+            sort_by=Entry("conv1.w", 3))
+        g2 = WidthGroup(
+            "conv2", 2 * c,
+            entries=(Entry("conv2.w", 3), Entry("conv2.b", 0),
+                     Entry("dense1.w", 0, outer=49, block=1)),
+            sort_by=Entry("conv2.w", 3))
+        g3 = WidthGroup(
+            "dense1", cfg.d_ff,
+            entries=(Entry("dense1.w", 1), Entry("dense1.b", 0),
+                     Entry("dense2.w", 0)),
+            sort_by=Entry("dense1.w", 1))
+        return ShrinkSpec((g1, g2, g3))
+    # VGG-9
+    groups = []
+    chans = [c, c, 2 * c, 2 * c, 4 * c, 4 * c]
+    for i in range(6):
+        name = f"conv{i + 1}"
+        nxt = f"conv{i + 2}"
+        entries = [Entry(f"{name}.w", 3), Entry(f"{name}.b", 0)]
+        if i < 5:
+            entries.append(Entry(f"{nxt}.w", 2))
+        else:
+            entries.append(Entry("dense1.w", 0, outer=16, block=1))
+        groups.append(WidthGroup(name, chans[i], tuple(entries),
+                                 sort_by=Entry(f"{name}.w", 3)))
+    groups.append(WidthGroup(
+        "dense1", cfg.d_ff,
+        entries=(Entry("dense1.w", 1), Entry("dense1.b", 0),
+                 Entry("dense2.w", 0)),
+        sort_by=Entry("dense1.w", 1)))
+    groups.append(WidthGroup(
+        "dense2", cfg.d_ff,
+        entries=(Entry("dense2.w", 1), Entry("dense2.b", 0),
+                 Entry("dense3.w", 0)),
+        sort_by=Entry("dense2.w", 1)))
+    return ShrinkSpec(tuple(groups))
+
+
+def transformer_shrink_spec(cfg, params_template: PyTree,
+                            round_to: int = 1) -> ShrinkSpec:
+    """Width groups for the decoder-LM families.
+
+    EMS shrinks the *hidden* widths whose slicing is function-preserving:
+    the MLP d_ff (dense/hybrid), the SSM d_inner, and attention q-head
+    count (whole heads, with wo input tracked). d_model (the residual
+    stream) is kept — shrinking it is not permutation-local (DESIGN.md §4).
+    Entries address the stacked-layer arrays (leading 'layers' axis -> +1).
+    """
+    groups = []
+    blocks = params_template.get("blocks", {})
+    if "mlp" in blocks:
+        gate = "w_gate" if "w_gate" in blocks["mlp"] else "w_up"
+        groups.append(WidthGroup(
+            "mlp", cfg.d_ff,
+            entries=tuple([Entry(f"blocks.mlp.{k}", 2)
+                           for k in ("w_gate", "w_up") if k in blocks["mlp"]]
+                          + [Entry("blocks.mlp.w_down", 1)]),
+            sort_by=Entry(f"blocks.mlp.{gate}", 2), round_to=round_to))
+    if "attn" in blocks and cfg.n_kv_heads:
+        # GQA-safe head shrinking: heads viewed as (kv_group, group_size)
+        # and the *group_size* dim is shrunk — every kv group keeps the same
+        # number of q heads, so the grouped-attention reshape stays valid.
+        hd = cfg.resolved_head_dim
+        kv = cfg.n_kv_heads
+        gsz = cfg.n_heads // kv
+        if gsz > 1:
+            entries = [Entry("blocks.attn.wq.w", 2, outer=kv, block=hd),
+                       Entry("blocks.attn.wo.w", 1, outer=kv, block=hd)]
+            if "b" in blocks["attn"]["wq"]:
+                entries.append(Entry("blocks.attn.wq.b", 1, outer=kv,
+                                     block=hd))
+            groups.append(WidthGroup(
+                "heads", gsz, tuple(entries),
+                sort_by=Entry("blocks.attn.wq.w", 2, outer=kv, block=hd)))
+    if "in_x" in blocks:  # mamba
+        s = cfg.ssm
+        groups.append(WidthGroup(
+            "d_inner", s.d_inner,
+            entries=(Entry("blocks.in_x.w", 2), Entry("blocks.in_z.w", 2),
+                     Entry("blocks.conv_w", 2), Entry("blocks.conv_b", 1),
+                     Entry("blocks.w_dt.w", 1), Entry("blocks.w_B.w", 1),
+                     Entry("blocks.w_C.w", 1), Entry("blocks.dt_proj.w", 2),
+                     Entry("blocks.dt_bias", 1), Entry("blocks.A_log", 1),
+                     Entry("blocks.D", 1), Entry("blocks.out.w", 1)),
+            sort_by=Entry("blocks.in_x.w", 2), round_to=round_to))
+    return ShrinkSpec(tuple(groups))
+
+
+def shrunk_config(cfg, alpha: float, spec: ShrinkSpec):
+    """ArchConfig for the alpha sub-model (forward code reads dims from it)."""
+    import dataclasses as dc
+    widths = spec.widths(alpha)
+    kw = {}
+    if "mlp" in widths:
+        kw["d_ff"] = widths["mlp"]
+    if "heads" in widths and cfg.n_kv_heads:
+        kw["n_heads"] = cfg.n_kv_heads * widths["heads"]
+    if "d_inner" in widths and cfg.ssm is not None:
+        kw["ssm"] = dc.replace(cfg.ssm, d_inner=widths["d_inner"])
+    if "conv1" in widths:  # cnn families read shapes from params directly
+        return cfg
+    return dc.replace(cfg, **kw) if kw else cfg

@@ -1,0 +1,51 @@
+"""Jit'd dispatch wrappers over the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode for validation;
+``use_pallas=False`` (the default on CPU) routes the FL hot loop through the
+pure-jnp oracles instead, because interpret mode executes the kernel body
+per grid step in Python. On TPU the compiled kernels are the default.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import aio_agg, quantize, ref, sparsify
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def interpret_default() -> bool:
+    return not _ON_TPU
+
+
+def aio_aggregate_op(u: jax.Array, m: jax.Array, w: jax.Array, *,
+                     use_pallas: bool = _ON_TPU) -> jax.Array:
+    if use_pallas:
+        return aio_agg.aio_aggregate(u, m, w, interpret=interpret_default())
+    return ref.aio_aggregate_ref(u, m, w)
+
+
+def kernel_l2_op(x: jax.Array, *, use_pallas: bool = _ON_TPU) -> jax.Array:
+    if use_pallas:
+        return sparsify.kernel_l2(x, interpret=interpret_default())
+    return ref.kernel_l2_ref(x)
+
+
+def threshold_apply_op(x: jax.Array, norms: jax.Array, thr: jax.Array, *,
+                       use_pallas: bool = _ON_TPU):
+    if use_pallas:
+        return sparsify.threshold_apply(x, norms, thr,
+                                        interpret=interpret_default())
+    return ref.threshold_mask_ref(x, norms, thr)
+
+
+def prob_quantize_op(v, mask, u_min, u_max, n_levels, rand, *,
+                     use_pallas: bool = _ON_TPU):
+    if use_pallas:
+        return quantize.prob_quantize(v, mask, u_min, u_max, n_levels, rand,
+                                      interpret=interpret_default())
+    return ref.quantize_ref(v, mask, u_min, u_max,
+                            jnp.asarray(n_levels, jnp.float32), rand)

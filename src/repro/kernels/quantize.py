@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: probabilistic quantization (Eq. 3-4).
+
+Elementwise stochastic rounding of the surviving gradient magnitudes onto
+the L-level uniform grid. Uniform randoms are generated outside with
+``jax.random`` and streamed in as an operand (deterministic, SPMD-friendly,
+bit-exact against the oracle in interpret mode — DESIGN.md §3).
+
+1-D tiling over flattened elements; scalars (u_min, u_max, L) ride in a
+(4,)-lane header block replicated to every grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 2048
+
+
+def _quant_kernel(s_ref, v_ref, m_ref, r_ref, q_ref, l_ref):
+    u_min, u_max, L = s_ref[0], s_ref[1], s_ref[2]
+    v = v_ref[...].astype(jnp.float32)
+    mask = m_ref[...] > 0
+    av = jnp.abs(v)
+    span = jnp.maximum(u_max - u_min, 1e-20)
+    step = span / L
+    t = jnp.clip((av - u_min) / step, 0.0, L)
+    lo = jnp.floor(t)
+    lvl = lo + (r_ref[...] < (t - lo)).astype(jnp.float32)
+    lvl = jnp.clip(lvl, 0.0, L)
+    q = (u_min + lvl * step) * jnp.sign(v)
+    q_ref[...] = jnp.where(mask, q, 0.0).astype(q_ref.dtype)
+    l_ref[...] = jnp.where(mask, lvl, 0.0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def prob_quantize(v: jax.Array, mask: jax.Array, u_min: jax.Array,
+                  u_max: jax.Array, n_levels: jax.Array, rand: jax.Array, *,
+                  interpret: bool = False, block_n: int = BN
+                  ) -> tuple[jax.Array, jax.Array]:
+    """v, mask, rand: (N,). Returns (dequantized (N,), level idx (N,) i32)."""
+    N = v.shape[0]
+    pad = (-N) % block_n
+    if pad:
+        v = jnp.pad(v, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+        rand = jnp.pad(rand, (0, pad))
+    Np = v.shape[0]
+    scalars = jnp.stack([u_min.astype(jnp.float32),
+                         u_max.astype(jnp.float32),
+                         jnp.asarray(n_levels, jnp.float32),
+                         jnp.float32(0)])
+    q, lvl = pl.pallas_call(
+        _quant_kernel,
+        grid=(Np // block_n,),
+        in_specs=[
+            pl.BlockSpec((4,), lambda i: (0,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np,), v.dtype),
+            jax.ShapeDtypeStruct((Np,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scalars, v, mask.astype(jnp.float32), rand)
+    return q[:N], lvl[:N]

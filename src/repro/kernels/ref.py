@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contracts: tests sweep shapes/dtypes and assert the
+kernels match these references (interpret mode on CPU, compiled on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kernel_l2_ref(x: jax.Array) -> jax.Array:
+    """Row-wise L2 norms. x: (K, ksize) -> (K,) f32."""
+    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32)), axis=-1))
+
+
+def threshold_mask_ref(x: jax.Array, norms: jax.Array, thr: jax.Array
+                       ) -> jax.Array:
+    """Eq. 2 elementwise: zero rows whose norm < thr. x: (K, ksize)."""
+    keep = (norms >= thr).astype(x.dtype)
+    return x * keep[:, None], keep
+
+
+def quantize_ref(v: jax.Array, mask: jax.Array, u_min: jax.Array,
+                 u_max: jax.Array, n_levels: jax.Array, rand: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Eq. 3-4 with pre-drawn uniforms ``rand`` (same shape as v).
+
+    Returns (dequantized values, int32 level indices).
+    """
+    L = n_levels.astype(jnp.float32)
+    av = jnp.abs(v.astype(jnp.float32))
+    span = jnp.maximum(u_max - u_min, 1e-20)
+    step = span / L
+    t = jnp.clip((av - u_min) / step, 0.0, L)
+    lo = jnp.floor(t)
+    lvl = lo + (rand < (t - lo))
+    lvl = jnp.clip(lvl, 0.0, L)
+    q = (u_min + lvl * step) * jnp.sign(v.astype(jnp.float32))
+    nz = mask > 0
+    q = jnp.where(nz, q, 0.0).astype(v.dtype)
+    lvl = jnp.where(nz, lvl, 0.0).astype(jnp.int32)
+    return q, lvl
+
+
+def aio_aggregate_ref(u: jax.Array, m: jax.Array, w: jax.Array) -> jax.Array:
+    """Eq. 5. u, m: (I, N); w: (I,) -> (N,) f32."""
+    uf = u.astype(jnp.float32)
+    mf = m.astype(jnp.float32)
+    wf = w.astype(jnp.float32)[:, None]
+    num = jnp.sum(wf * mf * uf, axis=0)
+    den = jnp.sum(wf * mf, axis=0)
+    return jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)

@@ -1,0 +1,521 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = FLOPs_per_device / peak_flops_per_chip
+  memory     = bytes_per_device / hbm_bw_per_chip
+  collective = sum over collective ops of moved_bytes / ici_bw
+
+Sources — and one measured XLA caveat. ``compiled.cost_analysis()`` counts
+every ``while`` body exactly ONCE regardless of trip count (verified
+empirically: a 10-iteration scanned matmul reports 1.0000005x the flops of
+a single matmul — see EXPERIMENTS.md §Dry-run). All our models scan over
+layers (and attention/SSM/MoE chunks), so raw HLO flops/bytes under-count
+by ~n_layers x chunk factors. Therefore:
+
+* collective bytes: parsed from ``compiled.as_text()`` with a
+  *trip-count-aware* walk of the computation graph — each while body's
+  collectives are multiplied by the loop bound read from the condition
+  computation's comparison constant (exact for lax.scan lowering).
+* compute/memory terms: an analytic per-(arch x shape x kind) model
+  (``analytic_cost``) that accounts matmuls, attention blocks (incl.
+  causal-skip and sliding-window variants), MoE dispatch overhead, scan
+  recurrences, remat recompute, optimizer traffic and KV-cache traffic.
+  The raw HLO numbers are kept alongside as ``hlo_*`` evidence fields.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# Ring-algorithm bytes-on-wire per device, derived from the instruction's
+# OUTPUT shape (XLA's HLO text omits operand shapes) and group size G:
+#   all-reduce      out = in  = N      -> 2 (G-1)/G * N
+#   all-gather      out = G*in         -> (G-1)/G * out
+#   reduce-scatter  out = in/G         -> (G-1)/G * (out*G) = (G-1)*out
+#   all-to-all      out = in  = N      -> (G-1)/G * N
+#   collective-permute                 -> out
+def _wire_bytes(op: str, out_bytes: float, group: int) -> float:
+    if group <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (group - 1) / group * out_bytes
+    if op == "all-gather":
+        return (group - 1) / group * out_bytes
+    if op == "reduce-scatter":
+        return (group - 1) * out_bytes
+    if op == "all-to-all":
+        return (group - 1) / group * out_bytes
+    if op == "collective-permute":
+        return out_bytes
+    return 0.0
+
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _tensor_bytes(dtype: str, dims: str) -> Optional[int]:
+    if dtype not in _DTYPE_BYTES:
+        return None
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        # iota format [n_groups, group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            return len([t for t in first.split(",") if t.strip() != ""])
+    return 2  # conservative default when groups are implicit
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    by_op: dict
+    wire_bytes: float           # sum of operand bytes x wire factor
+    raw_bytes: float            # sum of operand bytes
+
+    def to_dict(self):
+        return {"by_op": self.by_op, "wire_bytes": self.wire_bytes,
+                "raw_bytes": self.raw_bytes}
+
+
+# computation header: "%name (params...) -> result {" — params may contain
+# nested parens (tuple types), so just take the leading token as the name
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """computation name -> its body lines (flat, depth-1 brace tracking)."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    depth = 0
+    for line in hlo_text.splitlines():
+        s = line.rstrip()
+        if cur is None:
+            m = _COMP_RE.match(s.strip())
+            if m and s.endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                depth = 1
+            continue
+        depth += s.count("{") - s.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        comps[cur].append(s)
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Loop bound from the condition computation (scan lowering compares the
+    induction variable against a constant). Conservative: the max constant
+    seen in the tiny condition computation."""
+    best = 1
+    for line in cond_lines:
+        for c in _CONST_RE.findall(line):
+            best = max(best, int(c))
+    return best
+
+
+def parse_collectives(hlo_text: str, bf16_model: bool = False
+                      ) -> CollectiveStats:
+    """Trip-count-aware collective accounting over the computation graph.
+
+    ``bf16_model=True`` halves the bytes of f32 collective tensors: the CPU
+    backend's float-normalization pass upcasts every bf16 op to f32 before
+    SPMD partitioning, so a bf16 model's activation/param collectives appear
+    as f32 in the dry-run HLO — on TPU they run in bf16. (Genuinely-f32
+    traffic in a bf16 model — loss scalars — is negligible; optimizer
+    moments are sharded elementwise and never communicated.)
+    """
+    comps = _split_computations(hlo_text)
+    if not comps:
+        return CollectiveStats({}, 0.0, 0.0)
+
+    # entry = computation named like main / the one nobody references
+    entry = None
+    for name in comps:
+        if name.startswith("main"):
+            entry = name
+            break
+    if entry is None:
+        referenced = set()
+        for lines in comps.values():
+            for ln in lines:
+                for m in _WHILE_RE.finditer(ln):
+                    referenced.update(m.groups())
+        cands = [n for n in comps if n not in referenced]
+        entry = cands[0] if cands else next(iter(comps))
+
+    by_op: dict = {}
+    totals = {"wire": 0.0, "raw": 0.0}
+
+    def visit(name: str, mult: float, seen: tuple):
+        if name not in comps or name in seen:
+            return
+        for ln in comps[name]:
+            m = re.search(
+                r"=\s+(.*?)\s+((?:all-gather|all-reduce|reduce-scatter|"
+                r"all-to-all|collective-permute)(?:-start|-done)?)\(", ln)
+            if m and not m.group(2).endswith("-done"):
+                op = m.group(2).replace("-start", "")
+                out_bytes = 0
+                for dt, dims in _SHAPE_RE.findall(m.group(1)):
+                    b = _tensor_bytes(dt, dims)
+                    if b:
+                        if bf16_model and dt == "f32":
+                            b //= 2   # CPU float-normalization artifact
+                        out_bytes += b
+                g = _group_size(ln)
+                wb = _wire_bytes(op, out_bytes, g)
+                d = by_op.setdefault(op, {"count": 0, "bytes": 0.0,
+                                          "wire_bytes": 0.0})
+                d["count"] += mult
+                d["bytes"] += out_bytes * mult
+                d["wire_bytes"] += wb * mult
+                totals["raw"] += out_bytes * mult
+                totals["wire"] += wb * mult
+            wm = _WHILE_RE.search(ln)
+            if wm:
+                cond, body = wm.groups()
+                trips = _trip_count(comps.get(cond, []))
+                visit(body, mult * trips, seen + (name,))
+
+    visit(entry, 1.0, ())
+    return CollectiveStats(by_op, totals["wire"], totals["raw"])
+
+
+def collective_histogram(hlo_text: str, top: int = 15) -> list[dict]:
+    """Largest collective contributors (op, out shape, trips, wire bytes) —
+    the profiler view used by the §Perf hypothesis loop."""
+    comps = _split_computations(hlo_text)
+    entry = None
+    for name in comps:
+        if name.startswith("main"):
+            entry = name
+            break
+    if entry is None:
+        return []
+    items: list[dict] = []
+
+    def visit(name: str, mult: float, seen: tuple):
+        if name not in comps or name in seen:
+            return
+        for ln in comps[name]:
+            m = re.search(
+                r"=\s+(.*?)\s+((?:all-gather|all-reduce|reduce-scatter|"
+                r"all-to-all|collective-permute)(?:-start|-done)?)\(", ln)
+            if m and not m.group(2).endswith("-done"):
+                op = m.group(2).replace("-start", "")
+                shapes = _SHAPE_RE.findall(m.group(1))
+                out_bytes = sum(_tensor_bytes(dt, dims) or 0
+                                for dt, dims in shapes)
+                g = _group_size(ln)
+                items.append({
+                    "op": op, "shape": "/".join(f"{dt}[{dims}]"
+                                                for dt, dims in shapes),
+                    "trips": mult, "group": g,
+                    "wire_bytes": _wire_bytes(op, out_bytes, g) * mult,
+                    "comp": name})
+            wm = _WHILE_RE.search(ln)
+            if wm:
+                cond, body = wm.groups()
+                visit(body, mult * _trip_count(comps.get(cond, [])),
+                      seen + (name,))
+
+    visit(entry, 1.0, ())
+    items.sort(key=lambda d: -d["wire_bytes"])
+    return items[:top]
+
+
+def parse_collectives_flat(hlo_text: str) -> CollectiveStats:
+    by_op: dict = {}
+    wire = 0.0
+    raw = 0.0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # "%name = <out-shape> <op-name>(operands...)" — operands carry no
+        # shapes in modern HLO text; we read the output shape.
+        m = re.search(r"=\s+(.*?)\s+((?:all-gather|all-reduce|reduce-scatter|"
+                      r"all-to-all|collective-permute)(?:-start|-done)?)\(", s)
+        if not m:
+            continue
+        if m.group(2).endswith("-done"):
+            continue  # -start already counted
+        op = m.group(2).replace("-start", "")
+        out_bytes = 0
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            b = _tensor_bytes(dt, dims)
+            if b:
+                out_bytes += b
+        g = _group_size(s)
+        wb = _wire_bytes(op, out_bytes, g)
+        d = by_op.setdefault(op, {"count": 0, "bytes": 0.0,
+                                  "wire_bytes": 0.0})
+        d["count"] += 1
+        d["bytes"] += out_bytes
+        d["wire_bytes"] += wb
+        raw += out_bytes
+        wire += wb
+    return CollectiveStats(by_op, wire, raw)
+
+
+# --------------------------------------------------------- analytic model
+
+def _per_layer_matmul_params(cfg) -> float:
+    """Matmul parameters per (average) layer — fwd flops = 2*P*tokens."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        dtr = s.dt_rank or max(1, -(-d // 16))
+        return (d * 2 * s.d_inner + s.d_inner * (dtr + 2 * s.state_dim)
+                + dtr * s.d_inner + s.d_inner * d)
+    attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd \
+        + cfg.n_heads * hd * d
+    glu = 3 if cfg.activation in ("swiglu", "geglu") else 2
+    if cfg.family == "moe":
+        m = cfg.moe
+        # capacity-factor waste included: E*C slots ~ cf*k*Sc tokens compute
+        expert = m.capacity_factor * m.top_k * glu * d * m.expert_d_ff
+        router = d * m.n_experts
+        return attn + expert + router
+    mlp = glu * d * cfg.d_ff
+    if cfg.family == "hybrid":
+        h = cfg.hybrid
+        w = h.lru_width or d
+        n_attn = sum(1 for p in h.pattern if p == "attn")
+        n_rec = len(h.pattern) - n_attn
+        rec = d * 2 * w + w * d
+        return (n_attn * (attn + mlp) + n_rec * (rec + mlp)) / len(h.pattern)
+    if cfg.family == "encdec":
+        e = cfg.encdec
+        enc = attn + mlp
+        dec = 2 * attn + mlp
+        return (e.n_enc_layers * enc + e.n_dec_layers * dec) \
+            / (e.n_enc_layers + e.n_dec_layers)
+    return attn + mlp
+
+
+def _moe_dispatch_flops_per_token(cfg) -> float:
+    """One-hot dispatch+combine einsum overhead (moe.py capacity path)."""
+    if cfg.family != "moe":
+        return 0.0
+    m = cfg.moe
+    from repro.models.moe import MOE_CHUNK
+    chunk = MOE_CHUNK
+    cap = max(int(m.capacity_factor * chunk * m.top_k / m.n_experts), 1)
+    return 2 * 2.0 * m.n_experts * cap * cfg.d_model
+
+
+def _n_layers_eff(cfg) -> float:
+    if cfg.family == "encdec":
+        return cfg.encdec.n_enc_layers + cfg.encdec.n_dec_layers
+    return cfg.n_layers
+
+
+def analytic_cost(cfg, shape, *, remat: str = "full",
+                  causal_skip: bool = False, n_chips: int = 256,
+                  data_shards: int = 16, window=None) -> dict:
+    """Analytic FLOPs / HBM bytes for one step of this (arch x shape).
+
+    Replaces HLO cost_analysis for the compute/memory terms because XLA
+    counts while bodies once (module docstring). All numbers are *ideal
+    minimum traffic* for the configured sharding — a perfect
+    implementation's floor, which is exactly what a roofline wants.
+    """
+    kind = shape.kind
+    B = shape.global_batch
+    S = 1 if kind == "decode" else shape.seq_len
+    ctx = shape.seq_len                     # decode context = cache length
+    win = window if window is not None else cfg.sliding_window
+    T = B * S
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    L = _n_layers_eff(cfg)
+    b_par = 2 if cfg.dtype == "bfloat16" else 4
+
+    # ---- flops
+    p_layer = _per_layer_matmul_params(cfg)
+    mm = 2.0 * p_layer * T * L
+    if cfg.family == "moe":
+        m = cfg.moe
+        glu = 3 if cfg.activation in ("swiglu", "geglu") else 2
+        if kind == "decode":
+            # dispatch-einsum decode computes every expert slot (B x E);
+            # replace the capacity-active estimate with the full-E cost
+            mm += 2.0 * T * L * (m.n_experts - m.capacity_factor * m.top_k) \
+                * glu * cfg.d_model * m.expert_d_ff
+        else:
+            mm += T * _moe_dispatch_flops_per_token(cfg) * cfg.n_layers
+    # attention scores+values: 4 * T * ctx_eff * H * hd per layer
+    attn_fl = 0.0
+    if cfg.n_heads:
+        if kind == "decode":
+            ctx_eff = min(ctx, win) if win else ctx
+        else:
+            # blockwise full grid computes every (q, kv) block pair unless
+            # causal skipping halves it
+            ctx_eff = S / 2 if causal_skip else S
+        frac_attn = 1.0
+        if cfg.family == "hybrid":
+            frac_attn = sum(1 for p in cfg.hybrid.pattern if p == "attn") \
+                / len(cfg.hybrid.pattern)
+        attn_fl = 4.0 * T * ctx_eff * cfg.n_heads * hd * L * frac_attn
+        if cfg.family == "encdec" and kind != "decode":
+            # encoder self-attn over frames + decoder cross-attn over frames
+            F = cfg.encdec.n_frames
+            attn_fl += 4.0 * B * F * F * cfg.n_heads * hd \
+                * cfg.encdec.n_enc_layers
+            attn_fl += 4.0 * T * F * cfg.n_heads * hd * cfg.encdec.n_dec_layers
+    # recurrences (ssm / rglru): elementwise, ~flops per token
+    rec_fl = 0.0
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        rec_fl = T * L * (12.0 * s.d_inner * s.state_dim       # scan+disc
+                          + 2 * s.conv_width * s.d_inner
+                          + 2 * s.d_inner * s.state_dim)       # y = C.h
+    if cfg.family == "hybrid":
+        w = cfg.hybrid.lru_width or d
+        frac_rec = sum(1 for p in cfg.hybrid.pattern if p == "rglru") \
+            / len(cfg.hybrid.pattern)
+        rec_fl = T * L * frac_rec * (20.0 * w + 8.0 * w)
+    head_fl = 2.0 * T * d * cfg.vocab_size
+    fwd = mm + attn_fl + rec_fl + head_fl
+    if kind == "train":
+        mult = {"none": 3.0, "dots": 3.4, "full": 4.0}[remat]
+        flops = mult * fwd
+    else:
+        flops = fwd
+
+    # ---- bytes (per component, with its real sharding divisor)
+    n_params = cfg.n_params()
+    if kind == "train":
+        # params fwd+bwd reads, grad write, adam m/v read+write (f32)
+        par_bytes = n_params * (2 * b_par + b_par + 4 * 4)
+        # full remat: save layer inputs, re-read + recompute writes
+        act_factor = {"none": 2.0, "dots": 3.0, "full": 3.0}[remat]
+        act_bytes = act_factor * L * T * d * b_par
+        head_bytes = 3.0 * T * cfg.vocab_size * 4.0      # logits + CE bwd
+        per_dev = (par_bytes / n_chips + act_bytes / n_chips
+                   + head_bytes / n_chips)
+    elif kind == "prefill":
+        par_bytes = n_params * b_par
+        act_bytes = L * T * d * b_par
+        kv_bytes = 2.0 * L * T * cfg.n_kv_heads * hd * b_par \
+            if cfg.n_heads else 0.0
+        head_bytes = 2.0 * T * cfg.vocab_size * 4.0
+        per_dev = (par_bytes + act_bytes + head_bytes) / n_chips \
+            + kv_bytes / n_chips
+    else:  # decode
+        par_bytes = n_params * b_par
+        if cfg.family == "ssm":
+            s = cfg.ssm
+            cache = B * L * (s.d_inner * s.state_dim * 4
+                             + s.conv_width * s.d_inner * b_par)
+            cache_dev = cache / n_chips          # inner dim model-sharded
+        elif cfg.family == "hybrid":
+            w = cfg.hybrid.lru_width or d
+            eff = min(ctx, cfg.hybrid.attn_window)
+            n_attn = cfg.n_layers * sum(
+                1 for p in cfg.hybrid.pattern if p == "attn") \
+                / len(cfg.hybrid.pattern)
+            cache = B * (cfg.n_layers * w * 4
+                         + n_attn * 2 * eff * cfg.n_kv_heads * hd * b_par)
+            cache_dev = cache / max(data_shards, 1)   # kv replicated on tp
+        else:
+            eff = min(ctx, win) if win else ctx
+            kv_l = L if cfg.family != "encdec" else cfg.encdec.n_dec_layers
+            cache = B * kv_l * 2 * eff * cfg.n_kv_heads * hd * b_par
+            if cfg.family == "encdec":
+                cache += B * cfg.encdec.n_dec_layers * 2 \
+                    * cfg.encdec.n_frames * cfg.n_kv_heads * hd * b_par
+            # kv heads < model axis -> cache replicated across tp shards
+            cache_dev = cache / max(data_shards, 1)
+        head_bytes = T * cfg.vocab_size * 4.0
+        per_dev = par_bytes / n_chips + cache_dev + head_bytes / n_chips
+
+    return {"flops_total": flops, "flops_per_device": flops / n_chips,
+            "bytes_per_device": per_dev,
+            "breakdown": {"matmul_flops": mm, "attn_flops": attn_fl,
+                          "recurrence_flops": rec_fl,
+                          "head_flops": head_fl}}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device flops (analytic model)
+    hbm_bytes: float             # per-device HBM bytes (analytic model)
+    collective_wire_bytes: float # trip-corrected HLO parse
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float           # 6*N_active*D useful flops per device
+    useful_ratio: float
+    hlo_flops: float = 0.0       # raw cost_analysis (while bodies once)
+    hlo_bytes: float = 0.0
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def derive(cost: dict, coll: CollectiveStats, *, n_chips: int,
+           model_flops_total: float, analytic: Optional[dict] = None
+           ) -> Roofline:
+    hlo_flops = float(cost.get("flops", 0.0) or 0.0)
+    hlo_bytes = float(cost.get("bytes accessed", 0.0) or 0.0)
+    if analytic is not None:
+        flops = analytic["flops_per_device"]
+        hbm = analytic["bytes_per_device"]
+    else:
+        flops, hbm = hlo_flops, hlo_bytes
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_x = coll.wire_bytes / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_total / n_chips
+    return Roofline(flops=flops, hbm_bytes=hbm,
+                    collective_wire_bytes=coll.wire_bytes,
+                    t_compute=t_c, t_memory=t_m, t_collective=t_x,
+                    bottleneck=bottleneck, model_flops=mf,
+                    useful_ratio=(mf / flops) if flops else 0.0,
+                    hlo_flops=hlo_flops, hlo_bytes=hlo_bytes)
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful-work model: 6*N_active*D train, 2*N_active*D inference."""
+    n = cfg.n_active_params()
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens

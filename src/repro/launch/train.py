@@ -1,0 +1,135 @@
+"""End-to-end training driver.
+
+Two modes:
+  * ``--mode pod``  — the production-style LM trainer: builds the mesh that
+    fits the available devices, shards params/optimizer with the logical
+    rules, and runs real steps on synthetic token data (CPU: reduced
+    configs; TPU: full configs).
+  * ``--mode fl``   — the paper's federated simulation (train/fl_loop.py)
+    with AnycostFL or any baseline.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --mode fl --method anycostfl \
+      --rounds 40 --devices 12
+  PYTHONPATH=src python -m repro.launch.train --mode pod --arch qwen2-7b \
+      --reduced --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding as shd
+from repro.configs import get_config, TRAIN_4K
+from repro.configs.base import InputShape
+from repro.data.synthetic import make_token_dataset
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_train_step, param_shardings, \
+    opt_state_shardings, batch_shardings, input_specs
+from repro.models.registry import build_model
+from repro.train.checkpoint import save_checkpoint
+from repro.train.optimizer import adamw
+
+
+def run_pod(args):
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    opt = adamw(args.lr, warmup=10)
+    mesh = make_host_mesh()
+    shape = InputShape("cli", args.seq_len, args.batch, "train")
+    rng = np.random.default_rng(args.seed)
+    docs = make_token_dataset(rng, max(args.batch * 4, 16), args.seq_len,
+                              cfg.vocab_size)
+
+    with shd.use_sharding(mesh):
+        params = model.init(jax.random.PRNGKey(args.seed))
+        opt_state = opt.init(params)
+        step = make_train_step(model, opt, remat=args.remat)
+        with mesh:
+            jstep = jax.jit(step)
+            losses = []
+            t0 = time.time()
+            for i in range(args.steps):
+                idx = rng.integers(0, docs.shape[0], args.batch)
+                batch = {"tokens": jnp.asarray(docs[idx])}
+                extras = _modality_extras(cfg, args.batch, args.seq_len)
+                batch.update(extras)
+                params, opt_state, loss = jstep(params, opt_state, batch)
+                losses.append(float(loss))
+                if i % max(args.steps // 10, 1) == 0:
+                    print(f"step {i:4d} loss {float(loss):.4f} "
+                          f"({time.time() - t0:.1f}s)")
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params, step=args.steps)
+        print(f"checkpoint -> {args.checkpoint}")
+    return losses
+
+
+def _modality_extras(cfg, batch, seq_len):
+    key = jax.random.PRNGKey(7)
+    if cfg.family == "vlm":
+        v = cfg.vlm
+        n_p = min(v.n_patches, seq_len)
+        return {"patch_embeds": jax.random.normal(
+            key, (batch, n_p, v.patch_embed_dim), cfg.param_dtype)}
+    if cfg.family == "encdec":
+        e = cfg.encdec
+        return {"frames": jax.random.normal(
+            key, (batch, e.n_frames, cfg.d_model), cfg.param_dtype)}
+    return {}
+
+
+def run_fl(args):
+    from repro.sysmodel.population import FleetConfig
+    from repro.train.fl_loop import run_fl as fl, FLRunConfig
+    run_cfg = FLRunConfig(
+        arch=args.arch if args.arch.endswith(("cnn", "cifar"))
+        else "fmnist-cnn",
+        method=args.method, rounds=args.rounds, lr=args.lr,
+        seed=args.seed, iid=not args.non_iid, n_train=args.n_train,
+        n_test=args.n_test, eval_every=args.eval_every)
+    fleet = FleetConfig(n_devices=args.devices)
+    hist = fl(run_cfg, fleet, verbose=True)
+    print(json.dumps({"method": args.method, "best_acc": hist.best_acc,
+                      "rows": hist.to_rows()[-1]}, indent=1))
+    return hist
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="fl", choices=["fl", "pod"])
+    ap.add_argument("--arch", default="fmnist-cnn")
+    ap.add_argument("--method", default="anycostfl")
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--devices", type=int, default=12)
+    ap.add_argument("--non-iid", action="store_true")
+    ap.add_argument("--n-train", type=int, default=1536)
+    ap.add_argument("--n-test", type=int, default=384)
+    ap.add_argument("--eval-every", type=int, default=5)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+    if args.mode == "pod":
+        if args.lr > 0.01:
+            args.lr = 3e-3
+        run_pod(args)
+    else:
+        run_fl(args)
+
+
+if __name__ == "__main__":
+    main()

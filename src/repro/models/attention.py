@@ -1,0 +1,229 @@
+"""Attention: GQA/MQA/MHA with causal + sliding-window masks.
+
+Three execution paths:
+
+* ``attention_dense`` — materialized scores; used for short sequences
+  (smoke tests, the paper's own small models).
+* ``attention_blockwise`` — flash-style two-level ``lax.scan`` with online
+  softmax; O(block²) live memory, used for the 32k/500k shapes. The baseline
+  variant iterates the full block grid with masking; the ``causal_skip``
+  variant (a §Perf hillclimb) only visits lower-triangular block pairs.
+* ``attention_decode`` — one query token against a KV cache.
+
+All paths share the same math; tests assert blockwise == dense to 1e-5.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import lc
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, *, qkv_bias: bool = False,
+                   dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.init_linear(ks[0], d_model, n_heads * head_dim,
+                            bias=qkv_bias, dtype=dtype, axes=("fsdp", "tp")),
+        "wk": L.init_linear(ks[1], d_model, n_kv_heads * head_dim,
+                            bias=qkv_bias, dtype=dtype, axes=("fsdp", "tp")),
+        "wv": L.init_linear(ks[2], d_model, n_kv_heads * head_dim,
+                            bias=qkv_bias, dtype=dtype, axes=("fsdp", "tp")),
+        "wo": L.init_linear(ks[3], n_heads * head_dim, d_model,
+                            bias=False, dtype=dtype, axes=("tp", "fsdp")),
+    }
+
+
+def qkv(p, x, positions, *, n_heads, n_kv_heads, head_dim, rope_theta,
+        use_rope=True):
+    B, S, _ = x.shape
+    q = L.linear(p["wq"], x).reshape(B, S, n_heads, head_dim)
+    k = L.linear(p["wk"], x).reshape(B, S, n_kv_heads, head_dim)
+    v = L.linear(p["wv"], x).reshape(B, S, n_kv_heads, head_dim)
+    if use_rope:
+        q = L.apply_rope(q, positions, rope_theta)
+        k = L.apply_rope(k, positions, rope_theta)
+    q = lc(q, ("batch", "seq", "heads", "head_dim"))
+    k = lc(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = lc(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def _group(q, n_kv_heads):
+    """(B,S,H,hd) -> (B,S,Hkv,G,hd)."""
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, n_kv_heads, H // n_kv_heads, hd)
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: Optional[int]):
+    """True where attention is allowed. q_pos:(Sq,), k_pos:(Sk,)."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def attention_dense(q, k, v, q_pos, k_pos, *, causal=True,
+                    window: Optional[int] = None):
+    """q:(B,Sq,H,hd) k/v:(B,Sk,Hkv,hd) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    n_kv = k.shape[2]
+    qg = _group(q, n_kv)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    m = _mask(q_pos, k_pos, causal=causal, window=window)
+    logits = jnp.where(m[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+class _Running(NamedTuple):
+    out: jax.Array      # (B,Hkv,G,blk_q,hd) f32, un-normalized
+    row_max: jax.Array  # (B,Hkv,G,blk_q)
+    denom: jax.Array    # (B,Hkv,G,blk_q)
+
+
+def attention_blockwise(q, k, v, q_pos, k_pos, *, causal=True,
+                        window: Optional[int] = None,
+                        block_q: int = 512, block_kv: int = 512,
+                        causal_skip: bool = False):
+    """Flash-style attention in pure JAX. Shapes as attention_dense.
+
+    causal_skip=True visits only the (i, j<=i) block pairs (static lower-
+    triangular enumeration) instead of the full grid — ~2x fewer attention
+    FLOPs for causal masks; requires causal=True, Sq == Sk and equal blocks.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    n_kv = k.shape[2]
+    G = H // n_kv
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Sk)
+    assert Sq % block_q == 0 and Sk % block_kv == 0, (Sq, Sk, block_q, block_kv)
+    nq, nk = Sq // block_q, Sk // block_kv
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    qg = _group(q, n_kv)                                   # (B,Sq,Hkv,G,hd)
+    qb = qg.reshape(B, nq, block_q, n_kv, G, hd)
+    kb = k.reshape(B, nk, block_kv, n_kv, hd)
+    vb = v.reshape(B, nk, block_kv, n_kv, hd)
+    qpb = q_pos.reshape(nq, block_q)
+    kpb = k_pos.reshape(nk, block_kv)
+
+    def kv_step(acc: _Running, inputs, qi_blk, qp_blk):
+        kj, vj, kp = inputs                                # blocks
+        logits = jnp.einsum("bqkgh,bskh->bkgqs",
+                            qi_blk.astype(jnp.float32),
+                            kj.astype(jnp.float32)) * scale
+        m = _mask(qp_blk, kp, causal=causal, window=window)
+        logits = jnp.where(m[None, None, None], logits, NEG_INF)
+        new_max = jnp.maximum(acc.row_max, logits.max(-1))
+        correction = jnp.exp(acc.row_max - new_max)
+        p = jnp.exp(logits - new_max[..., None])
+        denom = acc.denom * correction + p.sum(-1)
+        pv = jnp.einsum("bkgqs,bskh->bkgqh", p, vj.astype(jnp.float32))
+        out = acc.out * correction[..., None] + pv
+        return _Running(out, new_max, denom), None
+
+    def q_step(_, qi):
+        qi_blk, qp_blk = qi                                # (B,blk_q,Hkv,G,hd)
+        init = _Running(
+            jnp.zeros((B, n_kv, G, block_q, hd), jnp.float32),
+            jnp.full((B, n_kv, G, block_q), NEG_INF, jnp.float32),
+            jnp.zeros((B, n_kv, G, block_q), jnp.float32))
+        acc, _ = jax.lax.scan(
+            functools.partial(kv_step, qi_blk=qi_blk, qp_blk=qp_blk),
+            init, (kb.swapaxes(0, 1), vb.swapaxes(0, 1), kpb))
+        out = acc.out / jnp.maximum(acc.denom, 1e-30)[..., None]
+        return None, out                                   # (B,Hkv,G,blkq,hd)
+
+    if not causal_skip:
+        _, outs = jax.lax.scan(q_step, None, (qb.swapaxes(0, 1), qpb))
+        # outs: (nq, B, Hkv, G, blk_q, hd) -> (B, nq, blk_q, Hkv, G, hd)
+        out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, n_kv, G, hd)
+        return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+    # causal block skipping: enumerate lower-triangular (i, j) pairs and
+    # accumulate per-q-block running softmax state with scatter updates.
+    assert causal and Sq == Sk and block_q == block_kv and nq == nk
+    pairs_i, pairs_j = [], []
+    for i in range(nq):
+        for j in range(i + 1):
+            pairs_i.append(i)
+            pairs_j.append(j)
+    pi = jnp.asarray(pairs_i, jnp.int32)
+    pj = jnp.asarray(pairs_j, jnp.int32)
+
+    def pair_step(acc: _Running, idx):
+        i, j = idx
+        qi_blk = jax.lax.dynamic_index_in_dim(qb, i, 1, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+        qp = jax.lax.dynamic_index_in_dim(qpb, i, 0, keepdims=False)
+        kp = jax.lax.dynamic_index_in_dim(kpb, j, 0, keepdims=False)
+        logits = jnp.einsum("bqkgh,bskh->bkgqs", qi_blk.astype(jnp.float32),
+                            kj.astype(jnp.float32)) * scale
+        m = _mask(qp, kp, causal=True, window=window)
+        logits = jnp.where(m[None, None, None], logits, NEG_INF)
+        o_i = jax.lax.dynamic_index_in_dim(acc.out, i, 0, keepdims=False)
+        mx_i = jax.lax.dynamic_index_in_dim(acc.row_max, i, 0, keepdims=False)
+        dn_i = jax.lax.dynamic_index_in_dim(acc.denom, i, 0, keepdims=False)
+        new_max = jnp.maximum(mx_i, logits.max(-1))
+        corr = jnp.exp(mx_i - new_max)
+        p = jnp.exp(logits - new_max[..., None])
+        dn = dn_i * corr + p.sum(-1)
+        pv = jnp.einsum("bkgqs,bskh->bkgqh", p, vj.astype(jnp.float32))
+        o = o_i * corr[..., None] + pv
+        return _Running(
+            jax.lax.dynamic_update_index_in_dim(acc.out, o, i, 0),
+            jax.lax.dynamic_update_index_in_dim(acc.row_max, new_max, i, 0),
+            jax.lax.dynamic_update_index_in_dim(acc.denom, dn, i, 0)), None
+
+    init = _Running(
+        jnp.zeros((nq, B, n_kv, G, block_q, hd), jnp.float32),
+        jnp.full((nq, B, n_kv, G, block_q), NEG_INF, jnp.float32),
+        jnp.zeros((nq, B, n_kv, G, block_q), jnp.float32))
+    acc, _ = jax.lax.scan(pair_step, init, (pi, pj))
+    out = acc.out / jnp.maximum(acc.denom, 1e-30)[..., None]
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, n_kv, G, hd)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention_decode(q, k_cache, v_cache, q_pos, k_pos, *,
+                     window: Optional[int] = None):
+    """One-token decode. q:(B,1,H,hd), caches:(B,T,Hkv,hd)."""
+    B, _, H, hd = q.shape
+    n_kv = k_cache.shape[2]
+    qg = _group(q, n_kv)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    valid = (k_pos[None, :] <= q_pos[:, None]) & (k_pos[None, :] >= 0)
+    if window is not None:
+        valid &= k_pos[None, :] > q_pos[:, None] - window
+    logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def attend(q, k, v, q_pos, k_pos, *, causal=True, window=None,
+           blockwise_threshold: int = 2048, causal_skip: bool = False):
+    """Dispatch dense vs blockwise on sequence length."""
+    if q.shape[1] <= blockwise_threshold and k.shape[1] <= blockwise_threshold:
+        return attention_dense(q, k, v, q_pos, k_pos, causal=causal,
+                               window=window)
+    return attention_blockwise(q, k, v, q_pos, k_pos, causal=causal,
+                               window=window, causal_skip=causal_skip)

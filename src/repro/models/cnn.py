@@ -1,0 +1,116 @@
+"""The paper's own experiment models: FedAvg 2-conv CNN (FMNIST) and VGG-9
+(CIFAR-10). These are the models EMS/FGC/AIO operate on in the FL simulation
+— conv layers expose the output-channel structure that channel sorting and
+kernel-wise sparsification act on (§III-B/C).
+
+Layout: NHWC images, conv weights (kh, kw, c_in, c_out).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+def init_conv(key, kh, kw, c_in, c_out, dtype=jnp.float32):
+    k1, _ = jax.random.split(key)
+    fan_in = kh * kw * c_in
+    return {
+        "w": L.param(k1, (kh, kw, c_in, c_out), (None, None, "fsdp", "tp"),
+                     dtype, "normal", scale=jnp.sqrt(2.0).item()),
+        "b": L.param(k1, (c_out,), ("tp",), dtype, "zeros"),
+    }
+
+
+def conv2d(p, x, *, stride=1, padding="SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"].astype(x.dtype)
+
+
+def maxpool(x, k=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+# ------------------------------------------------------------- FMNIST CNN
+
+def init_fmnist_cnn(key, cfg: ArchConfig):
+    c = cfg.d_model  # 32
+    ks = jax.random.split(key, 4)
+    return {
+        "conv1": init_conv(ks[0], 5, 5, 1, c),
+        "conv2": init_conv(ks[1], 5, 5, c, 2 * c),
+        "dense1": L.init_linear(ks[2], 7 * 7 * 2 * c, cfg.d_ff,
+                                bias=True, axes=("fsdp", "tp")),
+        "dense2": L.init_linear(ks[3], cfg.d_ff, cfg.vocab_size,
+                                bias=True, axes=("tp", "classes")),
+    }
+
+
+def apply_fmnist_cnn(params, images):
+    """images: (B, 28, 28, 1) -> logits (B, 10)."""
+    x = jax.nn.relu(conv2d(params["conv1"], images))
+    x = maxpool(x)
+    x = jax.nn.relu(conv2d(params["conv2"], x))
+    x = maxpool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(L.linear(params["dense1"], x))
+    return L.linear(params["dense2"], x)
+
+
+# ----------------------------------------------------------------- VGG-9
+
+def init_vgg9(key, cfg: ArchConfig):
+    c = cfg.d_model  # 64
+    ks = jax.random.split(key, 9)
+    return {
+        "conv1": init_conv(ks[0], 3, 3, 3, c),
+        "conv2": init_conv(ks[1], 3, 3, c, c),
+        "conv3": init_conv(ks[2], 3, 3, c, 2 * c),
+        "conv4": init_conv(ks[3], 3, 3, 2 * c, 2 * c),
+        "conv5": init_conv(ks[4], 3, 3, 2 * c, 4 * c),
+        "conv6": init_conv(ks[5], 3, 3, 4 * c, 4 * c),
+        "dense1": L.init_linear(ks[6], 4 * 4 * 4 * c, cfg.d_ff, bias=True,
+                                axes=("fsdp", "tp")),
+        "dense2": L.init_linear(ks[7], cfg.d_ff, cfg.d_ff, bias=True,
+                                axes=("fsdp", "tp")),
+        "dense3": L.init_linear(ks[8], cfg.d_ff, cfg.vocab_size, bias=True,
+                                axes=("tp", "classes")),
+    }
+
+
+def apply_vgg9(params, images):
+    """images: (B, 32, 32, 3) -> logits (B, 10)."""
+    x = jax.nn.relu(conv2d(params["conv1"], images))
+    x = jax.nn.relu(conv2d(params["conv2"], x))
+    x = maxpool(x)
+    x = jax.nn.relu(conv2d(params["conv3"], x))
+    x = jax.nn.relu(conv2d(params["conv4"], x))
+    x = maxpool(x)
+    x = jax.nn.relu(conv2d(params["conv5"], x))
+    x = jax.nn.relu(conv2d(params["conv6"], x))
+    x = maxpool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(L.linear(params["dense1"], x))
+    x = jax.nn.relu(L.linear(params["dense2"], x))
+    return L.linear(params["dense3"], x)
+
+
+def init_cnn(key, cfg: ArchConfig):
+    if cfg.name.startswith("fmnist"):
+        return init_fmnist_cnn(key, cfg)
+    return init_vgg9(key, cfg)
+
+
+def apply_cnn(params, images, cfg: ArchConfig):
+    if "conv3" in params:
+        return apply_vgg9(params, images)
+    return apply_fmnist_cnn(params, images)
+
+
+def image_shape(cfg: ArchConfig):
+    return (28, 28, 1) if cfg.name.startswith("fmnist") else (32, 32, 3)

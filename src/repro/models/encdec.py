@@ -1,0 +1,236 @@
+"""Encoder-decoder backbone (SeamlessM4T v2 large language backbone).
+
+The modality frontend (mel-spectrogram + conv feature extractor) is a STUB
+per the assignment: callers provide precomputed frame embeddings
+``frames: (B, n_frames, d_model)``. The backbone = bidirectional encoder
+over frames + causal decoder with cross-attention, both scanned stacks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.sharding import lc
+
+
+def init_enc_block(key, cfg: ArchConfig):
+    from repro.models.attention import init_attention
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 4)
+    return {
+        "ln_attn": L.init_norm(ks[0], cfg.d_model, kind=cfg.norm, dtype=dt),
+        "attn": init_attention(ks[1], cfg.d_model, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.resolved_head_dim,
+                               qkv_bias=cfg.qkv_bias, dtype=dt),
+        "ln_mlp": L.init_norm(ks[2], cfg.d_model, kind=cfg.norm, dtype=dt),
+        "mlp": L.init_mlp(ks[3], cfg.d_model, cfg.d_ff,
+                          activation=cfg.activation, dtype=dt),
+    }
+
+
+def apply_enc_block(p, x, positions, cfg: ArchConfig):
+    from repro.models.attention import attend, qkv
+    h = L.norm(p["ln_attn"], x, kind=cfg.norm)
+    q, k, v = qkv(p["attn"], h, positions, n_heads=cfg.n_heads,
+                  n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                  rope_theta=cfg.rope_theta)
+    o = attend(q, k, v, positions[0], positions[0], causal=False)
+    B, S = x.shape[:2]
+    x = lc(x + L.linear(p["attn"]["wo"], o.reshape(B, S, -1)),
+           ("batch", "seq", "embed"))
+    h = L.norm(p["ln_mlp"], x, kind=cfg.norm)
+    return lc(x + L.mlp(p["mlp"], h, activation=cfg.activation),
+              ("batch", "seq", "embed"))
+
+
+def init_dec_block(key, cfg: ArchConfig):
+    from repro.models.attention import init_attention
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 6)
+    return {
+        "ln_self": L.init_norm(ks[0], cfg.d_model, kind=cfg.norm, dtype=dt),
+        "self_attn": init_attention(ks[1], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.resolved_head_dim,
+                                    qkv_bias=cfg.qkv_bias, dtype=dt),
+        "ln_cross": L.init_norm(ks[2], cfg.d_model, kind=cfg.norm, dtype=dt),
+        "cross_attn": init_attention(ks[3], cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.resolved_head_dim,
+                                     qkv_bias=cfg.qkv_bias, dtype=dt),
+        "ln_mlp": L.init_norm(ks[4], cfg.d_model, kind=cfg.norm, dtype=dt),
+        "mlp": L.init_mlp(ks[5], cfg.d_model, cfg.d_ff,
+                          activation=cfg.activation, dtype=dt),
+    }
+
+
+def _cross_kv(p, memory, cfg: ArchConfig):
+    """Project encoder memory to K/V. memory:(B,F,D)."""
+    B, F, _ = memory.shape
+    hd = cfg.resolved_head_dim
+    k = L.linear(p["wk"], memory).reshape(B, F, cfg.n_kv_heads, hd)
+    v = L.linear(p["wv"], memory).reshape(B, F, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def apply_dec_block(p, x, positions, memory, cfg: ArchConfig):
+    from repro.models.attention import attend, qkv
+    B, S = x.shape[:2]
+    hd = cfg.resolved_head_dim
+    # causal self attention
+    h = L.norm(p["ln_self"], x, kind=cfg.norm)
+    q, k, v = qkv(p["self_attn"], h, positions, n_heads=cfg.n_heads,
+                  n_kv_heads=cfg.n_kv_heads, head_dim=hd,
+                  rope_theta=cfg.rope_theta)
+    o = attend(q, k, v, positions[0], positions[0], causal=True)
+    x = lc(x + L.linear(p["self_attn"]["wo"], o.reshape(B, S, -1)),
+           ("batch", "seq", "embed"))
+    # cross attention (no rope on memory side)
+    h = L.norm(p["ln_cross"], x, kind=cfg.norm)
+    qc = L.linear(p["cross_attn"]["wq"], h).reshape(B, S, cfg.n_heads, hd)
+    kc, vc = _cross_kv(p["cross_attn"], memory, cfg)
+    F = memory.shape[1]
+    fpos = jnp.arange(F, dtype=jnp.int32)
+    o = attend(qc, kc, vc, positions[0], fpos, causal=False)
+    x = lc(x + L.linear(p["cross_attn"]["wo"], o.reshape(B, S, -1)),
+           ("batch", "seq", "embed"))
+    h = L.norm(p["ln_mlp"], x, kind=cfg.norm)
+    return lc(x + L.mlp(p["mlp"], h, activation=cfg.activation),
+              ("batch", "seq", "embed"))
+
+
+def init_encdec(key, cfg: ArchConfig):
+    e = cfg.encdec
+    ks = jax.random.split(key, 6)
+    return {
+        "frontend_proj": L.init_linear(ks[0], cfg.d_model, cfg.d_model,
+                                       dtype=cfg.param_dtype,
+                                       axes=("fsdp", "tp")),
+        "embed": L.init_embedding(ks[1], cfg.vocab_size, cfg.d_model,
+                                  dtype=cfg.param_dtype),
+        "enc": T.init_stack(ks[2], e.n_enc_layers,
+                            functools.partial(init_enc_block, cfg=cfg)),
+        "ln_enc": L.init_norm(ks[2], cfg.d_model, kind=cfg.norm,
+                              dtype=cfg.param_dtype),
+        "dec": T.init_stack(ks[3], e.n_dec_layers,
+                            functools.partial(init_dec_block, cfg=cfg)),
+        "ln_dec": L.init_norm(ks[4], cfg.d_model, kind=cfg.norm,
+                              dtype=cfg.param_dtype),
+        "unembed": L.init_linear(ks[5], cfg.d_model, cfg.vocab_size,
+                                 dtype=cfg.param_dtype, axes=("fsdp", "tp")),
+    }
+
+
+def encode(params, frames, cfg: ArchConfig, *, remat: str = "full"):
+    """frames:(B,F,D) -> memory (B,F,D)."""
+    B, F, _ = frames.shape
+    x = L.linear(params["frontend_proj"], frames.astype(cfg.param_dtype))
+    # frames already carry frontend positional info; add rope in attention
+    pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+
+    def block(p, x):
+        return apply_enc_block(p, x, pos, cfg), None
+
+    x, _ = T.scan_blocks(block, params["enc"], x, remat=remat)
+    return L.norm(params["ln_enc"], x, kind=cfg.norm)
+
+
+def forward_encdec(params, frames, tokens, cfg: ArchConfig, *,
+                   remat: str = "full"):
+    """(frames (B,F,D), tokens (B,S)) -> logits (B,S,V)."""
+    memory = encode(params, frames, cfg, remat=remat)
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens).astype(cfg.param_dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def block(p, x):
+        return apply_dec_block(p, x, pos, memory, cfg), None
+
+    x, _ = T.scan_blocks(block, params["dec"], x, remat=remat)
+    x = L.norm(params["ln_dec"], x, kind=cfg.norm)
+    return L.head_logits(params["unembed"], x, bf16=cfg.logits_bf16)
+
+
+def init_encdec_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    """Decoder self-attn cache + precomputed cross-attention K/V."""
+    e = cfg.encdec
+    hd = cfg.resolved_head_dim
+    self_cache = {
+        "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd),
+                       cfg.param_dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd),
+                       cfg.param_dtype),
+        "k_pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+    cross_kv = {
+        "k": jnp.zeros((batch, e.n_frames, cfg.n_kv_heads, hd),
+                       cfg.param_dtype),
+        "v": jnp.zeros((batch, e.n_frames, cfg.n_kv_heads, hd),
+                       cfg.param_dtype),
+    }
+    per_layer = {"self": self_cache, "cross": cross_kv}
+    cache = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (e.n_dec_layers,) + x.shape).copy(),
+        per_layer)
+    return {"dec": cache, "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill_encdec_cache(params, frames, cfg: ArchConfig, batch: int,
+                         cache_len: int):
+    """Run the encoder and fill the cross-attention K/V of every layer."""
+    memory = encode(params, frames, cfg, remat="none")
+    cache = init_encdec_cache(cfg, batch, cache_len)
+
+    def one_layer(p):
+        k, v = _cross_kv(p["cross_attn"], memory, cfg)
+        return {"k": k, "v": v}
+
+    cache["dec"]["cross"] = jax.vmap(one_layer)(
+        jax.tree.map(lambda x: x, params["dec"]))
+    return cache
+
+
+def decode_encdec(params, cache, tokens, cfg: ArchConfig):
+    """One decode step against the cached encoder memory."""
+    from repro.models.attention import attention_decode
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    hd = cfg.resolved_head_dim
+    x = L.embed(params["embed"], tokens).astype(cfg.param_dtype)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    def block_fn(carry, per_layer):
+        from repro.models.attention import qkv
+        p, c = per_layer
+        x = carry
+        h = L.norm(p["ln_self"], x, kind=cfg.norm)
+        q, k, v = qkv(p["self_attn"], h, positions, n_heads=cfg.n_heads,
+                      n_kv_heads=cfg.n_kv_heads, head_dim=hd,
+                      rope_theta=cfg.rope_theta)
+        Tlen = c["self"]["k"].shape[1]
+        slot = jnp.minimum(pos, Tlen - 1)
+        kc = jax.lax.dynamic_update_slice_in_dim(c["self"]["k"], k, slot, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(c["self"]["v"], v, slot, 1)
+        kp = jax.lax.dynamic_update_slice_in_dim(
+            c["self"]["k_pos"], jnp.full((1,), pos, jnp.int32), slot, 0)
+        o = attention_decode(q, kc, vc, positions[0], kp)
+        x = x + L.linear(p["self_attn"]["wo"], o.reshape(B, 1, -1))
+        h = L.norm(p["ln_cross"], x, kind=cfg.norm)
+        qc = L.linear(p["cross_attn"]["wq"], h).reshape(B, 1, cfg.n_heads, hd)
+        F = c["cross"]["k"].shape[1]
+        fpos = jnp.arange(F, dtype=jnp.int32)
+        o = attention_decode(qc, c["cross"]["k"], c["cross"]["v"],
+                             jnp.full((1,), F, jnp.int32), fpos)
+        x = x + L.linear(p["cross_attn"]["wo"], o.reshape(B, 1, -1))
+        h = L.norm(p["ln_mlp"], x, kind=cfg.norm)
+        x = x + L.mlp(p["mlp"], h, activation=cfg.activation)
+        return x, {"self": {"k": kc, "v": vc, "k_pos": kp},
+                   "cross": c["cross"]}
+
+    x, new_dec = jax.lax.scan(block_fn, x, (params["dec"], cache["dec"]))
+    x = L.norm(params["ln_dec"], x, kind=cfg.norm)
+    logits = L.head_logits(params["unembed"], x, bf16=cfg.logits_bf16)
+    return logits, {"dec": new_dec, "pos": pos + 1}

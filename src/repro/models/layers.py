@@ -1,0 +1,234 @@
+"""Core neural-net building blocks, pure JAX (init/apply function pairs).
+
+Parameters are nested dicts of arrays. Every parameter is created through
+``param(...)`` which records its *logical axes*; ``logical_axes(init_fn)``
+re-runs the same init code in "axes mode" to produce the mirrored pytree of
+axis tuples used by the launcher for sharding — one code path, no dual
+maintenance.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class LogicalAxes:
+    """Pytree *leaf* wrapping a tuple of logical axis names (one per dim)."""
+
+    __slots__ = ("names",)
+
+    def __init__(self, names):
+        self.names = tuple(names)
+
+    def prepend(self, name: str) -> "LogicalAxes":
+        return LogicalAxes((name,) + self.names)
+
+    def __repr__(self):
+        return f"Axes{self.names}"
+
+    def __eq__(self, other):
+        return isinstance(other, LogicalAxes) and self.names == other.names
+
+    def __hash__(self):
+        return hash(self.names)
+
+
+class _Mode(threading.local):
+    def __init__(self):
+        self.axes_mode = False
+        self.shape_mode = False
+
+
+_MODE = _Mode()
+
+
+@contextlib.contextmanager
+def _axes_mode():
+    prev = _MODE.axes_mode
+    _MODE.axes_mode = True
+    try:
+        yield
+    finally:
+        _MODE.axes_mode = prev
+
+
+@contextlib.contextmanager
+def _shape_mode():
+    prev = _MODE.shape_mode
+    _MODE.shape_mode = True
+    try:
+        yield
+    finally:
+        _MODE.shape_mode = prev
+
+
+def param(key, shape: Sequence[int], axes: Sequence[Optional[str]],
+          dtype=jnp.float32, init: str = "normal", scale: float = 1.0):
+    """Create one parameter leaf (or its axes tuple / ShapeDtypeStruct)."""
+    assert len(shape) == len(axes), (shape, axes)
+    if _MODE.axes_mode:
+        return LogicalAxes(axes)
+    if _MODE.shape_mode:
+        return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+    shape = tuple(shape)
+    if init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if init == "ones":
+        return jnp.ones(shape, dtype)
+    if init == "normal":
+        fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else max(shape[0], 1)
+        std = scale / np.sqrt(fan_in)
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+    if init == "embed":
+        return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    if init == "uniform":
+        return (jax.random.uniform(key, shape, jnp.float32, -scale, scale)
+                ).astype(dtype)
+    raise ValueError(init)
+
+
+def logical_axes(init_fn: Callable, *args, **kwargs):
+    """Pytree of logical-axes tuples matching ``init_fn(key, ...)``'s output."""
+    with _axes_mode():
+        return init_fn(jax.random.PRNGKey(0), *args, **kwargs)
+
+
+def abstract_params(init_fn: Callable, *args, **kwargs):
+    """Pytree of ShapeDtypeStruct matching ``init_fn(key, ...)``'s output
+    — no allocation; used by the multi-pod dry-run."""
+    with _shape_mode():
+        return init_fn(jax.random.PRNGKey(0), *args, **kwargs)
+
+
+# ---------------------------------------------------------------- primitives
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.float32, axes=("fsdp", "tp"), scale: float = 1.0):
+    k1, k2 = jax.random.split(key)
+    p = {"w": param(k1, (d_in, d_out), axes, dtype, "normal", scale)}
+    if bias:
+        p["b"] = param(k2, (d_out,), (axes[1],), dtype, "zeros")
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_norm(key, d: int, *, kind: str = "rmsnorm", dtype=jnp.float32):
+    del key
+    p = {"scale": param(None, (d,), ("embed",), dtype, "ones")}
+    if kind == "layernorm":
+        p["bias"] = param(None, (d,), ("embed",), dtype, "zeros")
+    return p
+
+
+def norm(p, x, *, kind: str = "rmsnorm", eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    elif kind == "none":
+        y = xf
+    else:
+        raise ValueError(kind)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32):
+    # dedicated logical axes: the vocab-sharded gather aborts XLA's SPMD
+    # partitioner inside partial-manual shard_map regions, so the anycost
+    # grad-sync mode remaps these (vocab -> None) without touching the
+    # rest of the tp/fsdp params (launch/steps.rules_for).
+    return {"table": param(key, (vocab, d), ("vocab", "embed_fsdp"), dtype,
+                           "embed", scale=0.02)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x):
+    # logits in f32 for numerics
+    return x.astype(jnp.float32) @ p["table"].astype(jnp.float32).T
+
+
+def head_logits(p_linear, x, *, bf16: bool = False):
+    """Unembedding matmul. bf16=True computes the contraction in param
+    dtype and upcasts afterwards — halves the width of every collective the
+    partitioner attaches to the head (§Perf P2.1); logits are still f32."""
+    if bf16:
+        return linear(p_linear, x).astype(jnp.float32)
+    return linear(p_linear, x.astype(jnp.float32))
+
+
+# ----------------------------------------------------------------------- rope
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                  # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..,S,half)
+    cos = jnp.cos(angles)[..., :, None, :]                  # (..,S,1,half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------------------ mlp
+
+def init_mlp(key, d: int, d_ff: int, *, activation: str = "swiglu",
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": param(ks[0], (d, d_ff), ("fsdp", "tp"), dtype),
+            "w_up": param(ks[1], (d, d_ff), ("fsdp", "tp"), dtype),
+            "w_down": param(ks[2], (d_ff, d), ("tp", "fsdp"), dtype),
+        }
+    return {
+        "w_up": param(ks[0], (d, d_ff), ("fsdp", "tp"), dtype),
+        "w_down": param(ks[1], (d_ff, d), ("tp", "fsdp"), dtype),
+    }
+
+
+def _act(name: str, x):
+    if name in ("swiglu", "silu"):
+        return jax.nn.silu(x)
+    if name in ("geglu", "gelu"):
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)
+
+
+def mlp(p, x, *, activation: str = "swiglu"):
+    from repro.sharding import lc
+    if "w_gate" in p:
+        g = _act(activation, x @ p["w_gate"].astype(x.dtype))
+        h = g * (x @ p["w_up"].astype(x.dtype))
+    else:
+        h = _act(activation, x @ p["w_up"].astype(x.dtype))
+    h = lc(h, ("batch", "seq", "mlp_act"))
+    return h @ p["w_down"].astype(x.dtype)

@@ -1,0 +1,206 @@
+"""Mixture-of-Experts block: top-k router + capacity-based dispatch.
+
+Expert-parallel design for the production mesh: expert parameters carry the
+"experts" logical axis (-> mesh "model"); tokens are dispatched through a
+one-hot capacity tensor so the dispatch/combine einsums induce the
+all-to-all under GSPMD. Capacity is per (batch row, seq chunk) — the cumsum
+that assigns capacity slots never crosses the sharded batch dim, keeping the
+routing math fully data-parallel.
+
+The sequence is processed in chunks of ``MOE_CHUNK`` tokens via lax.scan so
+the (B, chunk, E, C) dispatch tensor stays small.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.sharding import lc
+
+MOE_CHUNK = 512
+
+
+def init_router(key, cfg: ArchConfig):
+    m = cfg.moe
+    return {"w": L.param(key, (cfg.d_model, m.n_experts),
+                         ("fsdp", "experts"), jnp.float32, "normal")}
+
+
+def init_experts(key, cfg: ArchConfig):
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.expert_d_ff, m.n_experts
+    ks = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    # expert_in / expert_ff are rule-dependent (launch/steps.rules_for):
+    # training maps expert_in -> "data" (ZeRO over the contraction dim,
+    # gathered at use); decode maps expert_ff -> "data" instead so the
+    # weights never move — only the tiny per-token outputs are psummed
+    # (§Perf P1.2).
+    return {
+        "w_gate": L.param(ks[0], (e, d, f),
+                          ("experts", "expert_in", "expert_ff"), dt),
+        "w_up": L.param(ks[1], (e, d, f),
+                        ("experts", "expert_in", "expert_ff"), dt),
+        "w_down": L.param(ks[2], (e, f, d),
+                          ("experts", "expert_ff", "expert_in"), dt),
+    }
+
+
+def init_block(key, cfg: ArchConfig):
+    from repro.models.attention import init_attention
+    dtype = cfg.param_dtype
+    ks = jax.random.split(key, 5)
+    return {
+        "ln_attn": L.init_norm(ks[0], cfg.d_model, kind=cfg.norm, dtype=dtype),
+        "attn": init_attention(ks[1], cfg.d_model, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.resolved_head_dim,
+                               qkv_bias=cfg.qkv_bias, dtype=dtype),
+        "ln_mlp": L.init_norm(ks[2], cfg.d_model, kind=cfg.norm, dtype=dtype),
+        "router": init_router(ks[3], cfg),
+        "experts": init_experts(ks[4], cfg),
+    }
+
+
+def _route(router, x, cfg: ArchConfig):
+    """x:(B,C,D) -> (weights (B,C,k), indices (B,C,k), router_probs (B,C,E))."""
+    m = cfg.moe
+    logits = x.astype(jnp.float32) @ router["w"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, m.top_k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    return top_w, top_idx, probs
+
+
+def moe_mlp(p, x, cfg: ArchConfig, *, activation: str = "swiglu"):
+    """Capacity-dispatch MoE ffn. x:(B,S,D) -> (B,S,D), aux load-balance loss.
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    chunk = min(MOE_CHUNK, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    E, K = m.n_experts, m.top_k
+    cap = max(int(m.capacity_factor * chunk * K / E), 1)
+
+    xc = x.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)  # (n,B,chunk,D)
+
+    def one_chunk(carry, xi):
+        top_w, top_idx, probs = _route(p["router"], xi, cfg)    # (B,c,K)
+        onehot = jax.nn.one_hot(top_idx, E, dtype=jnp.float32)  # (B,c,K,E)
+        # position of each (token, k) in its expert's capacity buffer:
+        # cumulative count of prior assignments to the same expert within
+        # this (batch row, chunk).
+        flat = onehot.reshape(B, chunk * K, E)
+        pos = jnp.cumsum(flat, axis=1) - flat                   # (B,cK,E)
+        pos = pos.reshape(B, chunk, K, E)
+        in_cap = (pos < cap)
+        slot = jax.nn.one_hot(jnp.sum(pos * onehot, -1).astype(jnp.int32),
+                              cap, dtype=jnp.float32)           # (B,c,K,C)
+        dispatch = (onehot * in_cap)[..., None] * slot[..., None, :]
+        dispatch = dispatch.sum(2)                              # (B,c,E,C)
+        combine = dispatch * (top_w[..., None, None] * onehot[..., None]
+                              ).sum(2)                          # (B,c,E,C)
+        dispatch = lc(dispatch, ("batch", "seq", "experts_act", "capacity"))
+        xin = jnp.einsum("bsec,bsd->becd", dispatch.astype(cfg.param_dtype),
+                         xi)                                    # (B,E,C,D)
+        xin = lc(xin, ("batch", "experts_act", "capacity", "embed"))
+        g = jnp.einsum("becd,edf->becf", xin,
+                       p["experts"]["w_gate"].astype(xin.dtype))
+        u = jnp.einsum("becd,edf->becf", xin,
+                       p["experts"]["w_up"].astype(xin.dtype))
+        h = L._act(activation, g) * u
+        h = lc(h, ("batch", "experts_act", "capacity", "tp"))
+        out = jnp.einsum("becf,efd->becd", h,
+                         p["experts"]["w_down"].astype(xin.dtype))
+        y = jnp.einsum("becd,bsec->bsd", out,
+                       combine.astype(xin.dtype))               # (B,c,D)
+        # Switch-style load-balance loss: E * sum_e (frac_tokens * frac_prob)
+        frac_tokens = onehot.mean((1, 2))                       # (B,E) mean over c,K
+        frac_prob = probs.mean(1)                               # (B,E)
+        aux = E * jnp.mean(jnp.sum(frac_tokens * frac_prob, -1))
+        return carry + aux, y
+
+    aux, ys = jax.lax.scan(one_chunk, jnp.zeros((), jnp.float32), xc)
+    y = ys.swapaxes(0, 1).reshape(B, S, D)
+    return y, aux / n_chunks
+
+
+def apply_block(p, x, positions, cfg: ArchConfig, *, causal_skip=False):
+    from repro.models.attention import attend, qkv
+    h = L.norm(p["ln_attn"], x, kind=cfg.norm)
+    q, k, v = qkv(p["attn"], h, positions, n_heads=cfg.n_heads,
+                  n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                  rope_theta=cfg.rope_theta)
+    o = attend(q, k, v, positions[0], positions[0], causal=True,
+               window=cfg.sliding_window, causal_skip=causal_skip)
+    B, S = x.shape[:2]
+    x = lc(x + L.linear(p["attn"]["wo"], o.reshape(B, S, -1)),
+           ("batch", "seq", "embed"))
+    h = L.norm(p["ln_mlp"], x, kind=cfg.norm)
+    y, _aux = moe_mlp(p, h, cfg, activation=cfg.activation)
+    return lc(x + y, ("batch", "seq", "embed"))
+
+
+def decode_block(p, x, cache, pos, cfg: ArchConfig):
+    """One-token decode: attention w/ cache + gather-based top-k experts."""
+    from repro.models.attention import attention_decode, qkv
+    h = L.norm(p["ln_attn"], x, kind=cfg.norm)
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k, v = qkv(p["attn"], h, positions, n_heads=cfg.n_heads,
+                  n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                  rope_theta=cfg.rope_theta)
+    Tlen = cache["k"].shape[1]
+    slot = pos % Tlen if cfg.sliding_window is not None \
+        else jnp.minimum(pos, Tlen - 1)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
+    k_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_pos"], jnp.full((1,), pos, jnp.int32), slot, 0)
+    k_cache = lc(k_cache, ("batch", "cache_seq", "kv_heads", "head_dim"))
+    v_cache = lc(v_cache, ("batch", "cache_seq", "kv_heads", "head_dim"))
+    o = attention_decode(q, k_cache, v_cache, positions[0], k_pos,
+                         window=cfg.sliding_window)
+    B = x.shape[0]
+    x = x + L.linear(p["attn"]["wo"], o.reshape(B, 1, -1))
+    h = L.norm(p["ln_mlp"], x, kind=cfg.norm)
+    # decode MoE via dispatch-einsum (§Perf iteration P1.1): gathering the
+    # top-k expert weights (jnp.take over the expert-sharded tensors) forced
+    # GSPMD to replicate ~1.6 GB of weights per layer per step (454 GB of
+    # all-reduce at decode_32k). The one-hot dispatch contraction keeps the
+    # expert dim sharded on `model`; only the (B, E, 1, D) token slots and
+    # the tiny per-token outputs move.
+    m = cfg.moe
+    top_w, top_idx, _ = _route(p["router"], h, cfg)     # (B,1,K)
+    if cfg.moe_decode == "gather":
+        # naive baseline: gather the top-k expert weights per token.
+        # GSPMD cannot keep the expert dim sharded through jnp.take and
+        # replicates the full expert tensors every step (§Perf P1 before).
+        hv = h[:, 0].astype(cfg.param_dtype)
+        wg = jnp.take(p["experts"]["w_gate"], top_idx[:, 0], axis=0)
+        wu = jnp.take(p["experts"]["w_up"], top_idx[:, 0], axis=0)
+        wd = jnp.take(p["experts"]["w_down"], top_idx[:, 0], axis=0)
+        g = jnp.einsum("bd,bkdf->bkf", hv, wg.astype(hv.dtype))
+        u = jnp.einsum("bd,bkdf->bkf", hv, wu.astype(hv.dtype))
+        act = L._act(cfg.activation, g) * u
+        y = jnp.einsum("bkf,bkfd->bkd", act, wd.astype(hv.dtype))
+        y = jnp.einsum("bkd,bk->bd", y, top_w[:, 0].astype(hv.dtype))
+        x = x + y[:, None]
+        return x, {"k": k_cache, "v": v_cache, "k_pos": k_pos}
+    onehot = jax.nn.one_hot(top_idx[:, 0], m.n_experts,
+                            dtype=jnp.float32)          # (B,K,E)
+    combine = (top_w[:, 0, :, None] * onehot).sum(1)    # (B,E)
+    dispatch = (onehot.sum(1) > 0).astype(cfg.param_dtype)
+    dispatch = lc(dispatch, ("batch", "experts_act"))
+    hv = h[:, 0].astype(cfg.param_dtype)                # (B,D)
+    xin = jnp.einsum("be,bd->ebd", dispatch, hv)        # (E,B,D)
+    xin = lc(xin, ("experts_act", "batch", "embed"))
+    g = jnp.einsum("ebd,edf->ebf", xin, p["experts"]["w_gate"].astype(hv.dtype))
+    u = jnp.einsum("ebd,edf->ebf", xin, p["experts"]["w_up"].astype(hv.dtype))
+    act = L._act(cfg.activation, g) * u
+    out = jnp.einsum("ebf,efd->ebd", act,
+                     p["experts"]["w_down"].astype(hv.dtype))  # (E,B,D)
+    y = jnp.einsum("ebd,be->bd", out, combine.astype(hv.dtype))
+    x = x + y[:, None]
+    return x, {"k": k_cache, "v": v_cache, "k_pos": k_pos}

@@ -1,0 +1,113 @@
+"""Unified model API over every architecture family.
+
+``batch`` dicts carry the model inputs:
+  - all LM families: ``tokens (B,S) int32`` (+ ``labels`` for training)
+  - vlm: + ``patch_embeds (B,P,pd)``  (stubbed vision tower output)
+  - encdec: + ``frames (B,F,D)``      (stubbed audio frontend output)
+  - cnn: ``images (B,H,W,C)`` + ``labels (B,) int32``
+Decode batches carry ``tokens (B,1)``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import cnn as cnn_mod
+from repro.models import encdec as encdec_mod
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import vlm as vlm_mod
+
+PyTree = Any
+
+
+class Model(NamedTuple):
+    cfg: ArchConfig
+    init: Callable                  # (key) -> params
+    forward: Callable               # (params, batch, **kw) -> logits
+    init_cache: Optional[Callable]  # (batch_size, cache_len) -> cache
+    decode: Optional[Callable]      # (params, cache, batch) -> (logits, cache)
+
+    def abstract_params(self):
+        return L.abstract_params(lambda key: self.init(key))
+
+    def logical_axes(self):
+        return L.logical_axes(lambda key: self.init(key))
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family == "cnn":
+        def fwd(params, batch, **kw):
+            return cnn_mod.apply_cnn(params, batch["images"], cfg)
+
+        return Model(cfg, lambda key: cnn_mod.init_cnn(key, cfg), fwd,
+                     None, None)
+
+    if cfg.family == "encdec":
+        def fwd(params, batch, **kw):
+            remat = kw.get("remat", "full")
+            return encdec_mod.forward_encdec(params, batch["frames"],
+                                             batch["tokens"], cfg,
+                                             remat=remat)
+
+        def init_cache(batch_size, cache_len):
+            return encdec_mod.init_encdec_cache(cfg, batch_size, cache_len)
+
+        def decode(params, cache, batch):
+            return encdec_mod.decode_encdec(params, cache, batch["tokens"],
+                                            cfg)
+
+        return Model(cfg, lambda key: encdec_mod.init_encdec(key, cfg), fwd,
+                     init_cache, decode)
+
+    if cfg.family == "vlm":
+        def fwd(params, batch, **kw):
+            return vlm_mod.forward_vlm(params, batch["tokens"],
+                                       batch["patch_embeds"], cfg, **kw)
+
+        def init_cache(batch_size, cache_len):
+            return T.init_lm_cache(cfg, batch_size, cache_len)
+
+        def decode(params, cache, batch):
+            return T.decode_lm(params, cache, batch["tokens"], cfg)
+
+        return Model(cfg, lambda key: vlm_mod.init_vlm(key, cfg), fwd,
+                     init_cache, decode)
+
+    # dense / moe / ssm / hybrid
+    def fwd(params, batch, **kw):
+        return T.forward_lm(params, batch["tokens"], cfg, **kw)
+
+    def init_cache(batch_size, cache_len):
+        return T.init_lm_cache(cfg, batch_size, cache_len)
+
+    def decode(params, cache, batch):
+        return T.decode_lm(params, cache, batch["tokens"], cfg)
+
+    return Model(cfg, lambda key: T.init_lm(key, cfg), fwd, init_cache,
+                 decode)
+
+
+def lm_loss(logits: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Next-token cross entropy. logits:(B,S,V), tokens:(B,S)."""
+    logits = logits[:, :-1]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def cls_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Classification cross entropy. logits:(B,C), labels:(B,)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def loss_fn(model: Model, params, batch, **kw) -> jax.Array:
+    logits = model.forward(params, batch, **kw)
+    if model.cfg.family == "cnn":
+        return cls_loss(logits, batch["labels"])
+    return lm_loss(logits, batch["tokens"])

@@ -1,0 +1,191 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention.
+
+The layer stack repeats ``cfg.hybrid.pattern`` (default rglru,rglru,attn).
+A *superblock* = one full pattern; the LM scans over superblocks; remainder
+layers (38 = 12*3 + 2) are stacked separately by the LM.
+
+RG-LRU recurrence (Griffin eq. 3-4, per-channel gates):
+    r_t = sigmoid(w_a ⊙ x_t + b_a)
+    i_t = sigmoid(w_x ⊙ x_t + b_x)
+    a_t = exp(-c * softplus(Λ) * r_t),     c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.ssm import _causal_conv, _assoc_combine
+from repro.sharding import lc
+
+RG_C = 8.0
+RG_CHUNK = 128
+
+
+def _lru_width(cfg: ArchConfig) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+def _attn_cfg(cfg: ArchConfig) -> ArchConfig:
+    return dataclasses.replace(cfg, sliding_window=cfg.hybrid.attn_window,
+                               family="dense")
+
+
+def init_rglru_block(key, cfg: ArchConfig):
+    d, w = cfg.d_model, _lru_width(cfg)
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": L.init_norm(ks[0], d, kind=cfg.norm, dtype=dt),
+        "in_main": L.init_linear(ks[1], d, w, dtype=dt, axes=("fsdp", "tp")),
+        "in_gate": L.init_linear(ks[2], d, w, dtype=dt, axes=("fsdp", "tp")),
+        "conv_w": L.param(ks[3], (4, w), ("conv", "tp"), dt, "normal"),
+        "conv_b": L.param(ks[3], (w,), ("tp",), dt, "zeros"),
+        "w_a": L.param(ks[4], (w,), ("tp",), jnp.float32, "uniform", 0.5),
+        "b_a": L.param(ks[4], (w,), ("tp",), jnp.float32, "zeros"),
+        "w_x": L.param(ks[5], (w,), ("tp",), jnp.float32, "uniform", 0.5),
+        "b_x": L.param(ks[5], (w,), ("tp",), jnp.float32, "zeros"),
+        "lam": L.param(ks[6], (w,), ("tp",), jnp.float32, "uniform", 1.0),
+        "out": L.init_linear(ks[6], w, d, dtype=dt, axes=("tp", "fsdp")),
+        "ln_mlp": L.init_norm(ks[7], d, kind=cfg.norm, dtype=dt),
+        "mlp": L.init_mlp(ks[7], cfg.d_model, cfg.d_ff,
+                          activation=cfg.activation, dtype=dt),
+    }
+
+
+def _rglru_gates(p, x):
+    """x:(B,S,W) f32 -> (a, b) recurrence elements."""
+    r = jax.nn.sigmoid(p["w_a"][None, None] * x + p["b_a"][None, None])
+    i = jax.nn.sigmoid(p["w_x"][None, None] * x + p["b_x"][None, None])
+    log_a = -RG_C * jax.nn.softplus(p["lam"])[None, None] * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.square(a), 1e-12)) * (i * x)
+    return a, b
+
+
+def rglru_scan(a, b, h0):
+    """Linear recurrence over seq. a,b:(B,S,W); h0:(B,W)."""
+    B, S, W = a.shape
+    chunk = min(RG_CHUNK, S)
+    assert S % chunk == 0
+    n = S // chunk
+    ac = a.reshape(B, n, chunk, W).swapaxes(0, 1)
+    bc = b.reshape(B, n, chunk, W).swapaxes(0, 1)
+
+    def one(h, elems):
+        ai, bi = elems
+        a_cum, b_cum = jax.lax.associative_scan(_assoc_combine, (ai, bi),
+                                                axis=1)
+        h_all = a_cum * h[:, None] + b_cum
+        return h_all[:, -1], h_all
+
+    h_last, hs = jax.lax.scan(one, h0, (ac, bc))
+    return hs.swapaxes(0, 1).reshape(B, S, W), h_last
+
+
+def apply_rglru_block(p, x, positions, cfg: ArchConfig, *, causal_skip=False):
+    del positions, causal_skip
+    h = L.norm(p["norm"], x, kind=cfg.norm)
+    main = L.linear(p["in_main"], h)
+    gate = jax.nn.gelu(L.linear(p["in_gate"], h))
+    main = lc(main, ("batch", "seq", "inner_act"))
+    main = _causal_conv(main, p["conv_w"].astype(main.dtype),
+                        p["conv_b"].astype(main.dtype))
+    a, b = _rglru_gates(p, main.astype(jnp.float32))
+    B, _, W = main.shape
+    hseq, _ = rglru_scan(a, b, jnp.zeros((B, W), jnp.float32))
+    y = (hseq.astype(x.dtype) * gate)
+    y = lc(y, ("batch", "seq", "inner_act"))
+    x = lc(x + L.linear(p["out"], y), ("batch", "seq", "embed"))
+    hm = L.norm(p["ln_mlp"], x, kind=cfg.norm)
+    x = x + L.mlp(p["mlp"], hm, activation=cfg.activation)
+    return lc(x, ("batch", "seq", "embed"))
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int):
+    w = _lru_width(cfg)
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, 3, w), cfg.param_dtype),
+    }
+
+
+def decode_rglru_block(p, x, cache, pos, cfg: ArchConfig):
+    del pos
+    h = L.norm(p["norm"], x, kind=cfg.norm)
+    main = L.linear(p["in_main"], h)                       # (B,1,W)
+    gate = jax.nn.gelu(L.linear(p["in_gate"], h))
+    window = jnp.concatenate([cache["conv"].astype(main.dtype), main], axis=1)
+    w = p["conv_w"].astype(main.dtype)
+    mc = jnp.einsum("bwd,wd->bd", window, w) + p["conv_b"].astype(main.dtype)
+    a, b = _rglru_gates(p, mc[:, None].astype(jnp.float32))
+    h_new = a[:, 0] * cache["h"] + b[:, 0]                 # (B,W)
+    y = (h_new[:, None].astype(x.dtype) * gate)
+    x = x + L.linear(p["out"], y)
+    hm = L.norm(p["ln_mlp"], x, kind=cfg.norm)
+    x = x + L.mlp(p["mlp"], hm, activation=cfg.activation)
+    return x, {"h": h_new, "conv": window[:, 1:]}
+
+
+# ------------------------------------------------------- kind dispatch layer
+
+def init_block_kind(key, cfg: ArchConfig, kind: str):
+    if kind == "rglru":
+        return init_rglru_block(key, cfg)
+    return T.init_block(key, _attn_cfg(cfg))
+
+
+def apply_block_kind(p, x, positions, cfg: ArchConfig, kind: str,
+                     causal_skip: bool = False):
+    if kind == "rglru":
+        return apply_rglru_block(p, x, positions, cfg)
+    return T.apply_block(p, x, positions, _attn_cfg(cfg),
+                         causal_skip=causal_skip)
+
+
+def init_block_kind_cache(cfg: ArchConfig, batch: int, cache_len: int,
+                          kind: str):
+    if kind == "rglru":
+        return init_rglru_cache(cfg, batch)
+    return T.init_block_cache(_attn_cfg(cfg), batch, cache_len)
+
+
+def decode_block_kind(p, x, cache, pos, cfg: ArchConfig, kind: str):
+    if kind == "rglru":
+        return decode_rglru_block(p, x, cache, pos, cfg)
+    return T.decode_block(p, x, cache, pos, _attn_cfg(cfg))
+
+
+# ------------------------------------------------------------- superblocks
+
+def init_superblock(key, cfg: ArchConfig):
+    ks = jax.random.split(key, len(cfg.hybrid.pattern))
+    return {f"b{i}": init_block_kind(ks[i], cfg, kind)
+            for i, kind in enumerate(cfg.hybrid.pattern)}
+
+
+def apply_superblock(p, x, positions, cfg: ArchConfig, *, causal_skip=False):
+    for i, kind in enumerate(cfg.hybrid.pattern):
+        x = apply_block_kind(p[f"b{i}"], x, positions, cfg, kind,
+                             causal_skip=causal_skip)
+    return x
+
+
+def init_superblock_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    return {f"b{i}": init_block_kind_cache(cfg, batch, cache_len, kind)
+            for i, kind in enumerate(cfg.hybrid.pattern)}
+
+
+def decode_superblock(p, x, cache, pos, cfg: ArchConfig):
+    new_cache = {}
+    for i, kind in enumerate(cfg.hybrid.pattern):
+        x, new_cache[f"b{i}"] = decode_block_kind(p[f"b{i}"], x,
+                                                  cache[f"b{i}"], pos, cfg,
+                                                  kind)
+    return x, new_cache

@@ -1,0 +1,170 @@
+"""Mamba-1 selective SSM block (falcon-mamba family), pure JAX.
+
+Training/prefill uses a chunked parallel scan: within a chunk of
+``SSM_CHUNK`` timesteps the linear recurrence h_t = a_t*h_{t-1} + b_t is
+evaluated with ``jax.lax.associative_scan``; chunks are chained with a
+``lax.scan`` carrying the boundary state. Decode is the O(1) single-step
+recurrence with a (conv window, ssm state) cache.
+
+TPU adaptation note (DESIGN.md §3): the CUDA "selective scan" kernel of the
+Mamba paper fuses discretization + scan in SRAM; on TPU the same
+arithmetic-intensity argument favors chunked associative scan in VMEM-sized
+chunks — XLA fuses the elementwise discretization into the scan elements, so
+a custom Pallas kernel is not warranted for correctness-critical state
+handling (the paper's — AnycostFL's — hot spots are elsewhere; see
+kernels/).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.sharding import lc
+
+SSM_CHUNK = 128
+
+
+def _dt_rank(cfg: ArchConfig) -> int:
+    return cfg.ssm.dt_rank or max(1, -(-cfg.d_model // 16))
+
+
+def init_block(key, cfg: ArchConfig):
+    s = cfg.ssm
+    d, di, N = cfg.d_model, s.d_inner, s.state_dim
+    dtr = _dt_rank(cfg)
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 8)
+    # S4D-real initialization for A; dt bias so softplus(dt) ~ U[1e-3, 0.1]
+    if L._MODE.axes_mode or L._MODE.shape_mode:
+        a_log = L.param(ks[0], (di, N), ("tp", "state"), jnp.float32, "zeros")
+        dt_bias = L.param(ks[1], (di,), ("tp",), jnp.float32, "zeros")
+    else:
+        a_log = jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32),
+                                         (di, N)))
+        u = jax.random.uniform(ks[1], (di,), jnp.float32)
+        dt_init = jnp.exp(u * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
+        # inverse softplus
+        dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    return {
+        "norm": L.init_norm(ks[2], d, kind=cfg.norm, dtype=dt),
+        "in_x": L.init_linear(ks[3], d, di, dtype=dt, axes=("fsdp", "tp")),
+        "in_z": L.init_linear(ks[4], d, di, dtype=dt, axes=("fsdp", "tp")),
+        "conv_w": L.param(ks[5], (s.conv_width, di), ("conv", "tp"), dt,
+                          "normal"),
+        "conv_b": L.param(ks[5], (di,), ("tp",), dt, "zeros"),
+        "w_dt": L.init_linear(ks[6], di, dtr, dtype=dt, axes=("tp", "fsdp")),
+        "w_B": L.init_linear(ks[6], di, N, dtype=dt, axes=("tp", "state")),
+        "w_C": L.init_linear(ks[7], di, N, dtype=dt, axes=("tp", "state")),
+        "dt_proj": L.init_linear(ks[7], dtr, di, dtype=dt,
+                                 axes=("fsdp", "tp"), scale=dtr ** -0.5),
+        "dt_bias": dt_bias,
+        "A_log": a_log,
+        "D": L.param(ks[0], (di,), ("tp",), jnp.float32, "ones"),
+        "out": L.init_linear(ks[0], di, d, dtype=dt, axes=("tp", "fsdp")),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x:(B,S,di), w:(width,di) -> (B,S,di)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    # accumulate taps: y_t = sum_k w_k * x_{t-width+1+k}
+    S = x.shape[1]
+    y = jnp.zeros_like(x)
+    for kk in range(width):
+        y = y + pad[:, kk:kk + S, :] * w[kk][None, None, :]
+    return y + b[None, None, :]
+
+
+def _ssm_elements(p, xh, cfg: ArchConfig):
+    """Discretize: xh:(B,S,di) -> (dA, dBx) each (B,S,di,N), C:(B,S,N)."""
+    dt = jax.nn.softplus(L.linear(p["w_dt"], xh) @
+                         p["dt_proj"]["w"].astype(xh.dtype)
+                         + p["dt_bias"].astype(xh.dtype))       # (B,S,di)
+    Bm = L.linear(p["w_B"], xh).astype(jnp.float32)             # (B,S,N)
+    Cm = L.linear(p["w_C"], xh).astype(jnp.float32)             # (B,S,N)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (di,N)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf[..., None] * A[None, None])                # (B,S,di,N)
+    dBx = (dtf * xh.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+    return dA, dBx, Cm
+
+
+def _assoc_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def ssm_scan(dA, dBx, h0):
+    """Chunk-parallel linear recurrence. dA,dBx:(B,S,di,N); h0:(B,di,N)."""
+    B, S, di, N = dA.shape
+    chunk = min(SSM_CHUNK, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+    dAc = dA.reshape(B, n_chunks, chunk, di, N).swapaxes(0, 1)
+    dBc = dBx.reshape(B, n_chunks, chunk, di, N).swapaxes(0, 1)
+
+    def one_chunk(h, elems):
+        a, b = elems                                     # (B,chunk,di,N)
+        a_cum, b_cum = jax.lax.associative_scan(_assoc_combine, (a, b),
+                                                axis=1)
+        h_all = a_cum * h[:, None] + b_cum               # (B,chunk,di,N)
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(one_chunk, h0, (dAc, dBc))
+    h_seq = h_chunks.swapaxes(0, 1).reshape(B, S, di, N)
+    return h_seq, h_last
+
+
+def apply_block(p, x, positions, cfg: ArchConfig, *, causal_skip=False):
+    del positions, causal_skip
+    s = cfg.ssm
+    h = L.norm(p["norm"], x, kind=cfg.norm)
+    xh = L.linear(p["in_x"], h)
+    z = L.linear(p["in_z"], h)
+    xh = lc(xh, ("batch", "seq", "inner_act"))
+    xh = jax.nn.silu(_causal_conv(xh, p["conv_w"].astype(xh.dtype),
+                                  p["conv_b"].astype(xh.dtype)))
+    dA, dBx, Cm = _ssm_elements(p, xh, cfg)
+    B = x.shape[0]
+    h0 = jnp.zeros((B, s.d_inner, s.state_dim), jnp.float32)
+    h_seq, _ = ssm_scan(dA, dBx, h0)
+    y = jnp.einsum("bsdn,bsn->bsd", h_seq, Cm)
+    y = y + p["D"].astype(jnp.float32)[None, None] * xh.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = lc(y, ("batch", "seq", "inner_act"))
+    return lc(x + L.linear(p["out"], y), ("batch", "seq", "embed"))
+
+
+def init_block_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    del cache_len  # O(1) state — the whole point of an SSM
+    s = cfg.ssm
+    return {
+        "h": jnp.zeros((batch, s.d_inner, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, s.d_inner),
+                          cfg.param_dtype),
+    }
+
+
+def decode_block(p, x, cache, pos, cfg: ArchConfig):
+    """x:(B,1,D) one-step recurrence."""
+    del pos
+    h = L.norm(p["norm"], x, kind=cfg.norm)
+    xh = L.linear(p["in_x"], h)                          # (B,1,di)
+    z = L.linear(p["in_z"], h)
+    window = jnp.concatenate([cache["conv"].astype(xh.dtype), xh], axis=1)
+    w = p["conv_w"].astype(xh.dtype)
+    xc = jnp.einsum("bwd,wd->bd", window, w) + p["conv_b"].astype(xh.dtype)
+    xc = jax.nn.silu(xc)[:, None]                        # (B,1,di)
+    dA, dBx, Cm = _ssm_elements(p, xc, cfg)
+    h_new = dA[:, 0] * cache["h"] + dBx[:, 0]            # (B,di,N)
+    y = jnp.einsum("bdn,bn->bd", h_new, Cm[:, 0])
+    y = y + p["D"].astype(jnp.float32)[None] * xc[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = x + L.linear(p["out"], y[:, None])
+    new_cache = {"h": h_new, "conv": window[:, 1:]}
+    return out, new_cache

@@ -1,0 +1,372 @@
+"""Decoder-only LM machinery: stacked layers + lax.scan, dense blocks.
+
+The LM is generic over block *family* (dense / moe / ssm / hybrid-superblock)
+— each family module provides (init_block, apply_block, init_block_cache,
+decode_block); this module provides the stacking, embedding, head, remat,
+and the train/prefill/decode entry points used by the launcher.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.sharding import lc
+
+PyTree = Any
+
+
+# ------------------------------------------------------------- layer stacking
+
+def init_stack(key, n: int, init_fn: Callable[[jax.Array], PyTree]) -> PyTree:
+    """Stack n independently-initialized blocks along a leading 'layers' dim.
+
+    Handles the three init modes (values / logical axes / abstract shapes).
+    """
+    if L._MODE.axes_mode:
+        single = init_fn(jax.random.PRNGKey(0))
+        return jax.tree.map(
+            lambda ax: ax.prepend("layers"), single,
+            is_leaf=lambda x: isinstance(x, L.LogicalAxes))
+    if L._MODE.shape_mode:
+        single = init_fn(jax.random.PRNGKey(0))
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype),
+            single)
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def scan_blocks(apply_fn: Callable, stacked: PyTree, x: jax.Array,
+                *scan_args, remat: str = "full", unroll: int = 1):
+    """x -> scan(apply_fn) over the stacked layer params.
+
+    ``scan_args`` are additional per-layer stacked inputs (e.g. caches); the
+    function must return (x, per_layer_output or None).
+    """
+    fn = apply_fn
+    if remat == "full":
+        fn = jax.checkpoint(fn)
+    elif remat == "dots":
+        fn = jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    elif remat != "none":
+        raise ValueError(remat)
+
+    def body(carry, per_layer):
+        p = per_layer[0]
+        rest = per_layer[1:]
+        y, out = fn(p, carry, *rest)
+        return y, out
+
+    x, outs = jax.lax.scan(body, x, (stacked,) + tuple(scan_args),
+                           unroll=unroll)
+    return x, outs
+
+
+# ------------------------------------------------------------- dense blocks
+
+def init_block(key, cfg: ArchConfig):
+    from repro.models.attention import init_attention
+    dtype = cfg.param_dtype
+    ks = jax.random.split(key, 4)
+    return {
+        "ln_attn": L.init_norm(ks[0], cfg.d_model, kind=cfg.norm, dtype=dtype),
+        "attn": init_attention(ks[1], cfg.d_model, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.resolved_head_dim,
+                               qkv_bias=cfg.qkv_bias, dtype=dtype),
+        "ln_mlp": L.init_norm(ks[2], cfg.d_model, kind=cfg.norm, dtype=dtype),
+        "mlp": L.init_mlp(ks[3], cfg.d_model, cfg.d_ff,
+                          activation=cfg.activation, dtype=dtype),
+    }
+
+
+def apply_block(p, x, positions, cfg: ArchConfig, *,
+                causal_skip: bool = False):
+    from repro.models.attention import attend, qkv
+    h = L.norm(p["ln_attn"], x, kind=cfg.norm)
+    q, k, v = qkv(p["attn"], h, positions, n_heads=cfg.n_heads,
+                  n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                  rope_theta=cfg.rope_theta)
+    o = attend(q, k, v, positions[0], positions[0], causal=True,
+               window=cfg.sliding_window, causal_skip=causal_skip)
+    B, S = x.shape[:2]
+    o = L.linear(p["attn"]["wo"], o.reshape(B, S, -1))
+    x = lc(x + o, ("batch", "seq", "embed"))
+    h = L.norm(p["ln_mlp"], x, kind=cfg.norm)
+    x = x + L.mlp(p["mlp"], h, activation=cfg.activation)
+    return lc(x, ("batch", "seq", "embed"))
+
+
+def init_block_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    hd = cfg.resolved_head_dim
+    T = cache_len if cfg.sliding_window is None \
+        else min(cache_len, cfg.sliding_window)
+    shape = (batch, T, cfg.n_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, cfg.param_dtype),
+        "v": jnp.zeros(shape, cfg.param_dtype),
+        "k_pos": jnp.full((T,), -1, jnp.int32),
+    }
+
+
+def decode_block(p, x, cache, pos, cfg: ArchConfig):
+    """One-token decode. x:(B,1,D); pos: scalar int32 position."""
+    from repro.models.attention import attention_decode, qkv
+    h = L.norm(p["ln_attn"], x, kind=cfg.norm)
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k, v = qkv(p["attn"], h, positions, n_heads=cfg.n_heads,
+                  n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                  rope_theta=cfg.rope_theta)
+    T = cache["k"].shape[1]
+    slot = pos % T if cfg.sliding_window is not None else jnp.minimum(pos, T - 1)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
+    k_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_pos"], jnp.full((1,), pos, jnp.int32), slot, 0)
+    k_cache = lc(k_cache, ("batch", "cache_seq", "kv_heads", "head_dim"))
+    v_cache = lc(v_cache, ("batch", "cache_seq", "kv_heads", "head_dim"))
+    o = attention_decode(q, k_cache, v_cache, positions[0], k_pos,
+                         window=cfg.sliding_window)
+    B = x.shape[0]
+    o = L.linear(p["attn"]["wo"], o.reshape(B, 1, -1))
+    x = x + o
+    h = L.norm(p["ln_mlp"], x, kind=cfg.norm)
+    x = x + L.mlp(p["mlp"], h, activation=cfg.activation)
+    return x, {"k": k_cache, "v": v_cache, "k_pos": k_pos}
+
+
+def prefill_block(p, x, positions, cfg: ArchConfig, cache_len: int, *,
+                  causal_skip: bool = False):
+    """apply_block that also emits the layer's KV cache (batched prefill)."""
+    from repro.models.attention import attend, qkv
+    h = L.norm(p["ln_attn"], x, kind=cfg.norm)
+    q, k, v = qkv(p["attn"], h, positions, n_heads=cfg.n_heads,
+                  n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                  rope_theta=cfg.rope_theta)
+    o = attend(q, k, v, positions[0], positions[0], causal=True,
+               window=cfg.sliding_window, causal_skip=causal_skip)
+    B, S = x.shape[:2]
+    x = lc(x + L.linear(p["attn"]["wo"], o.reshape(B, S, -1)),
+           ("batch", "seq", "embed"))
+    h = L.norm(p["ln_mlp"], x, kind=cfg.norm)
+    x = lc(x + L.mlp(p["mlp"], h, activation=cfg.activation),
+           ("batch", "seq", "embed"))
+    # cache layout identical to init_block_cache: (B, T, kv, hd) + k_pos
+    T = cache_len if cfg.sliding_window is None \
+        else min(cache_len, cfg.sliding_window)
+    if T >= S:
+        pad = ((0, 0), (0, T - S), (0, 0), (0, 0))
+        kc = jnp.pad(k, pad)
+        vc = jnp.pad(v, pad)
+        k_pos = jnp.concatenate([positions[0],
+                                 jnp.full((T - S,), -1, jnp.int32)])
+    else:  # sliding window shorter than the prompt: keep the tail, ring-
+        # aligned so decode's ``pos % T`` slot writing stays consistent
+        start = S - T
+        roll = (S % T)
+        kc = jnp.roll(k[:, start:], roll, axis=1)
+        vc = jnp.roll(v[:, start:], roll, axis=1)
+        k_pos = jnp.roll(positions[0][start:], roll)
+    return x, {"k": kc, "v": vc, "k_pos": k_pos}
+
+
+def prefill_lm(params, tokens, cfg: ArchConfig, cache_len: int, *,
+               causal_skip: bool = False, extra_embeds=None):
+    """Batched prefill: one forward pass -> (logits, ready decode cache).
+
+    Supported for the attention families (dense/vlm/moe attention caches);
+    SSM/hybrid prefill carries recurrent state and uses the decode path for
+    the boundary step (their per-token state is O(1) anyway).
+    """
+    assert cfg.family in ("dense", "vlm", "moe"), cfg.family
+    B, S = tokens.shape
+    assert cache_len >= 1
+    x = L.embed(params["embed"], tokens).astype(cfg.param_dtype)
+    if extra_embeds is not None:
+        x = x + extra_embeds.astype(cfg.param_dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.family == "moe":
+        def block_fn(p, x):
+            return _moe_prefill_block(p, x, positions, cfg, cache_len,
+                                      causal_skip)
+    else:
+        def block_fn(p, x):
+            return prefill_block(p, x, positions, cfg, cache_len,
+                                 causal_skip=causal_skip)
+
+    x, caches = scan_blocks(block_fn, params["blocks"], x, remat="none")
+    x = L.norm(params["ln_f"], x, kind=cfg.norm)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = L.head_logits(params["unembed"], x, bf16=cfg.logits_bf16)
+    cache = {"blocks": caches, "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def _moe_prefill_block(p, x, positions, cfg, cache_len, causal_skip):
+    from repro.models import moe
+    from repro.models.attention import attend, qkv
+    h = L.norm(p["ln_attn"], x, kind=cfg.norm)
+    q, k, v = qkv(p["attn"], h, positions, n_heads=cfg.n_heads,
+                  n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                  rope_theta=cfg.rope_theta)
+    o = attend(q, k, v, positions[0], positions[0], causal=True,
+               window=cfg.sliding_window, causal_skip=causal_skip)
+    B, S = x.shape[:2]
+    x = lc(x + L.linear(p["attn"]["wo"], o.reshape(B, S, -1)),
+           ("batch", "seq", "embed"))
+    h = L.norm(p["ln_mlp"], x, kind=cfg.norm)
+    y, _aux = moe.moe_mlp(p, h, cfg, activation=cfg.activation)
+    x = lc(x + y, ("batch", "seq", "embed"))
+    T = cache_len if cfg.sliding_window is None \
+        else min(cache_len, cfg.sliding_window)
+    assert T >= S, "moe prefill: window < prompt unsupported"
+    pad = ((0, 0), (0, T - S), (0, 0), (0, 0))
+    return x, {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad),
+               "k_pos": jnp.concatenate(
+                   [positions[0], jnp.full((T - S,), -1, jnp.int32)])}
+
+
+# ----------------------------------------------------------------- LM level
+
+def _family_fns(cfg: ArchConfig):
+    """(init_block, apply_block, init_block_cache, decode_block) per family."""
+    if cfg.family in ("dense", "vlm"):
+        return init_block, apply_block, init_block_cache, decode_block
+    if cfg.family == "moe":
+        from repro.models import moe
+        return (moe.init_block, moe.apply_block, init_block_cache,
+                moe.decode_block)
+    if cfg.family == "ssm":
+        from repro.models import ssm
+        return (ssm.init_block, ssm.apply_block, ssm.init_block_cache,
+                ssm.decode_block)
+    if cfg.family == "hybrid":
+        from repro.models import rglru
+        return (rglru.init_superblock, rglru.apply_superblock,
+                rglru.init_superblock_cache, rglru.decode_superblock)
+    raise ValueError(cfg.family)
+
+
+def _n_stack(cfg: ArchConfig) -> tuple[int, int]:
+    """(number of scanned stack entries, remainder layers)."""
+    if cfg.family == "hybrid":
+        plen = len(cfg.hybrid.pattern)
+        return cfg.n_layers // plen, cfg.n_layers % plen
+    return cfg.n_layers, 0
+
+
+def init_lm(key, cfg: ArchConfig):
+    fns = _family_fns(cfg)
+    n_stack, n_rem = _n_stack(cfg)
+    ks = jax.random.split(key, 5)
+    p = {
+        "embed": L.init_embedding(ks[0], cfg.vocab_size, cfg.d_model,
+                                  dtype=cfg.param_dtype),
+        "blocks": init_stack(ks[1], n_stack,
+                             functools.partial(fns[0], cfg=cfg)),
+        "ln_f": L.init_norm(ks[2], cfg.d_model, kind=cfg.norm,
+                            dtype=cfg.param_dtype),
+    }
+    if n_rem:  # hybrid remainder layers (recurrentgemma: 38 = 12*3 + 2)
+        from repro.models import rglru
+        p["tail"] = init_stack(
+            ks[3], n_rem,
+            functools.partial(rglru.init_block_kind, cfg=cfg,
+                              kind=cfg.hybrid.pattern[0]))
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.init_linear(ks[4], cfg.d_model, cfg.vocab_size,
+                                     dtype=cfg.param_dtype,
+                                     axes=("fsdp", "tp"))
+    return p
+
+
+def forward_lm(params, tokens, cfg: ArchConfig, *, remat: str = "full",
+               causal_skip: bool = False, extra_embeds=None):
+    """tokens:(B,S) -> logits (B,S,V). extra_embeds: optional (B,S,D) added
+    input embeddings (VLM patch path / audio frontend stubs)."""
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens).astype(cfg.param_dtype)
+    if extra_embeds is not None:
+        x = x + extra_embeds.astype(cfg.param_dtype)
+    x = lc(x, ("batch", "seq", "embed"))
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    fns = _family_fns(cfg)
+
+    def block_fn(p, x):
+        return fns[1](p, x, positions, cfg, causal_skip=causal_skip), None
+
+    x, _ = scan_blocks(block_fn, params["blocks"], x, remat=remat)
+    if "tail" in params:
+        from repro.models import rglru
+
+        def tail_fn(p, x):
+            return rglru.apply_block_kind(p, x, positions, cfg,
+                                          kind=cfg.hybrid.pattern[0]), None
+
+        x, _ = scan_blocks(tail_fn, params["tail"], x, remat=remat)
+    x = L.norm(params["ln_f"], x, kind=cfg.norm)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = L.head_logits(params["unembed"], x, bf16=cfg.logits_bf16)
+    return lc(logits, ("batch", "seq", "vocab_act"))
+
+
+def init_lm_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    fns = _family_fns(cfg)
+    n_stack, n_rem = _n_stack(cfg)
+
+    def one(_):
+        return fns[2](cfg, batch, cache_len)
+
+    cache = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_stack,) + x.shape).copy(), one(None))
+    out = {"blocks": cache, "pos": jnp.zeros((), jnp.int32)}
+    if n_rem:
+        from repro.models import rglru
+        tail = rglru.init_block_kind_cache(cfg, batch, cache_len,
+                                           kind=cfg.hybrid.pattern[0])
+        out["tail"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_rem,) + x.shape).copy(), tail)
+    return out
+
+
+def decode_lm(params, cache, tokens, cfg: ArchConfig):
+    """One decode step. tokens:(B,1) -> (logits (B,1,V), new cache)."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = L.embed(params["embed"], tokens).astype(cfg.param_dtype)
+    fns = _family_fns(cfg)
+
+    def block_fn(carry, per_layer):
+        p, c = per_layer
+        y, new_c = fns[3](p, carry, c, pos, cfg)
+        return y, new_c
+
+    x, new_blocks = jax.lax.scan(block_fn, x,
+                                 (params["blocks"], cache["blocks"]))
+    new_cache = {"blocks": new_blocks, "pos": pos + 1}
+    if "tail" in params:
+        from repro.models import rglru
+
+        def tail_fn(carry, per_layer):
+            p, c = per_layer
+            y, new_c = rglru.decode_block_kind(p, carry, c, pos, cfg,
+                                               kind=cfg.hybrid.pattern[0])
+            return y, new_c
+
+        x, new_tail = jax.lax.scan(tail_fn, x, (params["tail"], cache["tail"]))
+        new_cache["tail"] = new_tail
+    x = L.norm(params["ln_f"], x, kind=cfg.norm)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = L.head_logits(params["unembed"], x, bf16=cfg.logits_bf16)
+    return logits, new_cache

@@ -1,0 +1,39 @@
+"""Pixtral-style VLM backbone: text decoder consuming stubbed patch embeds.
+
+The Pixtral-ViT vision tower is a STUB per the assignment: callers provide
+``patch_embeds: (B, P, patch_embed_dim)`` (precomputed vision-tower output).
+The backbone owns the multimodal projector and interleaves the projected
+patches with the text embeddings (image-first layout: positions [0, P)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def init_vlm(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    p = T.init_lm(k1, cfg)
+    p["projector"] = L.init_linear(k2, cfg.vlm.patch_embed_dim, cfg.d_model,
+                                   dtype=cfg.param_dtype, axes=("fsdp", "tp"))
+    return p
+
+
+def project_patches(params, patch_embeds, seq_len: int, cfg: ArchConfig):
+    """(B,P,pd) -> (B,S,D) extra embeddings, patches at positions [0, P)."""
+    proj = L.linear(params["projector"],
+                    patch_embeds.astype(cfg.param_dtype))     # (B,P,D)
+    B, P, D = proj.shape
+    assert P <= seq_len, (P, seq_len)
+    return jnp.pad(proj, ((0, 0), (0, seq_len - P), (0, 0)))
+
+
+def forward_vlm(params, tokens, patch_embeds, cfg: ArchConfig, *,
+                remat: str = "full", causal_skip: bool = False):
+    extra = project_patches(params, patch_embeds, tokens.shape[1], cfg)
+    return T.forward_lm(params, tokens, cfg, remat=remat,
+                        causal_skip=causal_skip, extra_embeds=extra)

@@ -1,0 +1,80 @@
+"""Heterogeneous device fleet sampler (paper §V-A.2).
+
+I = 60 devices in a 550 m cell; energy coefficient eps_i ~ U[5e-27, 1e-26];
+positions refreshed every round (mobility); per-round energy budget
+E_max ~ U[3, 9] J (CIFAR; halved for FMNIST); shared latency budget T_max.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.schedule import DeviceEnv
+from repro.sysmodel.wireless import WirelessConfig, achievable_rate, \
+    drop_positions
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    n_devices: int = 60
+    T_max: float = 10.0
+    E_max_range: tuple = (3.0, 9.0)
+    eps_range: tuple = (5e-27, 1e-26)
+    f_min: float = 0.3e9
+    f_max: float = 2.0e9
+    tau: float = 1.0
+    alpha_min: float = 0.25
+    beta_min: float = 1e-3
+    beta_max: float = 1.0 / 15.0
+    wireless: WirelessConfig = dataclasses.field(default_factory=WirelessConfig)
+    # heterogeneity knobs for Fig. 5b-c: fix means, scale variances
+    eps_var_scale: float = 1.0
+    dist_mean_m: Optional[float] = None      # None -> uniform in cell
+    dist_var_scale: float = 1.0
+
+
+@dataclasses.dataclass
+class Fleet:
+    cfg: FleetConfig
+    eps_hw: np.ndarray        # (I,) fixed per device
+    E_max: np.ndarray         # (I,) fixed per device
+    data_sizes: np.ndarray    # (I,) samples per device
+
+    def round_envs(self, rng: np.random.Generator, W: float, S_bits: float
+                   ) -> list[DeviceEnv]:
+        """Refresh positions/channels and build per-device envs (Eq. 6-9)."""
+        c = self.cfg
+        if c.dist_mean_m is None:
+            pos = drop_positions(rng, c.n_devices, c.wireless)
+            dist = np.linalg.norm(pos, axis=-1)
+        else:
+            spread = (c.wireless.cell_radius_m / 4.0) * np.sqrt(
+                c.dist_var_scale)
+            dist = np.clip(rng.normal(c.dist_mean_m, spread, c.n_devices),
+                           10.0, c.wireless.cell_radius_m)
+        rates = achievable_rate(dist, c.wireless, rng=rng)
+        envs = []
+        for i in range(c.n_devices):
+            envs.append(DeviceEnv(
+                T_max=c.T_max, E_max=float(self.E_max[i]),
+                P_com=c.wireless.tx_power_w, rate=float(rates[i]),
+                W=W, D=int(self.data_sizes[i]), tau=c.tau,
+                eps_hw=float(self.eps_hw[i]), S_bits=S_bits,
+                f_min=c.f_min, f_max=c.f_max, alpha_min=c.alpha_min,
+                beta_min=c.beta_min, beta_max=c.beta_max))
+        return envs
+
+
+def make_fleet(rng: np.random.Generator, cfg: FleetConfig,
+               data_sizes: np.ndarray) -> Fleet:
+    lo, hi = cfg.eps_range
+    mean = 0.5 * (lo + hi)
+    half = 0.5 * (hi - lo) * np.sqrt(cfg.eps_var_scale)
+    eps = rng.uniform(mean - half, mean + half, cfg.n_devices)
+    eps = np.clip(eps, 1e-28, None)
+    e_lo, e_hi = cfg.E_max_range
+    e_max = rng.uniform(e_lo, e_hi, cfg.n_devices)
+    assert len(data_sizes) == cfg.n_devices
+    return Fleet(cfg, eps, e_max, np.asarray(data_sizes))

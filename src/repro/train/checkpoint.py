@@ -1,0 +1,72 @@
+"""Pytree checkpointing: npz arrays + json manifest (no external deps).
+
+Works for params, optimizer state, FL server state. Keys are dotted paths;
+dtypes/shapes round-trip exactly (bfloat16 stored via uint16 view).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree, prefix: str = "") -> dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+        return out
+    out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: dict[str, Any]) -> PyTree:
+    root: dict = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return root
+
+
+def save_checkpoint(path: str, tree: PyTree, step: int = 0,
+                    extra: dict | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    arrays = {}
+    manifest = {"step": step, "extra": extra or {}, "entries": {}}
+    for k, v in flat.items():
+        arr = np.asarray(v)
+        key = k.replace("/", "__")
+        if arr.dtype == jnp.bfloat16:
+            manifest["entries"][k] = {"dtype": "bfloat16",
+                                      "shape": list(arr.shape)}
+            arrays[key] = arr.view(np.uint16)
+        else:
+            manifest["entries"][k] = {"dtype": str(arr.dtype),
+                                      "shape": list(arr.shape)}
+            arrays[key] = arr
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_checkpoint(path: str) -> tuple[PyTree, int, dict]:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat = {}
+    for k, meta in manifest["entries"].items():
+        arr = data[k.replace("/", "__")]
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        flat[k] = jnp.asarray(arr)
+    return _unflatten(flat), manifest["step"], manifest["extra"]

@@ -1,0 +1,297 @@
+"""Multi-round federated training driver (paper §V experiments).
+
+Runs AnycostFL and every baseline over the simulated heterogeneous fleet
+with real numerics (the paper's CNN/VGG models on synthetic class-
+conditional data — container is offline, see DESIGN.md §8). Tracks exactly
+the Table-I columns: rounds, energy (J), latency (s), compute (FLOPs),
+communication (bits), test accuracy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import aggregation, compression, schedule, shrinking
+from repro.core.anycost import (AnycostClient, AnycostServer, ClientUpdate,
+                                bucket_alpha, DEFAULT_ALPHA_BUCKETS)
+from repro.data.partition import partition_dirichlet, partition_iid
+from repro.data.synthetic import make_image_task
+from repro.models import cnn as cnn_mod
+from repro.models.registry import build_model, loss_fn
+from repro.sysmodel.population import Fleet, FleetConfig, make_fleet
+from repro.train.baselines import BaselinePolicy, fedhq_weights
+from repro.utils.pytree import tree_size, tree_sub
+
+PyTree = Any
+
+METHODS = ("anycostfl", "stc", "qsgd", "uveqfed", "heterofl", "fedhq",
+           "fedavg")
+
+
+@dataclasses.dataclass
+class FLRunConfig:
+    arch: str = "fmnist-cnn"
+    method: str = "anycostfl"
+    rounds: int = 30
+    lr: float = 0.05
+    batch_size: int = 32
+    tau: float = 1.0
+    seed: int = 0
+    iid: bool = True
+    dirichlet_alpha: float = 0.5
+    n_train: int = 2048
+    n_test: int = 512
+    eval_every: int = 5
+    # ablations (Fig. 5a)
+    use_ems: bool = True
+    use_fgc: bool = True
+    use_aio: bool = True
+    alpha_buckets: tuple = DEFAULT_ALPHA_BUCKETS
+    use_planner: bool = True
+
+
+@dataclasses.dataclass
+class RoundLog:
+    round: int
+    latency_s: float
+    energy_j: float
+    flops: float
+    comm_bits: float
+    mean_alpha: float
+    mean_beta: float
+    mean_gain: float
+    test_acc: Optional[float] = None
+    test_loss: Optional[float] = None
+
+
+@dataclasses.dataclass
+class History:
+    cfg: FLRunConfig
+    rounds: list
+    best_acc: float = 0.0
+
+    def cumulative(self, field: str) -> np.ndarray:
+        return np.cumsum([getattr(r, field) for r in self.rounds])
+
+    def to_rows(self) -> list[dict]:
+        out = []
+        for r, (ct, ce, cf, cb) in zip(
+                self.rounds, zip(self.cumulative("latency_s"),
+                                 self.cumulative("energy_j"),
+                                 self.cumulative("flops"),
+                                 self.cumulative("comm_bits"))):
+            out.append(dict(round=r.round, cum_latency_s=float(ct),
+                            cum_energy_j=float(ce), cum_flops=float(cf),
+                            cum_comm_bits=float(cb), test_acc=r.test_acc,
+                            test_loss=r.test_loss))
+        return out
+
+
+def flops_per_sample(arch_cfg) -> float:
+    """Training FLOPs (fwd+bwd ~ 3x fwd) per sample — the paper's W."""
+    if arch_cfg.family != "cnn":
+        # transformer-ish: 6 * params per token
+        return 6.0 * arch_cfg.n_active_params()
+    c = arch_cfg.d_model
+    if arch_cfg.name.startswith("fmnist"):
+        fwd = (28 * 28 * 5 * 5 * 1 * c + 14 * 14 * 5 * 5 * c * 2 * c
+               + 7 * 7 * 2 * c * arch_cfg.d_ff
+               + arch_cfg.d_ff * arch_cfg.vocab_size) * 2
+    else:
+        fwd = (32 * 32 * 9 * (3 * c + c * c) + 16 * 16 * 9 * (c * 2 * c + 4 * c * c)
+               + 8 * 8 * 9 * (2 * c * 4 * c + 16 * c * c)
+               + 16 * 4 * c * arch_cfg.d_ff + arch_cfg.d_ff * arch_cfg.d_ff
+               + arch_cfg.d_ff * 10) * 2
+    return 3.0 * fwd
+
+
+def _make_eval(model, test_x, test_y):
+    @jax.jit
+    def ev(params):
+        logits = model.forward(params, {"images": test_x})
+        acc = jnp.mean((jnp.argmax(logits, -1) == test_y).astype(jnp.float32))
+        from repro.models.registry import cls_loss
+        return acc, cls_loss(logits, test_y)
+
+    return ev
+
+
+def _device_batches(rng, x, y, idx, batch_size: int, tau: float):
+    """Stack tau-epoch minibatches -> (steps, B, ...) arrays."""
+    n = len(idx)
+    bs = min(batch_size, n)
+    steps = max(int(round(tau * n / bs)), 1)
+    order = np.concatenate([rng.permutation(n)
+                            for _ in range(math.ceil(steps * bs / n) + 1)])
+    sel = idx[order[:steps * bs]].reshape(steps, bs)
+    return {"images": jnp.asarray(x[sel]), "labels": jnp.asarray(y[sel])}
+
+
+def run_fl(run_cfg: FLRunConfig, fleet_cfg: Optional[FleetConfig] = None,
+           verbose: bool = False) -> History:
+    rng = np.random.default_rng(run_cfg.seed)
+    arch_cfg = get_config(run_cfg.arch)
+    model = build_model(arch_cfg)
+    spec = shrinking.cnn_shrink_spec(arch_cfg)
+
+    # ---- data
+    shape = cnn_mod.image_shape(arch_cfg)
+    train, test = make_image_task(rng, run_cfg.n_train, run_cfg.n_test,
+                                  shape=shape)
+    test_x, test_y = jnp.asarray(test.x), jnp.asarray(test.y)
+
+    fleet_cfg = fleet_cfg or FleetConfig()
+    if run_cfg.iid:
+        parts = partition_iid(rng, run_cfg.n_train, fleet_cfg.n_devices)
+    else:
+        parts = partition_dirichlet(rng, train.y, fleet_cfg.n_devices,
+                                    run_cfg.dirichlet_alpha)
+    fleet = make_fleet(rng, fleet_cfg, np.array([len(p) for p in parts]))
+
+    # ---- task constants (paper: W and S "empirically measured")
+    W = flops_per_sample(arch_cfg)
+    params = model.init(jax.random.PRNGKey(run_cfg.seed))
+    S_bits = 32.0 * tree_size(params)
+
+    client = AnycostClient(model, spec, lr=run_cfg.lr,
+                           batch_size=run_cfg.batch_size,
+                           alpha_buckets=run_cfg.alpha_buckets)
+    server = AnycostServer(model, spec)
+    policy = None
+    if run_cfg.method not in ("anycostfl",):
+        policy = BaselinePolicy(run_cfg.method)
+
+    # HeteroFL tiers: by hardware capability (energy coefficient terciles)
+    tiers = np.argsort(np.argsort(-fleet.eps_hw)) * 3 // fleet_cfg.n_devices
+
+    planner = None
+    ev = _make_eval(model, test_x, test_y)
+    hist = History(run_cfg, [])
+    key = jax.random.PRNGKey(run_cfg.seed + 1)
+
+    for t in range(run_cfg.rounds):
+        envs = fleet.round_envs(rng, W, S_bits)
+        sorted_params = server.sort(params) if run_cfg.use_ems \
+            else shrinking._deepcopy_dicts(params)
+
+        if planner is None and run_cfg.method == "anycostfl" \
+                and run_cfg.use_planner:
+            # fit the server-side beta planner on a probe update (§III-C.3)
+            key, k1 = jax.random.split(key)
+            probe_idx = rng.permutation(run_cfg.n_train)[:16]
+            probe_batches = {"images": jnp.asarray(train.x[probe_idx][None]),
+                             "labels": jnp.asarray(train.y[probe_idx][None])}
+            trained = client._local_steps(1.0, 1)(sorted_params,
+                                                  probe_batches)
+            probe_update = tree_sub(sorted_params, trained)
+            planner = compression.BetaPlanner.fit(probe_update, k1)
+
+        updates: list[ClientUpdate] = []
+        strategies: list[schedule.Strategy] = []
+        fedhq_L: list[int] = []
+        lat, en, fl, cb = 0.0, 0.0, 0.0, 0.0
+        for i, env in enumerate(envs):
+            if run_cfg.method == "anycostfl":
+                strat = schedule.solve(env)
+                if not strat.feasible:
+                    # no (alpha, beta, f) satisfies the budgets (deep channel
+                    # fade): the device sits this round out — the solver-side
+                    # analogue of client selection; baselines have no such
+                    # signal and their violated budgets are recorded (the
+                    # Table-I effect).
+                    continue
+                if not run_cfg.use_ems:
+                    strat = dataclasses.replace(strat, alpha=1.0)
+                if not run_cfg.use_fgc:
+                    strat = dataclasses.replace(strat, beta=1.0)
+            else:
+                strat = policy.strategy(env, tier=int(tiers[i]))
+            strategies.append(strat)
+            key, k1, k2 = jax.random.split(key, 3)
+            batches = _device_batches(rng, train.x, train.y, parts[i],
+                                      run_cfg.batch_size, run_cfg.tau)
+            if run_cfg.method == "anycostfl":
+                upd = client.local_round(
+                    sorted_params, strat, batches, k2,
+                    planner=planner if run_cfg.use_fgc else None,
+                    w_per_sample=W)
+                if not run_cfg.use_fgc:
+                    # transmit the raw (width-masked) update
+                    upd = dataclasses.replace(
+                        upd, bits=32.0 * strat.alpha * tree_size(params),
+                        beta_realized=1.0)
+            else:
+                alpha = bucket_alpha(strat.alpha, run_cfg.alpha_buckets) \
+                    if run_cfg.method == "heterofl" else 1.0
+                sub = shrinking.shrink(sorted_params, alpha, spec)
+                n_steps = jax.tree_util.tree_leaves(
+                    batches)[0].shape[0]
+                trained = client._local_steps(alpha, n_steps)(sub, batches)
+                update_sub = tree_sub(sub, trained)
+                full_update, wmask = shrinking.expand_update(
+                    update_sub, sorted_params, alpha, spec)
+                comp = policy.compress(full_update, env, k2)
+                mask = jax.tree.map(lambda a, b: a * b, wmask, comp.mask)
+                vals = jax.tree.map(lambda v, m: v * m, comp.values, mask)
+                n_samp = n_steps * run_cfg.batch_size
+                upd = ClientUpdate(
+                    values=vals, mask=mask, alpha=alpha,
+                    beta_target=strat.beta,
+                    beta_realized=float(comp.bits) / S_bits,
+                    bits=float(comp.bits), n_samples=n_samp,
+                    flops=alpha * W * n_samp)
+                if run_cfg.method == "fedhq":
+                    fedhq_L.append(policy.fedhq_levels(env))
+            updates.append(upd)
+            # realized costs (Eq. 6-9) with the *realized* wire size
+            t_com = upd.bits / env.rate
+            e_com = t_com * env.P_com
+            t_cmp = upd.alpha * env.tau * env.D * env.W / strat.freq
+            e_cmp = env.eps_hw * strat.freq ** 2 * upd.alpha \
+                * env.tau * env.D * env.W
+            lat = max(lat, t_cmp + t_com)
+            en += e_cmp + e_com
+            fl += upd.flops
+            cb += upd.bits
+
+        # ---- aggregation
+        if not updates:          # every device faded out this round
+            hist.rounds.append(RoundLog(round=t, latency_s=0.0, energy_j=0.0,
+                                        flops=0.0, comm_bits=0.0,
+                                        mean_alpha=0.0, mean_beta=0.0,
+                                        mean_gain=0.0))
+            continue
+        if run_cfg.method == "anycostfl" and run_cfg.use_aio:
+            weights = aggregation.optimal_coefficients(
+                [u.alpha for u in updates],
+                [max(u.beta_target, 1e-6) for u in updates])
+        elif run_cfg.method == "fedhq":
+            weights = fedhq_weights(fedhq_L)
+        else:
+            weights = aggregation.fedavg_coefficients(
+                [u.n_samples for u in updates])
+        params = server.aggregate(sorted_params, updates, weights=weights)
+
+        log = RoundLog(round=t, latency_s=lat, energy_j=en, flops=fl,
+                       comm_bits=cb,
+                       mean_alpha=float(np.mean([u.alpha for u in updates])),
+                       mean_beta=float(np.mean([u.beta_realized
+                                                for u in updates])),
+                       mean_gain=float(np.mean([s.gain for s in strategies])))
+        if t % run_cfg.eval_every == 0 or t == run_cfg.rounds - 1:
+            acc, loss = ev(params)
+            log.test_acc = float(acc)
+            log.test_loss = float(loss)
+            hist.best_acc = max(hist.best_acc, float(acc))
+            if verbose:
+                print(f"[{run_cfg.method}] round {t:3d} acc={acc:.3f} "
+                      f"loss={loss:.3f} lat={lat:.2f}s E={en:.2f}J "
+                      f"alpha={log.mean_alpha:.2f} beta={log.mean_beta:.4f}")
+        hist.rounds.append(log)
+    return hist

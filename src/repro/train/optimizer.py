@@ -1,0 +1,92 @@
+"""Optimizers as pure-JAX (init, update) pairs — no external deps.
+
+``update`` returns (new_params, new_state). Gradients and params are
+arbitrary pytrees. AdamW keeps f32 moments regardless of param dtype (the
+moments carry the same logical sharding as their parameter).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        new = jax.tree.map(lambda p, g: (p - lr * g.astype(p.dtype)), params,
+                           grads)
+        return new, {"step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                  params)}
+
+    def update(params, grads, state):
+        m = jax.tree.map(lambda mo, g: beta * mo + g.astype(jnp.float32),
+                         state["m"], grads)
+        new = jax.tree.map(lambda p, mo: p - (lr * mo).astype(p.dtype),
+                           params, m)
+        return new, {"step": state["step"] + 1, "m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, warmup: int = 0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        sched = lr
+        if warmup:
+            sched = lr * jnp.minimum(1.0, step / warmup)
+        m = jax.tree.map(lambda mo, g: b1 * mo + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda vo, g: b2 * vo + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, mo, vo):
+            mhat = mo / bc1
+            vhat = vo / bc2
+            delta = sched * (mhat / (jnp.sqrt(vhat) + eps)
+                             + weight_decay * p.astype(jnp.float32))
+            return (p.astype(jnp.float32) - delta).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, m, v)
+        return new, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr, **kw)
+    if name == "adamw":
+        return adamw(lr, **kw)
+    raise ValueError(name)

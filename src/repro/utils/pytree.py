@@ -1,0 +1,108 @@
+"""Pytree utilities used across the framework.
+
+All helpers are pure and jit-friendly unless noted. We deliberately avoid any
+dependency beyond jax/numpy so the substrate is self-contained.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of scalar elements in a pytree."""
+    return int(sum(np.prod(x.shape) if hasattr(x, "shape") else 1
+                   for x in jax.tree_util.tree_leaves(tree)))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    """Total bytes of a pytree (by dtype itemsize)."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        if hasattr(x, "shape"):
+            total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_dot(a: PyTree, b: PyTree) -> jax.Array:
+    parts = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return functools.reduce(jnp.add, jax.tree_util.tree_leaves(parts))
+
+
+def tree_l2(tree: PyTree) -> jax.Array:
+    """Global L2 norm over all leaves."""
+    sq = jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), tree)
+    return jnp.sqrt(functools.reduce(jnp.add, jax.tree_util.tree_leaves(sq)))
+
+
+def tree_any_nan(tree: PyTree) -> jax.Array:
+    flags = jax.tree.map(lambda x: jnp.any(~jnp.isfinite(x.astype(jnp.float32))),
+                         tree)
+    return functools.reduce(jnp.logical_or, jax.tree_util.tree_leaves(flags))
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def flatten_to_vector(tree: PyTree) -> tuple[jax.Array, Callable[[jax.Array], PyTree]]:
+    """Flatten a pytree of arrays into a single 1-D float32 vector.
+
+    Returns the vector and an unflatten closure. Used by the FL compression
+    path where the paper treats the whole update as one parameter vector.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    vec = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves]) \
+        if leaves else jnp.zeros((0,), jnp.float32)
+
+    def unflatten(v: jax.Array) -> PyTree:
+        out = []
+        off = 0
+        for shape, dtype, size in zip(shapes, dtypes, sizes):
+            out.append(v[off:off + size].reshape(shape).astype(dtype))
+            off += size
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return vec, unflatten
+
+
+def named_leaves(tree: PyTree, prefix: str = "") -> Iterable[tuple[str, Any]]:
+    """Yield (dotted_path, leaf) pairs for a nested dict pytree."""
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            yield from named_leaves(tree[k], f"{prefix}{k}." if prefix == ""
+                                    else f"{prefix}{k}.")
+    else:
+        yield prefix.rstrip("."), tree
+
+
+def map_named(fn: Callable[[str, Any], Any], tree: PyTree, prefix: str = "") -> PyTree:
+    """Map over a nested-dict pytree with access to the dotted path."""
+    if isinstance(tree, dict):
+        return {k: map_named(fn, v, f"{prefix}{k}.") for k, v in tree.items()}
+    return fn(prefix.rstrip("."), tree)

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# src layout import without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Keep CPU smoke tests single-device (the dry-run forces 512 devices in its
+# own process only — per the assignment, never globally).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,88 @@
+"""AIO aggregation + Theorem-1 optimality properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as A
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_weights_sum_to_one():
+    w = A.optimal_coefficients([0.3, 0.6, 1.0], [0.01, 0.05, 0.066])
+    assert abs(float(jnp.sum(w)) - 1.0) < 1e-6
+    assert bool(jnp.all(w > 0))
+
+
+def test_higher_fidelity_gets_higher_weight():
+    w = A.optimal_coefficients([0.25, 1.0], [0.01, 0.066])
+    assert float(w[1]) > float(w[0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.floats(0.25, 1.0), st.floats(1e-3, 1.0 / 15)),
+                min_size=2, max_size=6),
+       st.integers(0, 10 ** 6))
+def test_theorem1_optimality(strats, seed):
+    """p* minimizes sum p_i^2 d_i^2 over the simplex (Problem P2)."""
+    alphas = np.array([s[0] for s in strats])
+    betas = np.array([s[1] for s in strats])
+    d2 = np.asarray(A.divergence_factor(alphas, betas)) ** 2
+
+    def objective(p):
+        return float(np.sum(p ** 2 * d2))
+
+    p_star = np.asarray(A.optimal_coefficients(alphas, betas))
+    obj_star = objective(p_star)
+    rng = np.random.default_rng(seed)
+    for _ in range(16):
+        p = rng.dirichlet(np.ones(len(strats)))
+        assert obj_star <= objective(p) + 1e-9
+
+
+def test_aio_elementwise_semantics():
+    # device 0 covers elements {0,1}, device 1 covers {1,2}; element 3 nobody
+    u = jnp.asarray([[1.0, 2.0, 0.0, 0.0],
+                     [0.0, 4.0, 6.0, 0.0]])
+    m = jnp.asarray([[1.0, 1.0, 0.0, 0.0],
+                     [0.0, 1.0, 1.0, 0.0]])
+    w = jnp.asarray([0.25, 0.75])
+    out = A.aio_aggregate_stacked(u, m, w)
+    np.testing.assert_allclose(
+        np.asarray(out),
+        [1.0,                       # only dev0 -> value kept, weight cancels
+         (0.25 * 2 + 0.75 * 4),     # both cover
+         6.0,                       # only dev1
+         0.0])                      # nobody -> 0 (Eq. 5 first case)
+
+
+def test_aio_pytree_matches_stacked():
+    ks = jax.random.split(KEY, 6)
+    updates = [{"a": jax.random.normal(ks[i], (4, 5)),
+                "b": jax.random.normal(ks[i + 3], (7,))} for i in range(3)]
+    masks = [jax.tree.map(
+        lambda x, i=i: (jax.random.uniform(ks[i], x.shape) > 0.4
+                        ).astype(jnp.float32), u)
+        for i, u in enumerate(updates)]
+    w = jnp.asarray([0.2, 0.3, 0.5])
+    out = A.aio_aggregate(updates, masks, w)
+    for path in ("a", "b"):
+        stacked_u = jnp.stack([u[path].reshape(-1) for u in updates])
+        stacked_m = jnp.stack([m[path].reshape(-1) for m in masks])
+        ref = A.aio_aggregate_stacked(stacked_u, stacked_m, w)
+        np.testing.assert_allclose(np.asarray(out[path]).reshape(-1),
+                                   np.asarray(ref), atol=1e-6)
+
+
+def test_aio_degenerates_to_fedavg_when_full():
+    """g=1 for all devices -> AnycostFL degrades to conventional FL
+    (Proposition 1)."""
+    ks = jax.random.split(KEY, 3)
+    updates = [{"w": jax.random.normal(ks[i], (8,))} for i in range(3)]
+    masks = [jax.tree.map(lambda x: jnp.ones_like(x), u) for u in updates]
+    w = A.optimal_coefficients([1.0] * 3, [1.0] * 3)
+    np.testing.assert_allclose(np.asarray(w), [1 / 3] * 3, atol=1e-6)
+    out = A.aio_aggregate(updates, masks, w)
+    ref = sum(np.asarray(u["w"]) for u in updates) / 3
+    np.testing.assert_allclose(np.asarray(out["w"]), ref, atol=1e-6)

@@ -1,0 +1,66 @@
+"""Wire codec roundtrip + size-model consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codec, compression as C
+from repro.utils.pytree import flatten_to_vector
+
+
+def _compress(seed=0, beta=0.05, n=2048):
+    rng = np.random.default_rng(seed)
+    tree = {"w": jnp.asarray(rng.normal(0, 1, (n // 16, 16)).astype(
+        np.float32))}
+    comp = C.compress_update(tree, beta, jax.random.PRNGKey(seed))
+    vec, _ = flatten_to_vector(comp.values)
+    mvec, _ = flatten_to_vector(comp.mask)
+    return comp, np.asarray(vec), np.asarray(mvec)
+
+
+def test_roundtrip_exact():
+    comp, vec, mask = _compress()
+    av = np.abs(vec)[mask > 0]
+    u_min = float(av[av > 0].min()) if (av > 0).any() else 0.0
+    u_max = float(av.max()) if av.size else 0.0
+    L = int(comp.n_levels)
+    # reconstruct level indices from the dequantized values
+    step = max(u_max - u_min, 1e-20) / max(L, 1)
+    levels = np.where(mask > 0,
+                      np.round((np.abs(vec) - u_min) / step), 0
+                      ).astype(np.int32)
+    enc = codec.encode_update(vec, levels, mask, u_min, u_max, L)
+    dec = codec.decode_update(enc)
+    np.testing.assert_allclose(dec, vec, atol=step * 0.51 + 1e-7)
+    assert (dec == 0).sum() >= (mask == 0).sum()
+
+
+def test_size_close_to_model():
+    """Packed bytes land within ~2.5x of the entropy size model (Rice vs
+    entropy bound + fixed-width levels vs entropy-coded levels)."""
+    comp, vec, mask = _compress(beta=0.03, n=8192)
+    av = np.abs(vec)[mask > 0]
+    u_min = float(av[av > 0].min())
+    u_max = float(av.max())
+    L = int(comp.n_levels)
+    step = max(u_max - u_min, 1e-20) / max(L, 1)
+    levels = np.where(mask > 0,
+                      np.round((np.abs(vec) - u_min) / step), 0
+                      ).astype(np.int32)
+    enc = codec.encode_update(vec, levels, mask, u_min, u_max, L)
+    model_bits = float(comp.bits)
+    assert enc.bits < 2.5 * model_bits
+    assert enc.bits < 0.35 * 32 * vec.size  # far below raw fp32
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(2, 64))
+def test_bitio_roundtrip(seed, k):
+    rng = np.random.default_rng(seed)
+    w = codec.BitWriter()
+    vals = rng.integers(0, 2 ** 16, 20)
+    for v in vals:
+        w.write(int(v), 17)
+    r = codec.BitReader(w.to_bytes())
+    got = [r.read(17) for _ in vals]
+    assert got == [int(v) for v in vals]

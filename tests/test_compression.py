@@ -1,0 +1,123 @@
+"""FGC property + unit tests (paper §III-C, Appendix A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tree(key, scale=1.0):
+    ks = jax.random.split(key, 3)
+    return {
+        "conv": {"w": jax.random.normal(ks[0], (3, 3, 4, 8)) * scale,
+                 "b": jax.random.normal(ks[1], (8,)) * scale},
+        "dense": {"w": jax.random.normal(ks[2], (16, 8)) * scale},
+    }
+
+
+def test_kernel_segments_structure():
+    tree = _tree(KEY)
+    seg, K = C.kernel_segments(tree)
+    n = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))
+    assert seg.shape == (n,)
+    assert K == 8 + 1 + 8  # conv cout + bias(1 kernel) + dense cols
+    assert seg.max() == K - 1
+
+
+@pytest.mark.parametrize("rho", [0.0, 0.25, 0.5, 0.9])
+def test_sparsify_keeps_fraction(rho):
+    tree = _tree(KEY)
+    from repro.utils.pytree import flatten_to_vector
+    vec, _ = flatten_to_vector(tree)
+    seg, K = C.kernel_segments(tree)
+    mask = C.sparsify_mask(vec, seg, K, jnp.float32(rho))
+    norms = C.kernel_norms(vec, seg, K)
+    kept_kernels = 0
+    thr = jnp.quantile(norms, rho)
+    kept_kernels = int(jnp.sum(norms >= thr))
+    # mask covers exactly the elements of kept kernels
+    kept_elems = int(jnp.sum(mask))
+    expect = int(sum(int(jnp.sum(jnp.asarray(seg) == k)) for k in range(K)
+                     if float(norms[k]) >= float(thr)))
+    assert kept_elems == expect
+    assert kept_kernels >= max(int((1 - rho) * K), 1) - 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 64), st.integers(0, 2 ** 31 - 1))
+def test_quantizer_unbiased(levels, seed):
+    """E[quantized] = value (Eq. 4 stochastic rounding is unbiased)."""
+    v = jnp.asarray([0.3, -0.7, 0.05, 0.9, -0.2])
+    mask = jnp.ones_like(v)
+    reps = 600
+    keys = jax.random.split(jax.random.PRNGKey(seed), reps)
+    qs = jax.vmap(lambda k: C.prob_quantize(v, mask, levels, k).values)(keys)
+    mean = jnp.mean(qs, 0)
+    # per-draw worst-case Bernoulli SD = step/2; allow 5 sigma of the mean
+    step = (0.9 - 0.05) / levels
+    tol = 5 * (step / 2) / np.sqrt(reps) + 1e-6
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(v), atol=tol)
+
+
+def test_quantizer_grid_membership():
+    v = jax.random.normal(KEY, (512,))
+    mask = (jax.random.uniform(jax.random.PRNGKey(1), (512,)) > 0.4
+            ).astype(jnp.float32)
+    L = 8
+    q = C.prob_quantize(v, mask, L, jax.random.PRNGKey(2))
+    nz = np.asarray(mask) > 0
+    vals = np.abs(np.asarray(q.values))[nz]
+    grid = np.asarray(q.u_min) + np.arange(L + 1) * (
+        np.asarray(q.u_max) - np.asarray(q.u_min)) / L
+    d = np.min(np.abs(vals[:, None] - grid[None, :]), axis=1)
+    assert d.max() < 1e-5
+    assert np.all(np.asarray(q.values)[~nz] == 0)
+
+
+def test_bits_decrease_with_compression():
+    tree = _tree(KEY)
+    key = jax.random.PRNGKey(3)
+    c_small = C.compress_update(tree, 0.01, key)
+    c_big = C.compress_update(tree, 0.5, key)
+    assert float(c_small.bits) < float(c_big.bits)
+    n = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))
+    assert float(c_big.bits) < 32.0 * n  # always smaller than raw fp32
+
+
+def test_lemma1_divergence_bound():
+    """Empirical ||u - cmprs(u)||^2 <= Lemma-1 bound (with analytic rho/L)."""
+    from repro.core.aggregation import divergence_factor
+    from repro.utils.pytree import flatten_to_vector
+    rng = np.random.default_rng(0)
+    # Lemma 1 assumes |u| ~ U(0, umax)
+    u = rng.uniform(-1, 1, size=4096).astype(np.float32)
+    tree = {"w": jnp.asarray(u.reshape(64, 64))}
+    vec, _ = flatten_to_vector(tree)
+    for alpha in (0.5, 1.0):
+        for beta in (0.02, 0.06):
+            # shrink = drop the (1-alpha) smallest |elements| (appendix view)
+            thr = np.quantile(np.abs(u), 1 - alpha)
+            shrunk = jnp.where(jnp.abs(vec) >= thr, vec, 0.0)
+            comp = C.compress_update({"w": shrunk.reshape(64, 64)}, beta,
+                                     jax.random.PRNGKey(1))
+            flat_out, _ = flatten_to_vector(comp.values)
+            err = float(jnp.sum((vec - flat_out) ** 2))
+            bound = float(divergence_factor(alpha, beta) ** 2
+                          * jnp.sum(vec ** 2))
+            assert err <= bound * 1.35, (alpha, beta, err, bound)
+
+
+def test_beta_planner_monotone():
+    tree = _tree(KEY, scale=0.1)
+    planner = C.BetaPlanner.fit(tree, jax.random.PRNGKey(0))
+    rhos = []
+    for beta in (0.005, 0.02, 0.08, 0.3):
+        rho, L = planner.plan(beta)
+        assert 0.0 <= rho <= 1.0 and L >= 2
+        rhos.append(rho)
+    # more budget -> (weakly) less sparsification
+    assert all(a >= b - 1e-9 for a, b in zip(rhos, rhos[1:]))

@@ -1,0 +1,65 @@
+"""Numerics of the compressed cross-pod gradient sync (subprocess with 2
+host devices acting as 2 pods)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core.distributed import anycost_gradient_sync, mean_gradient_sync
+
+mesh = jax.make_mesh((2,), ("pod",))
+g = {"w": (jnp.arange(64, dtype=jnp.float32).reshape(2, 32) + 1.0) / 64.0,
+     "b": jnp.asarray([[1.0, -2.0], [3.0, -4.0]])}
+# leaves have a leading per-pod dim -> shard over pod
+specs = jax.tree.map(lambda _: P("pod"), g)
+
+def run(fn):
+    out = jax.shard_map(fn, mesh=mesh, in_specs=(specs,),
+                        out_specs=jax.tree.map(lambda _: P("pod"), g),
+                        check_vma=False)(g)
+    return jax.tree.map(np.asarray, out)
+
+exact = run(lambda x: mean_gradient_sync(x, "pod"))
+lossless = run(lambda x: anycost_gradient_sync(x, "pod", keep_frac=1.0,
+                                               quantize=False))
+quant = run(lambda x: anycost_gradient_sync(x, "pod", keep_frac=1.0,
+                                            quantize=True))
+sparse = run(lambda x: anycost_gradient_sync(x, "pod", keep_frac=0.25,
+                                             quantize=False))
+err_lossless = max(float(np.abs(exact[k] - lossless[k]).max()) for k in exact)
+err_quant = max(float(np.abs(exact[k] - quant[k]).max()) for k in exact)
+# sparse path: kept coordinates must match the exact mean where both pods
+# kept them; everything is bounded by the max gradient magnitude
+amax = max(float(np.abs(exact[k]).max()) for k in exact)
+err_sparse = max(float(np.abs(exact[k] - sparse[k]).max()) for k in exact)
+print(json.dumps({"err_lossless": err_lossless, "err_quant": err_quant,
+                  "err_sparse": err_sparse, "amax": amax}))
+"""
+
+
+@pytest.mark.slow
+def test_anycost_sync_numerics():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    # keep_frac=1, no quant -> exact AIO mean == psum mean
+    assert res["err_lossless"] < 1e-6
+    # int8 quantization error bounded by one step of the amax scale
+    assert res["err_quant"] <= res["amax"] / 127.0 + 1e-6
+    # sparsified sync stays bounded (drops only small coordinates)
+    assert res["err_sparse"] <= res["amax"]

@@ -1,0 +1,31 @@
+"""The examples are part of the public API surface — keep them green."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.slow
+def test_quickstart_runs():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "examples/quickstart.py"],
+                         cwd=ROOT, env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "after 1 round" in out.stdout
+    assert "uplink" in out.stdout
+
+
+@pytest.mark.slow
+def test_serve_driver_runs():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen2-7b",
+         "--reduced", "--batch", "1", "--prompt-len", "8",
+         "--decode-tokens", "4", "--alpha", "0.5"],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "tok/s" in out.stdout

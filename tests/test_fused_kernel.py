@@ -1,0 +1,41 @@
+"""Fused sparsify+quantize kernel vs the composition oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fused_compress import fused_ref, fused_sparsify_quantize
+from repro.kernels import ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("K,C", [(32, 256), (50, 130), (8, 512)])
+@pytest.mark.parametrize("levels", [8, 64])
+def test_fused_matches_composition(K, C, levels):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (K, C))
+    rand = jax.random.uniform(ks[1], (K, C))
+    norms = ref.kernel_l2_ref(x)
+    thr = jnp.float32(np.median(np.asarray(norms)))
+    keep = norms >= thr
+    xm = x * keep[:, None]
+    av = jnp.abs(xm)
+    u_min = jnp.min(jnp.where(av > 0, av, jnp.inf))
+    u_max = jnp.max(av)
+    q, lvl = fused_sparsify_quantize(x, norms, thr, u_min, u_max,
+                                     jnp.float32(levels), rand,
+                                     interpret=True, bk=16, bc=128)
+    qr, lr = fused_ref(x, norms, thr, u_min, u_max, levels, rand)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(qr), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(lvl), np.asarray(lr))
+
+
+def test_fused_zeroes_dropped_rows():
+    x = jnp.ones((16, 128))
+    norms = jnp.concatenate([jnp.zeros(8), jnp.full(8, 100.0)])
+    q, lvl = fused_sparsify_quantize(
+        x, norms, jnp.float32(1.0), jnp.float32(1.0), jnp.float32(1.0),
+        jnp.float32(4), jnp.zeros((16, 128)), interpret=True, bk=8, bc=128)
+    assert float(jnp.abs(q[:8]).max()) == 0.0
+    assert float(jnp.abs(q[8:]).min()) > 0.0

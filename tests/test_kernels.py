@@ -1,0 +1,77 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import aio_agg, quantize, ref, sparsify
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("I,N", [(2, 512), (7, 3000), (16, 1024),
+                                 (3, 17), (60, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_aio_aggregate(I, N, dtype):
+    ks = jax.random.split(KEY, 3)
+    u = jax.random.normal(ks[0], (I, N), dtype)
+    m = (jax.random.uniform(ks[1], (I, N)) > 0.5).astype(dtype)
+    w = jax.random.uniform(ks[2], (I,), jnp.float32)
+    out = aio_agg.aio_aggregate(u, m, w, interpret=True, block_n=512)
+    expect = ref.aio_aggregate_ref(u, m, w)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=tol)
+
+
+@pytest.mark.parametrize("K,C", [(8, 128), (100, 700), (256, 512),
+                                 (33, 1000), (1000, 9)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_sumsq(K, C, dtype):
+    x = jax.random.normal(KEY, (K, C), dtype)
+    out = sparsify.kernel_l2(x, interpret=True)
+    expect = ref.kernel_l2_ref(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=3e-3 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("K,C", [(64, 256), (37, 129)])
+def test_threshold_apply(K, C):
+    x = jax.random.normal(KEY, (K, C))
+    norms = ref.kernel_l2_ref(x)
+    thr = jnp.float32(np.median(np.asarray(norms)))
+    xo, mo = sparsify.threshold_apply(x, norms, thr, interpret=True)
+    xr, mr = ref.threshold_mask_ref(x, norms, thr)
+    np.testing.assert_allclose(np.asarray(xo), np.asarray(xr), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(mo), np.asarray(mr), atol=0)
+
+
+@pytest.mark.parametrize("N", [512, 5000, 2048])
+@pytest.mark.parametrize("levels", [2, 16, 255])
+def test_prob_quantize(N, levels):
+    ks = jax.random.split(KEY, 3)
+    v = jax.random.normal(ks[0], (N,))
+    mask = (jax.random.uniform(ks[1], (N,)) > 0.3).astype(jnp.float32)
+    rand = jax.random.uniform(ks[2], (N,))
+    av = jnp.abs(v) * mask
+    u_min = jnp.min(jnp.where((mask > 0) & (av > 0), av, jnp.inf))
+    u_max = jnp.max(jnp.where(mask > 0, av, -jnp.inf))
+    q, lvl = quantize.prob_quantize(v, mask, u_min, u_max,
+                                    jnp.float32(levels), rand,
+                                    interpret=True, block_n=512)
+    qr, lr = ref.quantize_ref(v, mask, u_min, u_max, jnp.float32(levels),
+                              rand)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(qr), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(lvl), np.asarray(lr))
+
+
+def test_ops_dispatch_matches_ref():
+    from repro.kernels import ops
+    ks = jax.random.split(KEY, 3)
+    u = jax.random.normal(ks[0], (4, 300))
+    m = (jax.random.uniform(ks[1], (4, 300)) > 0.5).astype(jnp.float32)
+    w = jax.random.uniform(ks[2], (4,))
+    a = ops.aio_aggregate_op(u, m, w, use_pallas=False)
+    b = ops.aio_aggregate_op(u, m, w, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

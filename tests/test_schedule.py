@@ -1,0 +1,82 @@
+"""Closed-form P4 solver properties (paper §IV-D)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedule as S
+
+
+def _env(T_max=10.0, E_max=6.0, rate=2e6, W=5e6, D=64, eps=7.5e-27,
+         P=0.1, f_min=0.3e9, f_max=2.0e9):
+    return S.DeviceEnv(T_max=T_max, E_max=E_max, P_com=P, rate=rate, W=W,
+                       D=D, tau=1.0, eps_hw=eps, S_bits=53.22e6 * 1e0,
+                       f_min=f_min, f_max=f_max)
+
+
+def test_solver_feasible_default():
+    st_ = S.solve(_env())
+    assert st_.feasible
+    assert 0.25 <= st_.alpha <= 1.0
+    assert 0.0 < st_.beta <= 1.0 / 15.0 + 1e-9
+    assert 0.3e9 <= st_.freq <= 2.0e9
+
+
+def test_budgets_bind_at_optimum():
+    """Lemma 3: both constraints tight (within projection tolerance)."""
+    env = _env()
+    st_ = S.solve(env)
+    # if no box constraint clipped, the split is exactly tight
+    if 0.25 < st_.alpha < 1.0 and env.beta_min < st_.beta < env.beta_max \
+            and env.f_min < st_.freq < env.f_max:
+        assert abs(st_.T_cmp + st_.T_com - env.T_max) < 0.05 * env.T_max
+        assert abs(st_.E_cmp + st_.E_com - env.E_max) < 0.05 * env.E_max
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(2.0, 20.0), st.floats(1.0, 12.0),
+       st.floats(1e5, 2e7), st.floats(1e6, 5e7), st.integers(8, 512))
+def test_solver_respects_constraints(T_max, E_max, rate, W, D):
+    env = _env(T_max=T_max, E_max=E_max, rate=rate, W=W, D=D)
+    st_ = S.solve(env)
+    assert 0.25 <= st_.alpha <= 1.0 + 1e-9
+    assert env.beta_min - 1e-12 <= st_.beta <= env.beta_max + 1e-9
+    assert env.f_min - 1 <= st_.freq <= env.f_max + 1
+    if st_.feasible:
+        assert st_.T_cmp + st_.T_com <= T_max * 1.01
+        assert st_.E_cmp + st_.E_com <= E_max * 1.01
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(4.0, 20.0), st.floats(2.0, 12.0), st.integers(0, 2 ** 30))
+def test_solver_beats_random_feasible(T_max, E_max, seed):
+    """g(solution) >= g(any feasible random strategy) — optimality check."""
+    env = _env(T_max=T_max, E_max=E_max)
+    st_ = S.solve(env)
+    if not st_.feasible:
+        return
+    rng = np.random.default_rng(seed)
+    for _ in range(40):
+        alpha = rng.uniform(env.alpha_min, 1.0)
+        beta = rng.uniform(env.beta_min, env.beta_max)
+        f = rng.uniform(env.f_min, env.f_max)
+        work = env.tau * env.D * env.W * alpha
+        t = work / f + alpha * beta * env.S_bits / env.rate
+        e = env.eps_hw * f ** 2 * work \
+            + alpha * beta * env.S_bits / env.rate * env.P_com
+        if t <= env.T_max and e <= env.E_max:
+            assert st_.gain >= alpha ** 4 * beta - 1e-6
+
+
+def test_more_budget_more_gain():
+    gains = [S.solve(_env(E_max=e)).gain for e in (2.0, 4.0, 8.0)]
+    assert gains[0] <= gains[1] + 1e-9 <= gains[2] + 2e-9
+
+
+def test_solution_matches_numeric_argmax_of_projected_gain():
+    env = _env()
+    lo, hi = S.phi_bounds(env)
+    grid = np.linspace(lo, hi, 4001)
+    # realized (projected) gain along the grid — what Problem P1 scores
+    g = [S._recover(p, env).gain for p in grid]
+    st_ = S.solve(env)
+    assert st_.gain >= max(g) - 1e-9

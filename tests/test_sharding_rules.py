@@ -1,0 +1,56 @@
+"""Logical-axis rule translation: divisibility fallbacks, mesh-axis
+filtering, deduplication (no mesh axis used twice in one spec)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as shd
+
+
+@pytest.fixture
+def mesh():
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def test_identity_outside_context():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert shd.lc(x, ("batch", "embed")) is x
+    assert not shd.active()
+
+
+def test_spec_translation(mesh):
+    with shd.use_sharding(mesh):
+        spec = shd.spec_for(("fsdp", "tp"))
+        assert spec == P("data", "model")
+        # unknown / None axes replicate
+        assert shd.spec_for((None, "nope")) == P(None, None)
+
+
+def test_missing_mesh_axis_dropped(mesh):
+    # "pod" doesn't exist on a single-pod mesh -> silently dropped
+    with shd.use_sharding(mesh):
+        spec = shd.spec_for(("batch",))   # rule: ("pod","data")
+        assert spec in (P("data"), P(("data",)))
+
+
+def test_duplicate_mesh_axis_suppressed(mesh):
+    with shd.use_sharding(mesh, {"x1": "model", "x2": "model"}):
+        spec = shd.spec_for(("x1", "x2"))
+        assert spec == P("model", None)
+
+
+def test_safe_spec_divisibility(mesh):
+    with shd.use_sharding(mesh, {"v": "model"}):
+        n = mesh.shape["model"]
+        # divisible dim keeps the axis
+        assert shd.safe_spec((n * 3, 4), ("v", None))[0] == "model"
+        # non-divisible dim drops it
+        if n > 1:
+            assert shd.safe_spec((n * 3 + 1, 4), ("v", None))[0] is None
+
+
+def test_rules_override(mesh):
+    with shd.use_sharding(mesh, {"cache_seq": "model"}):
+        assert shd.spec_for(("cache_seq",)) == P("model")

@@ -1,0 +1,140 @@
+"""EMS tests: channel sorting preserves the function; shrink/expand
+round-trips; masks mark exactly the sub-model coordinates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import shrinking as S
+from repro.models.registry import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cnn():
+    cfg = get_config("fmnist-cnn")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    return cfg, model, params
+
+
+def test_sort_preserves_function_cnn():
+    cfg, model, params = _cnn()
+    spec = S.cnn_shrink_spec(cfg)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (3, 28, 28, 1))
+    before = model.forward(params, {"images": imgs})
+    after = model.forward(S.sort_channels(params, spec), {"images": imgs})
+    np.testing.assert_allclose(np.asarray(before), np.asarray(after),
+                               atol=1e-4)
+
+
+def test_sort_preserves_function_vgg():
+    cfg = get_config("vgg9-cifar")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    spec = S.cnn_shrink_spec(cfg)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    before = model.forward(params, {"images": imgs})
+    after = model.forward(S.sort_channels(params, spec), {"images": imgs})
+    np.testing.assert_allclose(np.asarray(before), np.asarray(after),
+                               atol=1e-4)
+
+
+def test_sort_preserves_function_transformer():
+    cfg = get_config("qwen2-7b").reduced()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    spec = S.transformer_shrink_spec(cfg, params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    before = model.forward(params, {"tokens": toks}, remat="none")
+    after = model.forward(S.sort_channels(params, spec), {"tokens": toks},
+                          remat="none")
+    np.testing.assert_allclose(np.asarray(before), np.asarray(after),
+                               atol=2e-3)
+
+
+@pytest.mark.parametrize("alpha", [0.25, 0.5, 1.0])
+def test_shrink_shapes_and_runs(alpha):
+    cfg, model, params = _cnn()
+    spec = S.cnn_shrink_spec(cfg)
+    sorted_p = S.sort_channels(params, spec)
+    sub = S.shrink(sorted_p, alpha, spec)
+    widths = spec.widths(alpha)
+    assert sub["conv1"]["w"].shape[3] == widths["conv1"]
+    assert sub["conv2"]["w"].shape[2] == widths["conv1"]
+    assert sub["dense1"]["w"].shape[0] == 49 * widths["conv2"]
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (2, 28, 28, 1))
+    logits = model.forward(sub, {"images": imgs})
+    assert logits.shape == (2, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_shrink_alpha1_identity():
+    cfg, model, params = _cnn()
+    spec = S.cnn_shrink_spec(cfg)
+    sorted_p = S.sort_channels(params, spec)
+    sub = S.shrink(sorted_p, 1.0, spec)
+    for a, b in zip(jax.tree_util.tree_leaves(sorted_p),
+                    jax.tree_util.tree_leaves(sub)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("alpha", [0.25, 0.6])
+def test_expand_update_roundtrip(alpha):
+    cfg, model, params = _cnn()
+    spec = S.cnn_shrink_spec(cfg)
+    sorted_p = S.sort_channels(params, spec)
+    sub = S.shrink(sorted_p, alpha, spec)
+    full, mask = S.expand_update(sub, sorted_p, alpha, spec)
+    # shapes match the full model
+    for f, p in zip(jax.tree_util.tree_leaves(full),
+                    jax.tree_util.tree_leaves(sorted_p)):
+        assert f.shape == p.shape
+    # re-shrinking the padded update recovers the sub values
+    again = S.shrink(full, alpha, spec)
+    for a, b in zip(jax.tree_util.tree_leaves(again),
+                    jax.tree_util.tree_leaves(sub)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    # mask is 1 exactly where values were placed
+    for f, m in zip(jax.tree_util.tree_leaves(full),
+                    jax.tree_util.tree_leaves(mask)):
+        assert set(np.unique(np.asarray(m))) <= {0.0, 1.0}
+    # mask fraction ~ param fraction = effective alpha
+    n_cover = sum(float(jnp.sum(m)) for m in jax.tree_util.tree_leaves(mask))
+    n_total = sum(int(np.prod(p.shape))
+                  for p in jax.tree_util.tree_leaves(sorted_p))
+    eff = S.effective_alpha(spec, alpha, sorted_p)
+    assert abs(n_cover / n_total - eff) < 1e-6
+
+
+def test_shrunk_config_transformer():
+    cfg = get_config("qwen2-7b").reduced()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    spec = S.transformer_shrink_spec(cfg, params)
+    sub_cfg = S.shrunk_config(cfg, 0.25, spec)
+    assert sub_cfg.d_ff < cfg.d_ff
+    sorted_p = S.sort_channels(params, spec)
+    sub = S.shrink(sorted_p, 0.25, spec)
+    sub_model = build_model(sub_cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    logits = sub_model.forward(sub, {"tokens": toks}, remat="none")
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_shrink_mamba_width():
+    cfg = get_config("falcon-mamba-7b").reduced()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    spec = S.transformer_shrink_spec(cfg, params)
+    assert any(g.name == "d_inner" for g in spec.groups)
+    sub_cfg = S.shrunk_config(cfg, 0.25, spec)
+    sub = S.shrink(S.sort_channels(params, spec), 0.25, spec)
+    sub_model = build_model(sub_cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0,
+                              cfg.vocab_size)
+    logits = sub_model.forward(sub, {"tokens": toks}, remat="none")
+    assert bool(jnp.all(jnp.isfinite(logits)))

@@ -1,0 +1,94 @@
+"""Per-arch smoke tests: reduced variant of each assigned architecture runs
+one forward + one train step on CPU; output shapes + finiteness asserted.
+Decode smoke for every family with a serve path."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models.registry import build_model, loss_fn
+from repro.train.optimizer import adamw
+
+B, S = 2, 64
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(ks[0], (B, S), 0,
+                                          cfg.vocab_size)}
+    if cfg.family == "vlm":
+        v = cfg.vlm
+        batch["patch_embeds"] = jax.random.normal(
+            ks[1], (B, v.n_patches, v.patch_embed_dim), cfg.param_dtype)
+    if cfg.family == "encdec":
+        e = cfg.encdec
+        batch["frames"] = jax.random.normal(
+            ks[2], (B, e.n_frames, cfg.d_model), cfg.param_dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_smoke(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits = model.forward(params, batch, remat="none")
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    opt = adamw(1e-3)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    @jax.jit
+    def step(p, s, b):
+        loss, g = jax.value_and_grad(
+            lambda q: loss_fn(model, q, b, remat="none"))(p)
+        p2, s2 = opt.update(p, g, s)
+        return p2, s2, loss
+
+    p2, s2, loss = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(loss))
+    # params actually changed
+    l0 = jax.tree_util.tree_leaves(params)[0]
+    l1 = jax.tree_util.tree_leaves(p2)[0]
+    assert not bool(jnp.allclose(l0, l1))
+    # one more step decreases loss on the same batch (sanity, not strict)
+    _, _, loss2 = step(p2, s2, batch)
+    assert bool(jnp.isfinite(loss2))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_decode_smoke(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    if model.decode is None:
+        pytest.skip("no decode path (cnn)")
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(B, 16)
+    tok = jnp.ones((B, 1), jnp.int32)
+    for _ in range(3):
+        logits, cache = model.decode(params, cache, {"tokens": tok})
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ["fmnist-cnn", "vgg9-cifar"])
+def test_cnn_smoke(arch):
+    from repro.models.cnn import image_shape
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    shape = image_shape(cfg)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (4,) + shape)
+    logits = model.forward(params, {"images": imgs})
+    assert logits.shape == (4, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))

@@ -1,0 +1,68 @@
+"""Wireless / energy / fleet system-model tests (paper Eq. 6-9, §V-A.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sysmodel import energy as E
+from repro.sysmodel.population import FleetConfig, make_fleet
+from repro.sysmodel.wireless import (WirelessConfig, achievable_rate,
+                                     drop_positions, path_gain)
+
+
+def test_rate_decreases_with_distance():
+    cfg = WirelessConfig()
+    r = achievable_rate(np.array([50.0, 200.0, 550.0]), cfg)
+    assert r[0] > r[1] > r[2] > 0
+
+
+def test_rate_increases_with_power():
+    cfg = WirelessConfig()
+    lo = achievable_rate(np.array([300.0]), cfg, tx_power_w=0.05)
+    hi = achievable_rate(np.array([300.0]), cfg, tx_power_w=0.4)
+    assert hi[0] > lo[0]
+
+
+def test_positions_inside_cell():
+    rng = np.random.default_rng(0)
+    cfg = WirelessConfig()
+    pos = drop_positions(rng, 500, cfg)
+    d = np.linalg.norm(pos, axis=-1)
+    assert d.max() <= cfg.cell_radius_m + 1e-9
+    # uniform in area -> mean distance ~ 2R/3
+    assert abs(d.mean() - 2 * cfg.cell_radius_m / 3) < 30
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.25, 1.0), st.floats(0.3e9, 2e9), st.floats(1e6, 1e8))
+def test_eq6_eq7_scaling(alpha, f, W):
+    """T_cmp ~ alpha/f; E_cmp ~ alpha f^2 (Eq. 6-7)."""
+    t = E.compute_time(alpha, W, 64, 1.0, f)
+    e = E.compute_energy(alpha, W, 64, 1.0, f, 7.5e-27)
+    assert t == pytest.approx(64 * alpha * W / f)
+    t2 = E.compute_time(alpha, W, 64, 1.0, 2 * f)
+    e2 = E.compute_energy(alpha, W, 64, 1.0, 2 * f, 7.5e-27)
+    assert t2 == pytest.approx(t / 2)
+    assert e2 == pytest.approx(4 * e)
+
+
+def test_round_cost_composition():
+    t, e = E.round_cost(0.5, 0.05, 1e9, W=1e7, D=64, tau=1.0,
+                        eps_hw=7.5e-27, S_bits=53.22e6, rate=2e6,
+                        tx_power_w=0.1)
+    assert t > 0 and e > 0
+    t_com = E.comm_time(0.5, 0.05, 53.22e6, 2e6)
+    assert t > t_com  # includes compute
+
+
+def test_fleet_heterogeneity_knobs():
+    rng = np.random.default_rng(0)
+    sizes = np.full(16, 64)
+    f_lo = make_fleet(rng, FleetConfig(n_devices=16, eps_var_scale=0.25),
+                      sizes)
+    rng = np.random.default_rng(0)
+    f_hi = make_fleet(rng, FleetConfig(n_devices=16, eps_var_scale=4.0),
+                      sizes)
+    assert np.var(f_hi.eps_hw) > np.var(f_lo.eps_hw)
+    envs = f_lo.round_envs(np.random.default_rng(1), W=1e7, S_bits=53e6)
+    assert len(envs) == 16
+    assert all(e.rate > 0 for e in envs)

@@ -1,0 +1,123 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Covers: the single-round AnycostFL pipeline (shrink -> train -> compress ->
+AIO aggregate -> apply) improving the global model; gains/convergence
+machinery; Proposition-1 degradation; and the sub-model serving property
+(Fig. 5d direction)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import aggregation, compression, gains, schedule, shrinking
+from repro.core.anycost import AnycostClient, AnycostServer
+from repro.data.synthetic import make_image_task
+from repro.models.registry import build_model, cls_loss
+from repro.utils.pytree import tree_size
+
+
+def _setup(seed=0):
+    rng = np.random.default_rng(seed)
+    cfg = get_config("fmnist-cnn")
+    model = build_model(cfg)
+    spec = shrinking.cnn_shrink_spec(cfg)
+    train, test = make_image_task(rng, 512, 256, shape=(28, 28, 1))
+    params = model.init(jax.random.PRNGKey(seed))
+    return rng, cfg, model, spec, train, test, params
+
+
+def _strategy(alpha, beta):
+    return schedule.Strategy(alpha=alpha, beta=beta, freq=1e9, phi=0.5,
+                             varphi=0.5, gain=alpha ** 4 * beta,
+                             T_cmp=1, T_com=1, E_cmp=1, E_com=1,
+                             feasible=True)
+
+
+def test_single_round_improves_loss():
+    rng, cfg, model, spec, train, test, params = _setup()
+    client = AnycostClient(model, spec, lr=0.1, batch_size=64)
+    server = AnycostServer(model, spec)
+    tx, ty = jnp.asarray(test.x), jnp.asarray(test.y)
+
+    def test_loss(p):
+        return float(cls_loss(model.forward(p, {"images": tx}), ty))
+
+    loss0 = test_loss(params)
+    key = jax.random.PRNGKey(1)
+    for _ in range(3):
+        sorted_p = server.sort(params)
+        updates = []
+        for i, (alpha, beta) in enumerate([(1.0, 0.06), (0.55, 0.05),
+                                           (0.25, 0.03)]):
+            key, k1 = jax.random.split(key)
+            idx = rng.integers(0, 512, (4, 64))
+            batches = {"images": jnp.asarray(train.x[idx]),
+                       "labels": jnp.asarray(train.y[idx])}
+            updates.append(client.local_round(sorted_p, _strategy(alpha, beta),
+                                              batches, k1))
+        params = server.aggregate(sorted_p, updates)
+    assert test_loss(params) < loss0 - 0.05
+
+
+def test_submodels_of_trained_global_work():
+    """Fig. 5d: sub-models sliced from the aggregated global model still
+    classify (better than chance) without retraining."""
+    rng, cfg, model, spec, train, test, params = _setup()
+    client = AnycostClient(model, spec, lr=0.1, batch_size=64)
+    server = AnycostServer(model, spec)
+    key = jax.random.PRNGKey(2)
+    for _ in range(8):
+        sorted_p = server.sort(params)
+        updates = []
+        for alpha, beta in [(1.0, 0.06), (0.55, 0.05), (0.4, 0.04)]:
+            key, k1 = jax.random.split(key)
+            idx = rng.integers(0, 512, (6, 64))
+            batches = {"images": jnp.asarray(train.x[idx]),
+                       "labels": jnp.asarray(train.y[idx])}
+            updates.append(client.local_round(sorted_p, _strategy(alpha, beta),
+                                              batches, k1))
+        params = server.aggregate(sorted_p, updates)
+    tx, ty = jnp.asarray(test.x), np.asarray(test.y)
+    sorted_p = server.sort(params)
+    accs = {}
+    for alpha in (1.0, 0.55):
+        sub = shrinking.shrink(sorted_p, alpha, spec)
+        logits = model.forward(sub, {"images": tx})
+        accs[alpha] = float(np.mean(np.argmax(np.asarray(logits), -1) == ty))
+    assert accs[1.0] > 0.2          # trained at all
+    assert accs[0.55] > 0.15        # sub-model retains most of it
+
+
+def test_proposition1_full_gain_is_fedavg():
+    """g=1 (alpha=beta=1): AIO with p* equals plain FedAvg averaging."""
+    w = aggregation.optimal_coefficients([1.0, 1.0], [1.0, 1.0])
+    np.testing.assert_allclose(np.asarray(w), [0.5, 0.5], atol=1e-7)
+
+
+def test_convergence_factor_monotone_in_gain():
+    zs = [float(gains.contraction_factor(g, nu=1.0, lam=4.0, eps=0.5))
+          for g in (0.1, 0.5, 1.0)]
+    assert zs[0] > zs[1] > zs[2]
+    assert gains.rounds_to_epsilon(0.01, 1.0, 0.9, nu=1.0, lam=4.0,
+                                   eps=0.5) < \
+        gains.rounds_to_epsilon(0.01, 1.0, 0.2, nu=1.0, lam=4.0, eps=0.5)
+
+
+def test_compressed_bits_track_beta_target():
+    """The realized wire size lands near the planner's beta target."""
+    rng, cfg, model, spec, train, test, params = _setup()
+    client = AnycostClient(model, spec, lr=0.1, batch_size=64)
+    server = AnycostServer(model, spec)
+    sorted_p = server.sort(params)
+    idx = rng.integers(0, 512, (2, 64))
+    batches = {"images": jnp.asarray(train.x[idx]),
+               "labels": jnp.asarray(train.y[idx])}
+    probe = client.local_round(sorted_p, _strategy(1.0, 0.05), batches,
+                               jax.random.PRNGKey(3))
+    planner = compression.BetaPlanner.fit(probe.values,
+                                          jax.random.PRNGKey(4))
+    upd = client.local_round(sorted_p, _strategy(1.0, 0.05), batches,
+                             jax.random.PRNGKey(5), planner=planner)
+    assert 0.05 / 4 < upd.beta_realized < 0.05 * 4
