@@ -1,0 +1,91 @@
+"""Time-to-accuracy comparison of the three arrival policies.
+
+Runs the same method (default: anycostfl) over the heterogeneous fleet
+under ``sync``, ``semisync``, and ``fedbuff`` and compares *simulated
+wall-clock* — not round index — against accuracy, energy, and traffic.
+The fedbuff run gets exactly the sync run's simulated wall-clock as its
+budget, so the comparison is time-fair.
+
+``PYTHONPATH=src python benchmarks/async_modes.py``
+(BENCH_SCALE=fast|full; full is the paper's 60-device fleet)
+
+Emits one JSON row per policy on stdout and caches the full result under
+experiments/fl/async_modes_<scale>.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import CACHE_DIR  # noqa: E402
+from repro.orchestrator import OrchestratorConfig, run_orchestrated  # noqa: E402
+from repro.sysmodel.population import FleetConfig  # noqa: E402
+from repro.train.fl_loop import FLRunConfig  # noqa: E402
+
+SCALES = {
+    "fast": dict(n_devices=12, rounds=10, n_train=768, n_test=256,
+                 eval_every=2, buffer_size=4),
+    "full": dict(n_devices=60, rounds=40, n_train=2048, n_test=512,
+                 eval_every=5, buffer_size=8),
+}
+
+ACC_TARGETS = (0.3, 0.5, 0.7)
+
+
+def _row(policy: str, hist) -> dict:
+    return {
+        "policy": policy,
+        "best_acc": hist.best_acc,
+        "sim_wallclock_s": hist.wallclock(),
+        "energy_j": float(hist.cumulative("energy_j")[-1]),
+        "comm_mb": float(hist.cumulative("comm_bits")[-1] / 8e6),
+        "server_updates": len(hist.rounds),
+        "mean_staleness": float(np.mean([r.mean_staleness
+                                         for r in hist.rounds])),
+        "time_to_acc_s": {f"{t:.1f}": hist.time_to_acc(t)
+                          for t in ACC_TARGETS},
+    }
+
+
+def main(method: str = "anycostfl", seed: int = 0) -> list[dict]:
+    sc = SCALES[os.environ.get("BENCH_SCALE", "fast")]
+    scale_tag = os.environ.get("BENCH_SCALE", "fast")
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, f"async_modes_{method}_{scale_tag}.json")
+    if os.path.exists(path):
+        rows = json.load(open(path))
+    else:
+        run_cfg = FLRunConfig(method=method, seed=seed, lr=0.1,
+                              rounds=sc["rounds"], n_train=sc["n_train"],
+                              n_test=sc["n_test"],
+                              eval_every=sc["eval_every"])
+        fleet = FleetConfig(n_devices=sc["n_devices"])
+        rows = []
+        h_sync = run_orchestrated(run_cfg, fleet,
+                                  OrchestratorConfig(policy="sync"))
+        rows.append(_row("sync", h_sync))
+        h_semi = run_orchestrated(
+            run_cfg, fleet,
+            OrchestratorConfig(policy="semisync", straggler_mode="drop"))
+        rows.append(_row("semisync", h_semi))
+        h_buf = run_orchestrated(
+            run_cfg, fleet,
+            OrchestratorConfig(policy="fedbuff",
+                               buffer_size=sc["buffer_size"],
+                               max_wallclock_s=h_sync.wallclock()))
+        rows.append(_row("fedbuff", h_buf))
+        with open(path, "w") as f:
+            json.dump(rows, f, indent=1)
+    for row in rows:
+        print(json.dumps(row))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+#!/usr/bin/env sh
+# Fast verify loop: tier-1 suite minus the slow-marked FL integration /
+# subprocess tests. Finishes in minutes on one CPU core; run the full
+# `PYTHONPATH=src python -m pytest -x -q` before merging.
+#
+# Known pre-existing failures (present since the seed commit, reproduced
+# on a clean checkout): test_error_feedback (2), test_distributed
+# (test_anycost_sync_numerics), test_dryrun_mini
+# (test_anycost_grad_sync_lowers_and_cuts_wire_bytes), test_system
+# (test_submodels_of_trained_global_work). Anything beyond those is new.
+set -e
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -q -m "not slow" "$@"

@@ -63,6 +63,8 @@ class AnycostClient:
         self.batch_size = batch_size
         self.alpha_buckets = alpha_buckets
         self._step_cache: dict = {}
+        self._fast_step_cache: dict = {}
+        self._finish_cache: dict = {}
 
     def _local_steps(self, alpha: float, n_steps: int):
         key = (alpha, n_steps)
@@ -87,6 +89,34 @@ class AnycostClient:
         self._step_cache[key] = run
         return run
 
+    def _local_steps_fast(self, alpha: float, n_steps: int):
+        """Unrolled variant of :meth:`_local_steps` for the orchestrator's
+        hot paths. ``lax.scan``'s while-loop blocks XLA fusion on CPU (a
+        1-step scan costs ~8x the step itself); unrolling the (static)
+        step count recovers it and vmaps linearly. Numerically equivalent
+        up to op scheduling — the synchronous loop keeps the scan version
+        for bitwise reproducibility."""
+        key = (alpha, n_steps)
+        if key in self._fast_step_cache:
+            return self._fast_step_cache[key]
+        sub_cfg = shrinking.shrunk_config(self.model.cfg, alpha, self.spec)
+        sub_model = build_model(sub_cfg)
+        lr = self.lr
+
+        @jax.jit
+        def run(params, batches):
+            p = params
+            for i in range(n_steps):
+                batch = jax.tree.map(lambda x: x[i], batches)
+                g = jax.grad(lambda q: loss_fn(sub_model, q, batch,
+                                               remat="none"))(p)
+                p = jax.tree.map(lambda a, b: a - lr * b.astype(a.dtype),
+                                 p, g)
+            return p
+
+        self._fast_step_cache[key] = run
+        return run
+
     def local_round(self, sorted_global: PyTree, strategy: Strategy,
                     batches: PyTree, key, *,
                     planner: Optional[compression.BetaPlanner] = None,
@@ -96,6 +126,91 @@ class AnycostClient:
         sub = shrinking.shrink(sorted_global, alpha, self.spec)
         n_steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
         trained = self._local_steps(alpha, n_steps)(sub, batches)
+        return self.finish_round(sorted_global, alpha, trained, strategy,
+                                 n_steps, key, planner=planner,
+                                 w_per_sample=w_per_sample, sub=sub)
+
+    def _finish_core_raw(self, alpha: float):
+        spec = self.spec
+
+        def core(sub, trained, rho, n_levels, key):
+            update_sub = tree_sub(sub, trained)
+            full_update, width_mask = shrinking.expand_update(
+                update_sub, None, alpha, spec)
+            comp = compression.compress_update(full_update, 0.0, key,
+                                               rho=rho, n_levels=n_levels)
+            mask = jax.tree.map(lambda a, b: a * b, width_mask, comp.mask)
+            values = jax.tree.map(lambda v, m: v * m, comp.values, mask)
+            return values, mask, comp.bits
+
+        return core
+
+    def _finish_core(self, alpha: float):
+        """jit'd shrink-residual -> expand -> compress pipeline for one
+        width bucket. One compile per alpha; (rho, n_levels, key) are
+        traced, so per-round targets never retrace."""
+        if alpha not in self._finish_cache:
+            self._finish_cache[alpha] = jax.jit(
+                self._finish_core_raw(alpha))
+        return self._finish_cache[alpha]
+
+
+    def finish_plan(self, beta: float,
+                    planner: Optional[compression.BetaPlanner] = None
+                    ) -> tuple[jax.Array, jax.Array]:
+        """(rho, n_levels) for a target rate — planner map or Appendix A."""
+        if planner is not None:
+            rho, levels = planner.plan(beta)
+            return jnp.float32(rho), jnp.float32(levels)
+        return (compression.analytic_rho(beta),
+                compression.analytic_levels(beta))
+
+    def finish_from_parts(self, alpha: float, strategy: Strategy,
+                          n_steps: int, values: PyTree, mask: PyTree,
+                          bits, *, w_per_sample: float = 0.0
+                          ) -> ClientUpdate:
+        """Assemble a ClientUpdate from an already-decoded (values, mask,
+        bits) triple (the jit'd / vmapped finish cores)."""
+        from repro.utils.pytree import tree_size
+        n = tree_size(values)          # full-coordinate size
+        n_samples = n_steps * self.batch_size
+        return ClientUpdate(
+            values=values, mask=mask, alpha=alpha,
+            beta_target=float(strategy.beta),
+            beta_realized=float(bits) / (32.0 * n),
+            bits=float(bits), n_samples=n_samples,
+            flops=alpha * w_per_sample * n_samples)
+
+    def finish_round_fast(self, alpha: float, trained: PyTree,
+                          strategy: Strategy, n_steps: int, key, *,
+                          sub: PyTree,
+                          planner: Optional[compression.BetaPlanner] = None,
+                          w_per_sample: float = 0.0) -> ClientUpdate:
+        """Jit'd variant of :meth:`finish_round` for the orchestrator's hot
+        path (hundreds of completions per simulated run). Numerically
+        equivalent up to jit fusion — not bitwise identical to the eager
+        path, which the synchronous loop keeps for reproducibility."""
+        rho, n_levels = self.finish_plan(float(strategy.beta), planner)
+        values, mask, bits = self._finish_core(alpha)(sub, trained, rho,
+                                                      n_levels, key)
+        return self.finish_from_parts(alpha, strategy, n_steps, values,
+                                      mask, bits,
+                                      w_per_sample=w_per_sample)
+
+    def finish_round(self, sorted_global: PyTree, alpha: float,
+                     trained: PyTree, strategy: Strategy, n_steps: int,
+                     key, *,
+                     planner: Optional[compression.BetaPlanner] = None,
+                     w_per_sample: float = 0.0,
+                     sub: Optional[PyTree] = None) -> ClientUpdate:
+        """Decode an already-trained sub-model into the uploaded update.
+
+        Split out of :meth:`local_round` so the orchestrator's client pool
+        can train many clients in one vmapped call and decode each result
+        here. ``alpha`` must be the bucketed width actually trained.
+        """
+        if sub is None:
+            sub = shrinking.shrink(sorted_global, alpha, self.spec)
         update_sub = tree_sub(sub, trained)          # u = w_before - w_after
         full_update, width_mask = shrinking.expand_update(
             update_sub, sorted_global, alpha, self.spec)
@@ -112,8 +227,7 @@ class AnycostClient:
         values = jax.tree.map(lambda v, m: v * m, comp.values, mask)
         from repro.utils.pytree import tree_size
         n = tree_size(full_update)
-        n_samples = (jax.tree_util.tree_leaves(batches)[0].shape[0]
-                     * self.batch_size)
+        n_samples = n_steps * self.batch_size
         return ClientUpdate(
             values=values, mask=mask, alpha=alpha, beta_target=beta,
             beta_realized=float(comp.bits) / (32.0 * n),
@@ -133,6 +247,13 @@ class AnycostServer:
     def sort(self, params: PyTree) -> PyTree:
         return shrinking.sort_channels(params, self.spec)
 
+    def apply_update(self, params: PyTree, agg: PyTree) -> PyTree:
+        """One server step: w <- w - server_lr * aggregated update."""
+        return jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - self.server_lr * g.astype(jnp.float32)
+                          ).astype(p.dtype), params, agg)
+
     def aggregate(self, params: PyTree, updates: list[ClientUpdate],
                   *, weights: Optional[jax.Array] = None) -> PyTree:
         if weights is None:
@@ -141,7 +262,4 @@ class AnycostServer:
                 [max(u.beta_target, 1e-6) for u in updates])
         agg = aggregation.aio_aggregate([u.values for u in updates],
                                         [u.mask for u in updates], weights)
-        return jax.tree.map(
-            lambda p, g: (p.astype(jnp.float32)
-                          - self.server_lr * g.astype(jnp.float32)
-                          ).astype(p.dtype), params, agg)
+        return self.apply_update(params, agg)

@@ -88,8 +88,9 @@ def _modality_extras(cfg, batch, seq_len):
 
 
 def run_fl(args):
+    from repro.orchestrator import OrchestratorConfig, run_orchestrated
     from repro.sysmodel.population import FleetConfig
-    from repro.train.fl_loop import run_fl as fl, FLRunConfig
+    from repro.train.fl_loop import FLRunConfig
     run_cfg = FLRunConfig(
         arch=args.arch if args.arch.endswith(("cnn", "cifar"))
         else "fmnist-cnn",
@@ -97,8 +98,20 @@ def run_fl(args):
         seed=args.seed, iid=not args.non_iid, n_train=args.n_train,
         n_test=args.n_test, eval_every=args.eval_every)
     fleet = FleetConfig(n_devices=args.devices)
-    hist = fl(run_cfg, fleet, verbose=True)
-    print(json.dumps({"method": args.method, "best_acc": hist.best_acc,
+    orch = OrchestratorConfig(
+        policy=args.async_mode, max_wallclock_s=args.max_wallclock,
+        deadline_s=args.deadline, buffer_size=args.buffer_size,
+        staleness_exponent=args.staleness_exp,
+        straggler_mode=args.straggler_mode,
+        use_pool=False if args.no_pool else None)
+    hist = run_orchestrated(run_cfg, fleet, orch, verbose=True)
+    # time-to-accuracy: simulated wall-clock at fixed accuracy milestones
+    tta = {f"acc>={th:.2f}": hist.time_to_acc(th)
+           for th in (0.3, 0.5, 0.7, 0.9) if hist.best_acc >= th}
+    print(json.dumps({"method": args.method, "policy": args.async_mode,
+                      "best_acc": hist.best_acc,
+                      "sim_wallclock_s": hist.wallclock(),
+                      "time_to_acc_s": tta,
                       "rows": hist.to_rows()[-1]}, indent=1))
     return hist
 
@@ -114,18 +127,39 @@ def main():
     ap.add_argument("--n-train", type=int, default=1536)
     ap.add_argument("--n-test", type=int, default=384)
     ap.add_argument("--eval-every", type=int, default=5)
+    ap.add_argument("--async-mode", default="sync",
+                    choices=["sync", "semisync", "fedbuff"])
+    ap.add_argument("--max-wallclock", type=float, default=None,
+                    help="stop after this many *simulated* seconds "
+                         "(fedbuff: overrides --rounds)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="semisync cutoff in seconds (default: fleet T_max)")
+    ap.add_argument("--buffer-size", type=int, default=8,
+                    help="fedbuff: updates per server merge")
+    ap.add_argument("--staleness-exp", type=float, default=0.5,
+                    help="fedbuff: weight *= (1+staleness)^-exp")
+    ap.add_argument("--straggler-mode", default="drop",
+                    choices=["drop", "downweight"])
+    ap.add_argument("--no-pool", action="store_true",
+                    help="disable vmapped client batching")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=128)
-    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--lr", type=float, default=None,
+                    help="learning rate (default: 0.05 for fl SGD, "
+                         "3e-3 for pod AdamW)")
     ap.add_argument("--remat", default="none")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args()
+    # mode-dependent lr default: a None sentinel (not value equality, which
+    # would also clobber an explicit --lr equal to the other mode's default)
+    if args.lr is None:
+        args.lr = 3e-3 if args.mode == "pod" else 0.05
+        print(f"[train] using the {args.mode}-mode default lr {args.lr:g} "
+              f"(pass --lr to override)")
     if args.mode == "pod":
-        if args.lr > 0.01:
-            args.lr = 3e-3
         run_pod(args)
     else:
         run_fl(args)

@@ -1,0 +1,48 @@
+"""Discrete-event asynchronous FL orchestrator.
+
+The paper's whole premise is per-device latency/energy budgets — every
+device i solves Problem (P4) against a shared round deadline ``T_max``
+(Eq. 10b) and its own energy budget ``E_max`` (Eq. 10c) — yet a lock-step
+round loop never lets those budgets shape the *timeline*: stragglers,
+dropouts, and wall-clock time are invisible to the learning dynamics.
+This subsystem turns the reproduction into a wall-clock fleet simulator.
+
+Modules
+-------
+``events``       deterministic heap-based discrete-event engine; client
+                 completion times come from the ``sysmodel`` latency/energy
+                 models, so seeded runs replay identical event traces.
+``policies``     three arrival/aggregation policies behind one interface.
+``client_pool``  batched client execution: same alpha-bucket clients train
+                 through one jit'd ``jax.vmap`` step.
+``runner``       the unified driver ``train/fl_loop.py`` delegates to.
+
+Policy <-> paper-constraint map
+-------------------------------
+``sync``     The paper's §III-A round: the server barriers on all clients;
+             round latency is ``max_i (T_cmp_i + T_com_i)`` (Eq. 6 + 9).
+             Every device's Problem-(P4) solution respects ``T_max``, so in
+             AnycostFL the barrier is bounded by the shared deadline.
+             Bit-equivalent to the pre-orchestrator synchronous loop.
+``semisync`` Takes Eq. 10b literally as a *server-enforced cutoff*: the
+             round ends at ``T_max`` (or a configured deadline) and clients
+             whose realized ``T_cmp + T_com`` exceeds it — baselines can
+             violate budgets; AnycostFL can overshoot via alpha-bucketing or
+             planner rate mismatch — are dropped or down-weighted.  With a
+             non-binding deadline this reproduces ``sync`` exactly.
+``fedbuff``  Drops Eq. 10b as a barrier entirely and keeps only the
+             per-device budgets: devices run free, the server merges every
+             K arrivals with the element-wise AIO rule (Eq. 5), scaling
+             each update's Theorem-1 coefficient (Eq. 13) by a staleness
+             discount ``(1 + s)^-gamma`` so a fully-stale update cannot
+             dominate the merge.  EMS channel sorting (§III-B.1) is frozen
+             at t=0: cross-version element-wise aggregation requires one
+             coordinate frame.
+"""
+from repro.orchestrator.events import Event, EventQueue
+from repro.orchestrator.policies import (OrchestratorConfig, make_policy,
+                                         staleness_scaled_weights)
+from repro.orchestrator.runner import run_orchestrated
+
+__all__ = ["Event", "EventQueue", "OrchestratorConfig", "make_policy",
+           "staleness_scaled_weights", "run_orchestrated"]

@@ -1,0 +1,67 @@
+"""Deterministic heap-based discrete-event engine.
+
+The simulated timeline is a priority queue of :class:`Event` records.
+Client-completion times come from the ``sysmodel`` latency model (Eq. 6-9):
+``T_cmp = alpha * tau * D * W / f`` and ``T_com = bits / rate``, so the
+event order is a pure function of the fleet draw and the per-round channel
+realizations — two runs with the same seed produce identical traces.
+
+Determinism rules:
+
+* ties on ``time`` break on the monotonically increasing ``seq`` assigned
+  at push time (insertion order), never on payload identity;
+* the queue records every pop into ``trace`` so tests can assert that two
+  seeded runs replay the exact same event sequence;
+* no wall-clock reads anywhere — simulated time only enters through
+  ``push(time, ...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Optional
+
+# event kinds used by the runner
+COMPLETE = "complete"     # a client's (T_cmp + T_com) elapsed; update arrived
+RETRY = "retry"           # infeasible budgets this draw; re-probe the channel
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Event:
+    time: float
+    seq: int
+    kind: str = dataclasses.field(compare=False)
+    client: int = dataclasses.field(compare=False, default=-1)
+    payload: Any = dataclasses.field(compare=False, default=None)
+
+
+class EventQueue:
+    """Min-heap of events with a deterministic pop trace."""
+
+    def __init__(self):
+        self._heap: list[Event] = []
+        self._seq = 0
+        self.trace: list[tuple[float, int, str, int]] = []
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, time: float, kind: str, client: int = -1,
+             payload: Any = None) -> Event:
+        ev = Event(time=float(time), seq=self._seq, kind=kind,
+                   client=client, payload=payload)
+        self._seq += 1
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> Event:
+        ev = heapq.heappop(self._heap)
+        self.trace.append((ev.time, ev.seq, ev.kind, ev.client))
+        return ev
+
+    def peek_time(self) -> Optional[float]:
+        return self._heap[0].time if self._heap else None
+
+    def trace_signature(self, digits: int = 9) -> tuple:
+        """Hashable replay signature (times rounded to absorb repr noise)."""
+        return tuple((round(t, digits), s, k, c) for t, s, k, c in self.trace)

@@ -1,0 +1,529 @@
+"""Unified FL driver over the discrete-event engine.
+
+``run_orchestrated(run_cfg, fleet_cfg, orch_cfg)`` executes any method
+(anycostfl / baselines) under any arrival policy (sync / semisync /
+fedbuff).  ``train/fl_loop.run_fl`` delegates here with the sync policy,
+which reproduces the pre-orchestrator loop bit-for-bit: the per-device
+sequence of numpy-RNG draws, JAX key splits, and cost-accumulation float
+ops is kept identical (see ``Simulation.prepare`` / ``materialize``).
+
+Timeline semantics:
+
+* **sync / semisync** (round-based): every device is dispatched at the
+  round start; per-device completion offsets are ``T_cmp + T_com`` from the
+  realized strategy (Eq. 6-9, identical formulas to the old loop); the
+  policy decides the round barrier and which arrivals aggregate.
+* **fedbuff** (stream-based): devices run free; each completion enqueues
+  the update into the server buffer with staleness = (server version now) -
+  (version at dispatch) and the device immediately re-dispatches on a fresh
+  channel draw.  Every ``K`` arrivals the server applies the AIO merge with
+  staleness-discounted Theorem-1 weights.  Local training is *deferred* to
+  aggregation time so buffered clients train as one vmapped batch; the
+  event timestamps use the device's planned wire size (its uplink
+  reservation) while energy/comm accounting uses realized bits, exactly as
+  in the synchronous loop.  EMS channel sorting is frozen at t=0 in this
+  mode: cross-version element-wise merges require a fixed coordinate frame.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import aggregation, compression, schedule, shrinking
+from repro.core.anycost import (AnycostClient, AnycostServer, ClientUpdate,
+                                bucket_alpha)
+from repro.data.partition import partition_dirichlet, partition_iid
+from repro.data.synthetic import make_image_task
+from repro.models import cnn as cnn_mod
+from repro.models.registry import build_model
+from repro.orchestrator import events as ev_mod
+from repro.orchestrator.client_pool import ClientPool, TrainJob
+from repro.orchestrator.policies import (OrchestratorConfig, apply_scales,
+                                         base_weights, make_policy)
+from repro.sysmodel.population import FleetConfig, make_fleet
+from repro.train.baselines import BaselinePolicy
+from repro.train.fl_loop import (FLRunConfig, History, RoundLog,
+                                 _device_batches, _make_eval,
+                                 flops_per_sample)
+from repro.utils.pytree import tree_size, tree_sub
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class PendingUpdate:
+    """A dispatched client round travelling through the event queue."""
+    client_id: int
+    env: schedule.DeviceEnv
+    strat: schedule.Strategy
+    alpha: float                 # bucketed width actually trained
+    batches: PyTree
+    key: jax.Array               # the round's compression key (k2)
+    n_steps: int
+    version: int = 0             # server version at dispatch (fedbuff)
+    dispatched_at: float = 0.0
+    completes_at: float = 0.0
+    staleness: int = 0
+    # filled by Simulation.materialize
+    update: Optional[ClientUpdate] = None
+    fedhq_level: Optional[int] = None
+    t_cmp: float = 0.0
+    t_com: float = 0.0
+    energy: float = 0.0
+
+    @property
+    def duration(self) -> float:
+        return self.t_cmp + self.t_com
+
+
+class Simulation:
+    """Shared state + the per-device round body of the old fl_loop."""
+
+    def __init__(self, run_cfg: FLRunConfig,
+                 fleet_cfg: Optional[FleetConfig] = None):
+        # setup order mirrors the pre-orchestrator run_fl exactly — the rng
+        # stream position after setup must match for bit-equivalence.
+        self.run_cfg = run_cfg
+        rng = self.rng = np.random.default_rng(run_cfg.seed)
+        arch_cfg = self.arch_cfg = get_config(run_cfg.arch)
+        self.model = build_model(arch_cfg)
+        self.spec = shrinking.cnn_shrink_spec(arch_cfg)
+
+        shape = cnn_mod.image_shape(arch_cfg)
+        self.train, self.test = make_image_task(
+            rng, run_cfg.n_train, run_cfg.n_test, shape=shape)
+        self.test_x = jnp.asarray(self.test.x)
+        self.test_y = jnp.asarray(self.test.y)
+
+        fleet_cfg = self.fleet_cfg = fleet_cfg or FleetConfig()
+        if run_cfg.iid:
+            self.parts = partition_iid(rng, run_cfg.n_train,
+                                       fleet_cfg.n_devices)
+        else:
+            self.parts = partition_dirichlet(rng, self.train.y,
+                                             fleet_cfg.n_devices,
+                                             run_cfg.dirichlet_alpha)
+        self.fleet = make_fleet(
+            rng, fleet_cfg, np.array([len(p) for p in self.parts]))
+
+        self.W = flops_per_sample(arch_cfg)
+        self.params = self.model.init(jax.random.PRNGKey(run_cfg.seed))
+        self._n_params = tree_size(self.params)
+        self.S_bits = 32.0 * self._n_params
+
+        self.client = AnycostClient(self.model, self.spec, lr=run_cfg.lr,
+                                    batch_size=run_cfg.batch_size,
+                                    alpha_buckets=run_cfg.alpha_buckets)
+        self.server = AnycostServer(self.model, self.spec)
+        self.baseline = None
+        if run_cfg.method not in ("anycostfl",):
+            self.baseline = BaselinePolicy(run_cfg.method)
+        self.tiers = np.argsort(np.argsort(-self.fleet.eps_hw)) * 3 \
+            // fleet_cfg.n_devices
+        self.planner = None
+        self.ev = _make_eval(self.model, self.test_x, self.test_y)
+        self.key = jax.random.PRNGKey(run_cfg.seed + 1)
+        self.pool = ClientPool(self.client)
+        self._agg_fast = None
+        self._shrink_cache: dict = {}
+
+    # ------------------------------------------------------------ round body
+
+    def sort_params(self, params: PyTree) -> PyTree:
+        if self.run_cfg.use_ems:
+            return self.server.sort(params)
+        return shrinking._deepcopy_dicts(params)
+
+    def ensure_planner(self, sorted_params: PyTree) -> None:
+        """Fit the server-side beta planner on a probe update (§III-C.3)."""
+        rc = self.run_cfg
+        if self.planner is None and rc.method == "anycostfl" \
+                and rc.use_planner:
+            self.key, k1 = jax.random.split(self.key)
+            probe_idx = self.rng.permutation(rc.n_train)[:16]
+            probe_batches = {
+                "images": jnp.asarray(self.train.x[probe_idx][None]),
+                "labels": jnp.asarray(self.train.y[probe_idx][None])}
+            trained = self.client._local_steps(1.0, 1)(sorted_params,
+                                                       probe_batches)
+            probe_update = tree_sub(sorted_params, trained)
+            self.planner = compression.BetaPlanner.fit(probe_update, k1)
+
+    def prepare(self, i: int, env: schedule.DeviceEnv
+                ) -> Optional[PendingUpdate]:
+        """Strategy + minibatch draw for device i (consumes rng/keys in the
+        old loop's order). Returns None when no (alpha, beta, f) satisfies
+        the budgets (the device sits this dispatch out)."""
+        rc = self.run_cfg
+        if rc.method == "anycostfl":
+            strat = schedule.solve(env)
+            if not strat.feasible:
+                return None
+            if not rc.use_ems:
+                strat = dataclasses.replace(strat, alpha=1.0)
+            if not rc.use_fgc:
+                strat = dataclasses.replace(strat, beta=1.0)
+            alpha = bucket_alpha(strat.alpha, rc.alpha_buckets)
+        else:
+            strat = self.baseline.strategy(env, tier=int(self.tiers[i]))
+            alpha = bucket_alpha(strat.alpha, rc.alpha_buckets) \
+                if rc.method == "heterofl" else 1.0
+        self.key, k1, k2 = jax.random.split(self.key, 3)
+        batches = _device_batches(self.rng, self.train.x, self.train.y,
+                                  self.parts[i], rc.batch_size, rc.tau)
+        n_steps = int(jax.tree_util.tree_leaves(batches)[0].shape[0])
+        return PendingUpdate(client_id=i, env=env, strat=strat, alpha=alpha,
+                             batches=batches, key=k2, n_steps=n_steps)
+
+    def train_one(self, p: PendingUpdate, sorted_params: PyTree) -> PyTree:
+        sub = shrinking.shrink(sorted_params, p.alpha, self.spec)
+        return self.client._local_steps(p.alpha, p.n_steps)(sub, p.batches)
+
+    def materialize(self, p: PendingUpdate, trained: PyTree,
+                    sorted_params: PyTree, *, fast: bool = False,
+                    sub: Optional[PyTree] = None) -> PendingUpdate:
+        """Decode the trained sub-model into a ClientUpdate + realized costs
+        (Eq. 6-9). The default path keeps float-op order identical to the
+        old loop; ``fast=True`` routes through the jit'd finish pipeline
+        (equivalent up to fusion) for high-event-rate policies."""
+        rc = self.run_cfg
+        env, strat = p.env, p.strat
+        if rc.method == "anycostfl":
+            if fast:
+                if sub is None:
+                    sub = shrinking.shrink(sorted_params, p.alpha, self.spec)
+                upd = self.client.finish_round_fast(
+                    p.alpha, trained, strat, p.n_steps, p.key, sub=sub,
+                    planner=self.planner if rc.use_fgc else None,
+                    w_per_sample=self.W)
+            else:
+                upd = self.client.finish_round(
+                    sorted_params, p.alpha, trained, strat, p.n_steps, p.key,
+                    planner=self.planner if rc.use_fgc else None,
+                    w_per_sample=self.W, sub=sub)
+            if not rc.use_fgc:
+                # transmit the raw (width-masked) update
+                upd = dataclasses.replace(
+                    upd, bits=32.0 * strat.alpha * self._n_params,
+                    beta_realized=1.0)
+        else:
+            sub = shrinking.shrink(sorted_params, p.alpha, self.spec)
+            update_sub = tree_sub(sub, trained)
+            full_update, wmask = shrinking.expand_update(
+                update_sub, sorted_params, p.alpha, self.spec)
+            comp = self.baseline.compress(full_update, env, p.key)
+            mask = jax.tree.map(lambda a, b: a * b, wmask, comp.mask)
+            vals = jax.tree.map(lambda v, m: v * m, comp.values, mask)
+            n_samp = p.n_steps * rc.batch_size
+            upd = ClientUpdate(
+                values=vals, mask=mask, alpha=p.alpha,
+                beta_target=strat.beta,
+                beta_realized=float(comp.bits) / self.S_bits,
+                bits=float(comp.bits), n_samples=n_samp,
+                flops=p.alpha * self.W * n_samp)
+            if rc.method == "fedhq":
+                p.fedhq_level = self.baseline.fedhq_levels(env)
+        p.update = upd
+        # realized costs (Eq. 6-9) with the *realized* wire size
+        t_com = upd.bits / env.rate
+        e_com = t_com * env.P_com
+        t_cmp = upd.alpha * env.tau * env.D * env.W / strat.freq
+        e_cmp = env.eps_hw * strat.freq ** 2 * upd.alpha \
+            * env.tau * env.D * env.W
+        p.t_com, p.t_cmp = t_com, t_cmp
+        p.energy = e_cmp + e_com
+        return p
+
+    def shrink_fast(self, sorted_params: PyTree, alpha: float) -> PyTree:
+        """jit'd EMS slice (one compile per width bucket) for hot paths."""
+        if alpha not in self._shrink_cache:
+            spec = self.spec
+            self._shrink_cache[alpha] = jax.jit(
+                lambda p: shrinking.shrink(p, alpha, spec))
+        return self._shrink_cache[alpha](sorted_params)
+
+    def aggregate(self, sorted_params: PyTree, accepted: list[PendingUpdate],
+                  weights: jax.Array, *, fast: bool = False) -> PyTree:
+        if not fast:
+            return self.server.aggregate(sorted_params,
+                                         [p.update for p in accepted],
+                                         weights=weights)
+        # jit'd wrapper over the canonical Eq.-5 merge + server step (jit
+        # retraces per update count — the input lists are pytrees)
+        if self._agg_fast is None:
+            server = self.server
+
+            @jax.jit
+            def agg(params, values, masks, w):
+                return server.apply_update(
+                    params, aggregation.aio_aggregate(values, masks, w))
+
+            self._agg_fast = agg
+        return self._agg_fast(sorted_params,
+                              [p.update.values for p in accepted],
+                              [p.update.mask for p in accepted], weights)
+
+    def evaluate(self, params: PyTree) -> tuple[float, float]:
+        acc, loss = self.ev(params)
+        return float(acc), float(loss)
+
+
+# ---------------------------------------------------------------- round mode
+
+def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
+                     verbose: bool) -> History:
+    rc = sim.run_cfg
+    use_pool = orch.use_pool if orch.use_pool is not None \
+        else policy.pool_default
+    queue = ev_mod.EventQueue()
+    hist = History(rc, [])
+    params = sim.params
+    t_wall = 0.0
+
+    for t in range(rc.rounds):
+        envs = sim.fleet.round_envs(sim.rng, sim.W, sim.S_bits)
+        sorted_params = sim.sort_params(params)
+        sim.ensure_planner(sorted_params)
+
+        pendings = [p for p in (sim.prepare(i, env)
+                                for i, env in enumerate(envs))
+                    if p is not None]
+        subs: dict = {}
+        if use_pool and rc.method == "anycostfl":
+            for p in pendings:
+                if p.alpha not in subs:
+                    subs[p.alpha] = sim.shrink_fast(sorted_params, p.alpha)
+        if use_pool:
+            trained = sim.pool.train_shared(
+                sorted_params,
+                [TrainJob(p.client_id, p.alpha, p.batches)
+                 for p in pendings], subs)
+        else:
+            trained = [sim.train_one(p, sorted_params) for p in pendings]
+
+        en, fl, cb = 0.0, 0.0, 0.0
+        for p, tr in zip(pendings, trained):
+            sim.materialize(p, tr, sorted_params, fast=use_pool,
+                            sub=subs.get(p.alpha))
+            p.dispatched_at = t_wall
+            p.completes_at = t_wall + p.duration
+            queue.push(p.completes_at, ev_mod.COMPLETE, p.client_id, p)
+            en += p.energy
+            fl += p.update.flops
+            cb += p.update.bits
+        for _ in range(len(pendings)):     # record the arrival order
+            queue.pop()
+
+        if not pendings:           # every device faded out this round
+            hist.rounds.append(RoundLog(round=t, latency_s=0.0, energy_j=0.0,
+                                        flops=0.0, comm_bits=0.0,
+                                        mean_alpha=0.0, mean_beta=0.0,
+                                        mean_gain=0.0, t_wall=t_wall))
+            continue
+
+        accepted, scales, lat = policy.accept(pendings, 0.0)
+        t_wall += lat
+        if accepted:
+            fedhq_L = [p.fedhq_level for p in accepted] \
+                if rc.method == "fedhq" else []
+            w = base_weights(rc.method, rc.use_aio,
+                             [p.update for p in accepted], fedhq_L)
+            w = apply_scales(w, scales)
+            params = sim.aggregate(sorted_params, accepted, w,
+                                   fast=use_pool)
+
+        log = RoundLog(
+            round=t, latency_s=lat, energy_j=en, flops=fl, comm_bits=cb,
+            mean_alpha=float(np.mean([p.update.alpha for p in pendings])),
+            mean_beta=float(np.mean([p.update.beta_realized
+                                     for p in pendings])),
+            mean_gain=float(np.mean([p.strat.gain for p in pendings])),
+            t_wall=t_wall, n_clients=len(accepted),
+            n_dropped=len(pendings) - len(accepted))
+        if t % rc.eval_every == 0 or t == rc.rounds - 1:
+            acc, loss = sim.evaluate(params)
+            log.test_acc = acc
+            log.test_loss = loss
+            hist.best_acc = max(hist.best_acc, acc)
+            if verbose:
+                print(f"[{rc.method}/{policy.name}] round {t:3d} "
+                      f"acc={acc:.3f} loss={loss:.3f} lat={lat:.2f}s "
+                      f"E={en:.2f}J t={t_wall:.1f}s "
+                      f"alpha={log.mean_alpha:.2f} "
+                      f"beta={log.mean_beta:.4f}")
+        hist.rounds.append(log)
+        if orch.max_wallclock_s is not None \
+                and t_wall >= orch.max_wallclock_s:
+            break
+    hist.trace = queue.trace_signature()
+    return hist
+
+
+# --------------------------------------------------------------- fedbuff mode
+
+def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
+                 verbose: bool) -> History:
+    rc = sim.run_cfg
+    use_pool = orch.use_pool if orch.use_pool is not None \
+        else policy.pool_default
+    retry_dt = orch.retry_interval_s if orch.retry_interval_s is not None \
+        else sim.fleet_cfg.T_max
+    queue = ev_mod.EventQueue()
+    hist = History(rc, [])
+
+    # frozen sorted coordinate frame (cross-version merges need one frame)
+    current = sim.sort_params(sim.params)
+    sim.ensure_planner(current)
+    version = 0
+    version_params: dict[int, PyTree] = {0: current}
+    inflight_version: dict[int, int] = {}
+    buffer: list[PendingUpdate] = []
+    n_agg = 0
+    last_agg_t = 0.0
+    en, fl, cb = 0.0, 0.0, 0.0
+
+    def dispatch(i: int, env: schedule.DeviceEnv, now: float) -> None:
+        p = sim.prepare(i, env)
+        if p is None:
+            queue.push(now + retry_dt, ev_mod.RETRY, i)
+            inflight_version.pop(i, None)
+            return
+        p.version = version
+        p.dispatched_at = now
+        # planned timeline: the device reserves compute + uplink by its plan
+        t_cmp = p.alpha * env.tau * env.D * env.W / p.strat.freq
+        t_com = p.alpha * p.strat.beta * env.S_bits / env.rate
+        p.completes_at = now + t_cmp + t_com
+        inflight_version[i] = version
+        queue.push(p.completes_at, ev_mod.COMPLETE, i, p)
+
+    for i, env in enumerate(sim.fleet.round_envs(sim.rng, sim.W,
+                                                 sim.S_bits)):
+        dispatch(i, env, 0.0)
+
+    # Progress guard: without a wall-clock budget the run targets rc.rounds
+    # merges, but an all-infeasible fleet (deep fade draws on every retry)
+    # would spin on RETRY events forever. Budget enough simulated time for
+    # every merge even if only one device is ever feasible, then stop.
+    wall_limit = orch.max_wallclock_s
+    if wall_limit is None:
+        cycle = max(sim.fleet_cfg.T_max, retry_dt)
+        wall_limit = rc.rounds * orch.buffer_size * cycle * 4.0
+
+    now = 0.0
+    while len(queue):
+        ev = queue.pop()
+        if ev.time > wall_limit:
+            break
+        now = ev.time
+        if ev.kind == ev_mod.RETRY:
+            dispatch(ev.client,
+                     sim.fleet.device_env(sim.rng, ev.client, sim.W,
+                                          sim.S_bits), now)
+            continue
+
+        p = ev.payload
+        p.staleness = version - p.version
+        buffer.append(p)
+        dispatch(p.client_id,
+                 sim.fleet.device_env(sim.rng, p.client_id, sim.W,
+                                      sim.S_bits), now)
+
+        if not policy.should_aggregate(buffer):
+            continue
+
+        # ---- materialize the buffered rounds (deferred, batched training)
+        shrunk: dict = {}
+        jobs = []
+        for b in buffer:
+            vk = (b.version, b.alpha)
+            if vk not in shrunk:
+                shrunk[vk] = (sim.shrink_fast(version_params[b.version],
+                                              b.alpha) if use_pool
+                              else shrinking.shrink(
+                                  version_params[b.version], b.alpha,
+                                  sim.spec))
+            jobs.append(TrainJob(b.client_id, b.alpha, b.batches,
+                                 sub_params=shrunk[vk]))
+        if use_pool:
+            trained = sim.pool.train_stacked(jobs)
+        else:
+            trained = [sim.client._local_steps(j.alpha, int(
+                jax.tree_util.tree_leaves(j.batches)[0].shape[0]))(
+                    j.sub_params, j.batches) for j in jobs]
+        for b, j, tr in zip(buffer, jobs, trained):
+            sim.materialize(b, tr, version_params[b.version],
+                            fast=use_pool, sub=j.sub_params)
+            en += b.energy
+            fl += b.update.flops
+            cb += b.update.bits
+
+        fedhq_L = [b.fedhq_level for b in buffer] \
+            if rc.method == "fedhq" else []
+        w = policy.weights(rc.method, rc.use_aio, buffer, fedhq_L)
+        current = sim.aggregate(current, buffer, w, fast=use_pool)
+        version += 1
+        version_params[version] = current
+        # retain only versions still referenced by an in-flight client (a
+        # straggler pins just its own dispatch version, not every version
+        # since)
+        keep = set(inflight_version.values()) | {version}
+        for v in [v for v in version_params if v not in keep]:
+            del version_params[v]
+        n_agg += 1
+
+        log = RoundLog(
+            round=n_agg - 1, latency_s=now - last_agg_t, energy_j=en,
+            flops=fl, comm_bits=cb,
+            mean_alpha=float(np.mean([b.update.alpha for b in buffer])),
+            mean_beta=float(np.mean([b.update.beta_realized
+                                     for b in buffer])),
+            mean_gain=float(np.mean([b.strat.gain for b in buffer])),
+            t_wall=now, n_clients=len(buffer),
+            mean_staleness=float(np.mean([b.staleness for b in buffer])))
+        done = (orch.max_wallclock_s is None and n_agg >= rc.rounds)
+        if (n_agg - 1) % rc.eval_every == 0 or done:
+            acc, loss = sim.evaluate(current)
+            log.test_acc = acc
+            log.test_loss = loss
+            hist.best_acc = max(hist.best_acc, acc)
+            if verbose:
+                print(f"[{rc.method}/fedbuff] merge {n_agg:3d} "
+                      f"t={now:7.1f}s acc={acc:.3f} loss={loss:.3f} "
+                      f"stale={log.mean_staleness:.1f} "
+                      f"alpha={log.mean_alpha:.2f}")
+        hist.rounds.append(log)
+        buffer = []
+        en, fl, cb = 0.0, 0.0, 0.0
+        last_agg_t = now
+        if done:
+            break
+
+    # final eval so best_acc reflects the last merged model
+    if hist.rounds and hist.rounds[-1].test_acc is None:
+        acc, loss = sim.evaluate(current)
+        hist.rounds[-1].test_acc = acc
+        hist.rounds[-1].test_loss = loss
+        hist.best_acc = max(hist.best_acc, acc)
+    hist.trace = queue.trace_signature()
+    return hist
+
+
+# ----------------------------------------------------------------- entrypoint
+
+def run_orchestrated(run_cfg: FLRunConfig,
+                     fleet_cfg: Optional[FleetConfig] = None,
+                     orch: Optional[OrchestratorConfig] = None,
+                     verbose: bool = False) -> History:
+    """Run federated training under an arrival/aggregation policy."""
+    orch = orch or OrchestratorConfig()
+    sim = Simulation(run_cfg, fleet_cfg)
+    policy = make_policy(orch, fleet_T_max=sim.fleet_cfg.T_max)
+    if policy.round_based:
+        return _run_round_based(sim, policy, orch, verbose)
+    return _run_fedbuff(sim, policy, orch, verbose)

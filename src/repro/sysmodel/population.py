@@ -42,29 +42,43 @@ class Fleet:
     E_max: np.ndarray         # (I,) fixed per device
     data_sizes: np.ndarray    # (I,) samples per device
 
+    def _env(self, i: int, rate: float, W: float, S_bits: float) -> DeviceEnv:
+        c = self.cfg
+        return DeviceEnv(
+            T_max=c.T_max, E_max=float(self.E_max[i]),
+            P_com=c.wireless.tx_power_w, rate=float(rate),
+            W=W, D=int(self.data_sizes[i]), tau=c.tau,
+            eps_hw=float(self.eps_hw[i]), S_bits=S_bits,
+            f_min=c.f_min, f_max=c.f_max, alpha_min=c.alpha_min,
+            beta_min=c.beta_min, beta_max=c.beta_max)
+
+    def _distances(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        c = self.cfg
+        if c.dist_mean_m is None:
+            pos = drop_positions(rng, n, c.wireless)
+            return np.linalg.norm(pos, axis=-1)
+        spread = (c.wireless.cell_radius_m / 4.0) * np.sqrt(
+            c.dist_var_scale)
+        return np.clip(rng.normal(c.dist_mean_m, spread, n),
+                       10.0, c.wireless.cell_radius_m)
+
     def round_envs(self, rng: np.random.Generator, W: float, S_bits: float
                    ) -> list[DeviceEnv]:
         """Refresh positions/channels and build per-device envs (Eq. 6-9)."""
         c = self.cfg
-        if c.dist_mean_m is None:
-            pos = drop_positions(rng, c.n_devices, c.wireless)
-            dist = np.linalg.norm(pos, axis=-1)
-        else:
-            spread = (c.wireless.cell_radius_m / 4.0) * np.sqrt(
-                c.dist_var_scale)
-            dist = np.clip(rng.normal(c.dist_mean_m, spread, c.n_devices),
-                           10.0, c.wireless.cell_radius_m)
+        dist = self._distances(rng, c.n_devices)
         rates = achievable_rate(dist, c.wireless, rng=rng)
-        envs = []
-        for i in range(c.n_devices):
-            envs.append(DeviceEnv(
-                T_max=c.T_max, E_max=float(self.E_max[i]),
-                P_com=c.wireless.tx_power_w, rate=float(rates[i]),
-                W=W, D=int(self.data_sizes[i]), tau=c.tau,
-                eps_hw=float(self.eps_hw[i]), S_bits=S_bits,
-                f_min=c.f_min, f_max=c.f_max, alpha_min=c.alpha_min,
-                beta_min=c.beta_min, beta_max=c.beta_max))
-        return envs
+        return [self._env(i, rates[i], W, S_bits)
+                for i in range(c.n_devices)]
+
+    def device_env(self, rng: np.random.Generator, i: int, W: float,
+                   S_bits: float) -> DeviceEnv:
+        """Fresh position/channel draw for a single device (asynchronous
+        re-dispatch: mobility refreshes the channel per dispatch, not per
+        global round)."""
+        dist = self._distances(rng, 1)
+        rate = achievable_rate(dist, self.cfg.wireless, rng=rng)
+        return self._env(i, rate[0], W, S_bits)
 
 
 def make_fleet(rng: np.random.Generator, cfg: FleetConfig,

@@ -5,6 +5,13 @@ with real numerics (the paper's CNN/VGG models on synthetic class-
 conditional data — container is offline, see DESIGN.md §8). Tracks exactly
 the Table-I columns: rounds, energy (J), latency (s), compute (FLOPs),
 communication (bits), test accuracy.
+
+The round loop itself lives in ``repro.orchestrator.runner`` — this module
+keeps the public entrypoint (``run_fl`` = the synchronous policy, bit-
+equivalent to the pre-orchestrator loop) plus the config/log dataclasses
+and the helpers shared with the orchestrator. For semi-synchronous
+deadlines or fully-async buffered aggregation, call
+``run_orchestrated(run_cfg, fleet_cfg, OrchestratorConfig(policy=...))``.
 """
 from __future__ import annotations
 
@@ -16,17 +23,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
-from repro.core import aggregation, compression, schedule, shrinking
-from repro.core.anycost import (AnycostClient, AnycostServer, ClientUpdate,
-                                bucket_alpha, DEFAULT_ALPHA_BUCKETS)
-from repro.data.partition import partition_dirichlet, partition_iid
-from repro.data.synthetic import make_image_task
-from repro.models import cnn as cnn_mod
-from repro.models.registry import build_model, loss_fn
-from repro.sysmodel.population import Fleet, FleetConfig, make_fleet
-from repro.train.baselines import BaselinePolicy, fedhq_weights
-from repro.utils.pytree import tree_size, tree_sub
+# AnycostClient/AnycostServer are re-exported: benchmarks (fig5d) hook the
+# server's aggregate through this module's namespace.
+from repro.core.anycost import (AnycostClient, AnycostServer,  # noqa: F401
+                                DEFAULT_ALPHA_BUCKETS)
+from repro.sysmodel.population import FleetConfig
 
 PyTree = Any
 
@@ -68,6 +69,11 @@ class RoundLog:
     mean_gain: float
     test_acc: Optional[float] = None
     test_loss: Optional[float] = None
+    # orchestrator extensions (zero/defaulted under the classic sync loop)
+    t_wall: float = 0.0           # simulated wall-clock at round end
+    n_clients: int = 0            # updates that entered the aggregation
+    n_dropped: int = 0            # completed but rejected (semisync)
+    mean_staleness: float = 0.0   # fedbuff: mean server-version lag
 
 
 @dataclasses.dataclass
@@ -75,9 +81,21 @@ class History:
     cfg: FLRunConfig
     rounds: list
     best_acc: float = 0.0
+    trace: Optional[tuple] = None   # event-queue replay signature
 
     def cumulative(self, field: str) -> np.ndarray:
         return np.cumsum([getattr(r, field) for r in self.rounds])
+
+    def wallclock(self) -> float:
+        """Simulated seconds at the end of the run."""
+        return self.rounds[-1].t_wall if self.rounds else 0.0
+
+    def time_to_acc(self, threshold: float) -> Optional[float]:
+        """Simulated wall-clock of the first eval reaching ``threshold``."""
+        for r in self.rounds:
+            if r.test_acc is not None and r.test_acc >= threshold:
+                return r.t_wall
+        return None
 
     def to_rows(self) -> list[dict]:
         out = []
@@ -135,163 +153,9 @@ def _device_batches(rng, x, y, idx, batch_size: int, tau: float):
 
 def run_fl(run_cfg: FLRunConfig, fleet_cfg: Optional[FleetConfig] = None,
            verbose: bool = False) -> History:
-    rng = np.random.default_rng(run_cfg.seed)
-    arch_cfg = get_config(run_cfg.arch)
-    model = build_model(arch_cfg)
-    spec = shrinking.cnn_shrink_spec(arch_cfg)
-
-    # ---- data
-    shape = cnn_mod.image_shape(arch_cfg)
-    train, test = make_image_task(rng, run_cfg.n_train, run_cfg.n_test,
-                                  shape=shape)
-    test_x, test_y = jnp.asarray(test.x), jnp.asarray(test.y)
-
-    fleet_cfg = fleet_cfg or FleetConfig()
-    if run_cfg.iid:
-        parts = partition_iid(rng, run_cfg.n_train, fleet_cfg.n_devices)
-    else:
-        parts = partition_dirichlet(rng, train.y, fleet_cfg.n_devices,
-                                    run_cfg.dirichlet_alpha)
-    fleet = make_fleet(rng, fleet_cfg, np.array([len(p) for p in parts]))
-
-    # ---- task constants (paper: W and S "empirically measured")
-    W = flops_per_sample(arch_cfg)
-    params = model.init(jax.random.PRNGKey(run_cfg.seed))
-    S_bits = 32.0 * tree_size(params)
-
-    client = AnycostClient(model, spec, lr=run_cfg.lr,
-                           batch_size=run_cfg.batch_size,
-                           alpha_buckets=run_cfg.alpha_buckets)
-    server = AnycostServer(model, spec)
-    policy = None
-    if run_cfg.method not in ("anycostfl",):
-        policy = BaselinePolicy(run_cfg.method)
-
-    # HeteroFL tiers: by hardware capability (energy coefficient terciles)
-    tiers = np.argsort(np.argsort(-fleet.eps_hw)) * 3 // fleet_cfg.n_devices
-
-    planner = None
-    ev = _make_eval(model, test_x, test_y)
-    hist = History(run_cfg, [])
-    key = jax.random.PRNGKey(run_cfg.seed + 1)
-
-    for t in range(run_cfg.rounds):
-        envs = fleet.round_envs(rng, W, S_bits)
-        sorted_params = server.sort(params) if run_cfg.use_ems \
-            else shrinking._deepcopy_dicts(params)
-
-        if planner is None and run_cfg.method == "anycostfl" \
-                and run_cfg.use_planner:
-            # fit the server-side beta planner on a probe update (§III-C.3)
-            key, k1 = jax.random.split(key)
-            probe_idx = rng.permutation(run_cfg.n_train)[:16]
-            probe_batches = {"images": jnp.asarray(train.x[probe_idx][None]),
-                             "labels": jnp.asarray(train.y[probe_idx][None])}
-            trained = client._local_steps(1.0, 1)(sorted_params,
-                                                  probe_batches)
-            probe_update = tree_sub(sorted_params, trained)
-            planner = compression.BetaPlanner.fit(probe_update, k1)
-
-        updates: list[ClientUpdate] = []
-        strategies: list[schedule.Strategy] = []
-        fedhq_L: list[int] = []
-        lat, en, fl, cb = 0.0, 0.0, 0.0, 0.0
-        for i, env in enumerate(envs):
-            if run_cfg.method == "anycostfl":
-                strat = schedule.solve(env)
-                if not strat.feasible:
-                    # no (alpha, beta, f) satisfies the budgets (deep channel
-                    # fade): the device sits this round out — the solver-side
-                    # analogue of client selection; baselines have no such
-                    # signal and their violated budgets are recorded (the
-                    # Table-I effect).
-                    continue
-                if not run_cfg.use_ems:
-                    strat = dataclasses.replace(strat, alpha=1.0)
-                if not run_cfg.use_fgc:
-                    strat = dataclasses.replace(strat, beta=1.0)
-            else:
-                strat = policy.strategy(env, tier=int(tiers[i]))
-            strategies.append(strat)
-            key, k1, k2 = jax.random.split(key, 3)
-            batches = _device_batches(rng, train.x, train.y, parts[i],
-                                      run_cfg.batch_size, run_cfg.tau)
-            if run_cfg.method == "anycostfl":
-                upd = client.local_round(
-                    sorted_params, strat, batches, k2,
-                    planner=planner if run_cfg.use_fgc else None,
-                    w_per_sample=W)
-                if not run_cfg.use_fgc:
-                    # transmit the raw (width-masked) update
-                    upd = dataclasses.replace(
-                        upd, bits=32.0 * strat.alpha * tree_size(params),
-                        beta_realized=1.0)
-            else:
-                alpha = bucket_alpha(strat.alpha, run_cfg.alpha_buckets) \
-                    if run_cfg.method == "heterofl" else 1.0
-                sub = shrinking.shrink(sorted_params, alpha, spec)
-                n_steps = jax.tree_util.tree_leaves(
-                    batches)[0].shape[0]
-                trained = client._local_steps(alpha, n_steps)(sub, batches)
-                update_sub = tree_sub(sub, trained)
-                full_update, wmask = shrinking.expand_update(
-                    update_sub, sorted_params, alpha, spec)
-                comp = policy.compress(full_update, env, k2)
-                mask = jax.tree.map(lambda a, b: a * b, wmask, comp.mask)
-                vals = jax.tree.map(lambda v, m: v * m, comp.values, mask)
-                n_samp = n_steps * run_cfg.batch_size
-                upd = ClientUpdate(
-                    values=vals, mask=mask, alpha=alpha,
-                    beta_target=strat.beta,
-                    beta_realized=float(comp.bits) / S_bits,
-                    bits=float(comp.bits), n_samples=n_samp,
-                    flops=alpha * W * n_samp)
-                if run_cfg.method == "fedhq":
-                    fedhq_L.append(policy.fedhq_levels(env))
-            updates.append(upd)
-            # realized costs (Eq. 6-9) with the *realized* wire size
-            t_com = upd.bits / env.rate
-            e_com = t_com * env.P_com
-            t_cmp = upd.alpha * env.tau * env.D * env.W / strat.freq
-            e_cmp = env.eps_hw * strat.freq ** 2 * upd.alpha \
-                * env.tau * env.D * env.W
-            lat = max(lat, t_cmp + t_com)
-            en += e_cmp + e_com
-            fl += upd.flops
-            cb += upd.bits
-
-        # ---- aggregation
-        if not updates:          # every device faded out this round
-            hist.rounds.append(RoundLog(round=t, latency_s=0.0, energy_j=0.0,
-                                        flops=0.0, comm_bits=0.0,
-                                        mean_alpha=0.0, mean_beta=0.0,
-                                        mean_gain=0.0))
-            continue
-        if run_cfg.method == "anycostfl" and run_cfg.use_aio:
-            weights = aggregation.optimal_coefficients(
-                [u.alpha for u in updates],
-                [max(u.beta_target, 1e-6) for u in updates])
-        elif run_cfg.method == "fedhq":
-            weights = fedhq_weights(fedhq_L)
-        else:
-            weights = aggregation.fedavg_coefficients(
-                [u.n_samples for u in updates])
-        params = server.aggregate(sorted_params, updates, weights=weights)
-
-        log = RoundLog(round=t, latency_s=lat, energy_j=en, flops=fl,
-                       comm_bits=cb,
-                       mean_alpha=float(np.mean([u.alpha for u in updates])),
-                       mean_beta=float(np.mean([u.beta_realized
-                                                for u in updates])),
-                       mean_gain=float(np.mean([s.gain for s in strategies])))
-        if t % run_cfg.eval_every == 0 or t == run_cfg.rounds - 1:
-            acc, loss = ev(params)
-            log.test_acc = float(acc)
-            log.test_loss = float(loss)
-            hist.best_acc = max(hist.best_acc, float(acc))
-            if verbose:
-                print(f"[{run_cfg.method}] round {t:3d} acc={acc:.3f} "
-                      f"loss={loss:.3f} lat={lat:.2f}s E={en:.2f}J "
-                      f"alpha={log.mean_alpha:.2f} beta={log.mean_beta:.4f}")
-        hist.rounds.append(log)
-    return hist
+    """Synchronous federated training (the paper's lock-step rounds)."""
+    from repro.orchestrator.policies import OrchestratorConfig
+    from repro.orchestrator.runner import run_orchestrated
+    return run_orchestrated(run_cfg, fleet_cfg,
+                            OrchestratorConfig(policy="sync"),
+                            verbose=verbose)

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # offline container: seeded-random fallback
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import codec, compression as C
 from repro.utils.pytree import flatten_to_vector

@@ -6,6 +6,8 @@ import pytest
 from repro.sysmodel.population import FleetConfig
 from repro.train.fl_loop import run_fl, FLRunConfig
 
+pytestmark = pytest.mark.slow   # multi-round end-to-end runs (minutes)
+
 # use_planner=False: the analytic (rho, L) split — the BetaPlanner fit is
 # covered by test_compression/test_system and costs ~20 s per run here
 FAST = dict(rounds=6, n_train=256, n_test=128, eval_every=5, lr=0.1,

@@ -1,7 +1,10 @@
 """Closed-form P4 solver properties (paper §IV-D)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # offline container: seeded-random fallback
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import schedule as S
 

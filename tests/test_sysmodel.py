@@ -1,7 +1,10 @@
 """Wireless / energy / fleet system-model tests (paper Eq. 6-9, §V-A.2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # offline container: seeded-random fallback
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.sysmodel import energy as E
 from repro.sysmodel.population import FleetConfig, make_fleet
