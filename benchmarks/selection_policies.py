@@ -1,0 +1,104 @@
+"""Time-to-accuracy comparison of the client-selection control plane.
+
+Runs the same method (default: anycostfl, sync rounds) over a *dynamic*
+fleet — 2-state Markov availability churn plus a draining battery model —
+under the three selection policies (`uniform`, `energy`-headroom-weighted,
+`gain`-aware) with a per-round participation cap, and compares *simulated
+wall-clock* against accuracy, energy, and dropout behaviour.  A static
+always-on `uniform` run rides along as the paper-fleet reference.
+
+``PYTHONPATH=src python benchmarks/selection_policies.py``
+(BENCH_SCALE=fast|full; full is the paper's 60-device fleet)
+
+Emits one JSON row per policy on stdout and caches the full result under
+experiments/fl/selection_policies_<scale>.json (same shape as the
+async_modes artifact).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import CACHE_DIR  # noqa: E402
+from repro.fleet import (AvailabilityConfig, BatteryConfig,  # noqa: E402
+                         FleetDynamicsConfig)
+from repro.orchestrator import OrchestratorConfig, run_orchestrated  # noqa: E402
+from repro.sysmodel.population import FleetConfig  # noqa: E402
+from repro.train.fl_loop import FLRunConfig  # noqa: E402
+
+SCALES = {
+    "fast": dict(n_devices=12, rounds=16, n_train=768, n_test=256,
+                 eval_every=2, participation=0.5),
+    "full": dict(n_devices=60, rounds=40, n_train=2048, n_test=512,
+                 eval_every=5, participation=0.5),
+}
+
+ACC_TARGETS = (0.3, 0.4, 0.5)
+
+
+def _dynamics(selection: str, sc: dict, seed: int) -> FleetDynamicsConfig:
+    return FleetDynamicsConfig(
+        availability=AvailabilityConfig(kind="markov", seed=seed,
+                                        mean_on_s=60.0, mean_off_s=20.0),
+        battery=BatteryConfig(capacity_j=40.0, recharge_w=0.3, seed=seed),
+        selection=selection, participation=sc["participation"],
+        selection_seed=seed + 1)
+
+
+def _row(name: str, hist) -> dict:
+    return {
+        "policy": name,
+        "best_acc": hist.best_acc,
+        "sim_wallclock_s": hist.wallclock(),
+        "energy_j": float(hist.cumulative("energy_j")[-1]),
+        "comm_mb": float(hist.cumulative("comm_bits")[-1] / 8e6),
+        "server_updates": len(hist.rounds),
+        "mean_clients": float(np.mean([r.n_clients for r in hist.rounds])),
+        "n_aborted": int(sum(r.n_aborted for r in hist.rounds)),
+        "n_unavailable": int(sum(r.n_unavailable for r in hist.rounds)),
+        "final_soc": float(hist.rounds[-1].mean_soc),
+        "time_to_acc_s": {f"{t:.1f}": hist.time_to_acc(t)
+                          for t in ACC_TARGETS},
+    }
+
+
+def main(method: str = "anycostfl", seed: int = 0) -> list[dict]:
+    scale_tag = os.environ.get("BENCH_SCALE", "fast")
+    sc = SCALES[scale_tag]
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    seed_tag = "" if seed == 0 else f"_s{seed}"
+    path = os.path.join(
+        CACHE_DIR,
+        f"selection_policies_{method}_{scale_tag}{seed_tag}.json")
+    if os.path.exists(path):
+        rows = json.load(open(path))
+    else:
+        run_cfg = FLRunConfig(method=method, seed=seed, lr=0.1,
+                              rounds=sc["rounds"], n_train=sc["n_train"],
+                              n_test=sc["n_test"],
+                              eval_every=sc["eval_every"])
+        orch = OrchestratorConfig(policy="sync")
+        rows = []
+        # static always-on reference (the paper's fleet, everyone trains)
+        h_ref = run_orchestrated(
+            run_cfg, FleetConfig(n_devices=sc["n_devices"]), orch)
+        rows.append(_row("static_uniform", h_ref))
+        for sel in ("uniform", "energy", "gain"):
+            fleet = FleetConfig(n_devices=sc["n_devices"],
+                                dynamics=_dynamics(sel, sc, seed))
+            rows.append(_row(sel, run_orchestrated(run_cfg, fleet, orch)))
+        with open(path, "w") as f:
+            json.dump(rows, f, indent=1)
+    for row in rows:
+        print(json.dumps(row))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Fleet dynamics & client-selection control plane.
+
+AnycostFL's premise is that per-device latency/energy budgets should
+shape *who trains what, when* — this package supplies the "who" and
+"when" that the static 60-device roster of the paper's §V setup leaves
+out:
+
+``availability``  seeded on/off traces (always-on, 2-state Markov,
+                  diurnal sinusoid, JSON replay); devices join/leave the
+                  cell over simulated time and can churn mid-round.
+``battery``       per-device state-of-charge: dispatches debit the
+                  realized ``E_cmp + E_com``, a trickle recharges, and
+                  the headroom above reserve becomes a *dynamic*
+                  ``E_max`` fed into the Problem-(P4) solver.
+``selection``     uniform / energy-headroom-weighted / gain-aware
+                  (Definition 3) sampling behind one interface, with
+                  per-round participation caps and an independent
+                  selection seed.
+``dynamics``      the bundle config a ``FleetConfig`` carries.
+
+The all-default config reproduces the static fleet bit-for-bit.
+"""
+from repro.fleet.availability import (AlwaysOn, AvailabilityConfig,
+                                      AvailabilityTrace, DiurnalTrace,
+                                      MarkovTrace, ReplayTrace, make_trace)
+from repro.fleet.battery import BatteryConfig, BatteryState
+from repro.fleet.dynamics import FleetDynamicsConfig
+from repro.fleet.selection import (SELECTIONS, EnergyHeadroomSelection,
+                                   GainAwareSelection, SelectionPolicy,
+                                   UniformSelection, make_selection)
+
+__all__ = [
+    "AlwaysOn", "AvailabilityConfig", "AvailabilityTrace", "DiurnalTrace",
+    "MarkovTrace", "ReplayTrace", "make_trace",
+    "BatteryConfig", "BatteryState",
+    "FleetDynamicsConfig",
+    "SELECTIONS", "SelectionPolicy", "UniformSelection",
+    "EnergyHeadroomSelection", "GainAwareSelection", "make_selection",
+]

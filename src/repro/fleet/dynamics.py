@@ -1,0 +1,38 @@
+"""Top-level fleet-dynamics configuration.
+
+One dataclass bundles the three control-plane levers — availability
+trace, battery model, selection policy — so callers attach dynamics to a
+:class:`~repro.sysmodel.population.FleetConfig` with a single field.  The
+all-default config (``always`` availability, no battery, ``uniform``
+selection, no participation cap) is exactly the static fleet: it consumes
+no extra randomness and schedules no extra events, so runs with it are
+bit-identical to runs with no dynamics attached.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.fleet.availability import AvailabilityConfig
+from repro.fleet.battery import BatteryConfig
+from repro.fleet.selection import SELECTIONS
+
+
+@dataclasses.dataclass
+class FleetDynamicsConfig:
+    availability: AvailabilityConfig = dataclasses.field(
+        default_factory=AvailabilityConfig)
+    battery: Optional[BatteryConfig] = None
+    selection: str = "uniform"
+    # per-round participation cap as a fraction of the *available* devices
+    participation: float = 1.0
+    # independent stream for who-trains-when; None -> derived from the run
+    # seed through a decorrelated generator (see Simulation)
+    selection_seed: Optional[int] = None
+
+    def __post_init__(self):
+        if self.selection not in SELECTIONS:
+            raise ValueError(f"unknown selection {self.selection!r}; "
+                             f"expected one of {SELECTIONS}")
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError("participation must be in (0, 1]")

@@ -1,0 +1,108 @@
+"""Client-selection policies (fleet dynamics, control plane).
+
+At every round start the orchestrator hands the policy the *available*
+device ids (availability trace on, battery above reserve), their
+dynamic-budget :class:`~repro.core.schedule.DeviceEnv` draws, a per-device
+energy-headroom map, and the participation cap; the policy returns the
+ids to dispatch, in ascending order (the runner's per-device RNG draws
+follow device order, so a stable ordering keeps seeded runs replayable).
+
+* ``uniform`` — the paper's implicit behaviour: everyone participates;
+  under a cap, a uniform sample without replacement.  When the cap does
+  not bind this consumes **no** randomness and returns the candidate list
+  unchanged, which keeps static-fleet runs bit-identical to the
+  pre-control-plane loop (golden-compatible).
+* ``energy``  — sample proportional to energy headroom (battery joules
+  above reserve when a battery model is attached, otherwise the static
+  ``E_max`` draw), so nearly-drained devices are rarely asked to spend
+  their reserve ("to talk or to work" style energy feedback).
+* ``gain``    — deterministic top-k by the expected local learning gain
+  ``g = alpha^4 * beta`` (Definition 3) of each device's *solved*
+  Problem-(P4) strategy under its current channel/budget draw: the
+  control plane ranks devices by how much useful training their budgets
+  buy this round.
+
+Selection randomness comes from a dedicated generator (see
+``--selection-seed``) so who-trains-when ablations never perturb the
+model-init / data / channel streams.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core import schedule
+
+SELECTIONS = ("uniform", "energy", "gain")
+
+
+class SelectionPolicy:
+    """Interface: pick <= cap device ids out of the available candidates."""
+
+    name = "base"
+
+    def select(self, candidates: Sequence[int],
+               envs: Mapping[int, schedule.DeviceEnv],
+               headroom: Mapping[int, float], cap: int) -> list[int]:
+        raise NotImplementedError
+
+
+class UniformSelection(SelectionPolicy):
+    name = "uniform"
+
+    def __init__(self, rng: np.random.Generator):
+        self.rng = rng
+
+    def select(self, candidates, envs, headroom, cap):
+        if cap >= len(candidates):
+            return list(candidates)     # no draw: golden-compatible
+        pick = self.rng.choice(len(candidates), size=cap, replace=False)
+        return sorted(candidates[j] for j in pick)
+
+
+class EnergyHeadroomSelection(SelectionPolicy):
+    name = "energy"
+
+    def __init__(self, rng: np.random.Generator):
+        self.rng = rng
+
+    def select(self, candidates, envs, headroom, cap):
+        if cap >= len(candidates):
+            return list(candidates)
+        w = np.array([max(headroom[i], 0.0) for i in candidates])
+        # strictly positive floor: choice(replace=False) needs >= cap
+        # non-zero probabilities even when few devices have headroom
+        w = w + 1e-9 * max(float(w.max()), 1.0)
+        pick = self.rng.choice(len(candidates), size=cap, replace=False,
+                               p=w / w.sum())
+        return sorted(candidates[j] for j in pick)
+
+
+class GainAwareSelection(SelectionPolicy):
+    name = "gain"
+
+    def __init__(self, rng: np.random.Generator):
+        del rng     # deterministic rank; kept for a uniform constructor
+
+    def select(self, candidates, envs, headroom, cap):
+        if cap >= len(candidates):
+            return list(candidates)
+        # rank by expected gain of the solved strategy; ties -> device id.
+        # prepare() re-solves for the selected devices — the closed-form
+        # solve costs microseconds, and recomputing keeps the selection
+        # layer stateless and the runner's rng/key stream untouched
+        ranked = sorted(candidates,
+                        key=lambda i: (-schedule.solve(envs[i]).gain, i))
+        return sorted(ranked[:cap])
+
+
+def make_selection(name: str, rng: np.random.Generator) -> SelectionPolicy:
+    if name == "uniform":
+        return UniformSelection(rng)
+    if name == "energy":
+        return EnergyHeadroomSelection(rng)
+    if name == "gain":
+        return GainAwareSelection(rng)
+    raise ValueError(f"unknown selection policy {name!r}; "
+                     f"expected one of {SELECTIONS}")

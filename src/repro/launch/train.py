@@ -87,6 +87,28 @@ def _modality_extras(cfg, batch, seq_len):
     return {}
 
 
+def _dynamics_config(args):
+    """Fleet-dynamics control plane from CLI flags.  The defaults
+    (``--availability always --battery off --selection uniform``) build a
+    trivial config that reproduces the static fleet bit-for-bit."""
+    from repro.fleet import (AvailabilityConfig, BatteryConfig,
+                             FleetDynamicsConfig)
+    avail = AvailabilityConfig(
+        kind=args.availability,
+        seed=args.availability_seed
+        if args.availability_seed is not None else args.seed,
+        trace_file=args.trace_file)
+    battery = None
+    if args.battery == "on":
+        battery = BatteryConfig(capacity_j=args.battery_capacity,
+                                recharge_w=args.battery_recharge,
+                                seed=args.seed)
+    return FleetDynamicsConfig(
+        availability=avail, battery=battery, selection=args.selection,
+        participation=args.participation,
+        selection_seed=args.selection_seed)
+
+
 def run_fl(args):
     from repro.orchestrator import OrchestratorConfig, run_orchestrated
     from repro.sysmodel.population import FleetConfig
@@ -97,11 +119,14 @@ def run_fl(args):
         method=args.method, rounds=args.rounds, lr=args.lr,
         seed=args.seed, iid=not args.non_iid, n_train=args.n_train,
         n_test=args.n_test, eval_every=args.eval_every)
-    fleet = FleetConfig(n_devices=args.devices)
+    fleet = FleetConfig(n_devices=args.devices,
+                        dynamics=_dynamics_config(args))
     orch = OrchestratorConfig(
         policy=args.async_mode, max_wallclock_s=args.max_wallclock,
         deadline_s=args.deadline, buffer_size=args.buffer_size,
         staleness_exponent=args.staleness_exp,
+        staleness_cap=args.staleness_cap,
+        staleness_mode=args.staleness_mode,
         straggler_mode=args.straggler_mode,
         use_pool=False if args.no_pool else None)
     hist = run_orchestrated(run_cfg, fleet, orch, verbose=True)
@@ -109,6 +134,8 @@ def run_fl(args):
     tta = {f"acc>={th:.2f}": hist.time_to_acc(th)
            for th in (0.3, 0.5, 0.7, 0.9) if hist.best_acc >= th}
     print(json.dumps({"method": args.method, "policy": args.async_mode,
+                      "availability": args.availability,
+                      "selection": args.selection,
                       "best_acc": hist.best_acc,
                       "sim_wallclock_s": hist.wallclock(),
                       "time_to_acc_s": tta,
@@ -140,8 +167,42 @@ def main():
                     help="fedbuff: weight *= (1+staleness)^-exp")
     ap.add_argument("--straggler-mode", default="drop",
                     choices=["drop", "downweight"])
+    ap.add_argument("--staleness-cap", type=int, default=None,
+                    help="fedbuff admission: reject updates staler than "
+                         "this many server versions")
+    ap.add_argument("--staleness-mode", default="drop",
+                    choices=["drop", "requeue"],
+                    help="what to do with a cap-rejected update: discard "
+                         "it, or retrain its minibatches on the current "
+                         "model")
     ap.add_argument("--no-pool", action="store_true",
                     help="disable vmapped client batching")
+    # ---- fleet dynamics control plane
+    ap.add_argument("--availability", default="always",
+                    choices=["always", "markov", "diurnal", "replay"],
+                    help="device availability trace (always = the static "
+                         "fleet of the paper)")
+    ap.add_argument("--availability-seed", type=int, default=None,
+                    help="trace seed (default: --seed)")
+    ap.add_argument("--trace-file", default=None,
+                    help="JSON on-intervals for --availability replay")
+    ap.add_argument("--battery", default="off", choices=["off", "on"],
+                    help="per-device state-of-charge model: dispatches "
+                         "drain E_cmp+E_com, headroom clamps E_max")
+    ap.add_argument("--battery-capacity", type=float, default=60.0,
+                    help="battery capacity in joules")
+    ap.add_argument("--battery-recharge", type=float, default=0.05,
+                    help="trickle recharge in joules per simulated second")
+    ap.add_argument("--selection", default="uniform",
+                    choices=["uniform", "energy", "gain"],
+                    help="client-selection policy")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="per-round cap as a fraction of available devices")
+    ap.add_argument("--selection-seed", type=int, default=None,
+                    help="independent seed for who-trains-when (default: "
+                         "derived from --seed via a decorrelated stream, "
+                         "so selection ablations never perturb model-init "
+                         "or data draws)")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=128)

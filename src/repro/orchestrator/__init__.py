@@ -17,6 +17,16 @@ Modules
                  through one jit'd ``jax.vmap`` step.
 ``runner``       the unified driver ``train/fl_loop.py`` delegates to.
 
+The runner also hosts the fleet-dynamics control plane from
+``repro.fleet``: availability traces gate every dispatch (and abort
+clients that churn out of the cell mid-round via CHURN events in the
+heap), battery headroom dynamically clamps the ``E_max`` each device's
+Problem-(P4) solve sees, and a selection policy (uniform /
+energy-headroom / gain-aware) picks the per-round cohort under a
+participation cap.  With the all-default dynamics config (always-on, no
+battery, uniform, no cap) every gate is the identity and the timeline is
+bit-identical to the static fleet.
+
 Policy <-> paper-constraint map
 -------------------------------
 ``sync``     The paper's §III-A round: the server barriers on all clients;
@@ -35,8 +45,12 @@ Policy <-> paper-constraint map
              K arrivals with the element-wise AIO rule (Eq. 5), scaling
              each update's Theorem-1 coefficient (Eq. 13) by a staleness
              discount ``(1 + s)^-gamma`` so a fully-stale update cannot
-             dominate the merge.  EMS channel sorting (§III-B.1) is frozen
-             at t=0: cross-version element-wise aggregation requires one
+             dominate the merge.  An optional ``staleness_cap`` adds
+             admission control: arrivals lagging the server by more than
+             the cap are rejected outright (``drop``) or retrained against
+             the current version (``requeue``) before they can poison the
+             buffer.  EMS channel sorting (§III-B.1) is frozen at t=0:
+             cross-version element-wise aggregation requires one
              coordinate frame.
 """
 from repro.orchestrator.events import Event, EventQueue

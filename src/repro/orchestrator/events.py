@@ -24,6 +24,7 @@ from typing import Any, Optional
 # event kinds used by the runner
 COMPLETE = "complete"     # a client's (T_cmp + T_com) elapsed; update arrived
 RETRY = "retry"           # infeasible budgets this draw; re-probe the channel
+CHURN = "churn"           # device left the cell mid-round; round aborted
 
 
 @dataclasses.dataclass(frozen=True, order=True)

@@ -36,6 +36,12 @@ POLICIES = ("sync", "semisync", "fedbuff")
 DROP = "drop"
 DOWNWEIGHT = "downweight"
 
+# staleness-cap handling for fedbuff
+STALE_DROP = "drop"          # discard the update; the client's automatic
+                             # re-dispatch trains fresh data on the new model
+STALE_REQUEUE = "requeue"    # retrain the *same* minibatch draw against the
+                             # current model version before dispatching fresh
+
 
 @dataclasses.dataclass
 class OrchestratorConfig:
@@ -48,6 +54,8 @@ class OrchestratorConfig:
     # --- fedbuff
     buffer_size: int = 8                   # K updates per server merge
     staleness_exponent: float = 0.5        # w_i *= (1 + s_i)^-gamma
+    staleness_cap: Optional[int] = None    # admission: reject staler updates
+    staleness_mode: str = STALE_DROP       # drop | requeue
     retry_interval_s: Optional[float] = None   # infeasible-draw backoff
     # --- stopping / execution
     max_wallclock_s: Optional[float] = None    # simulated seconds
@@ -61,6 +69,12 @@ class OrchestratorConfig:
             raise ValueError(
                 f"unknown straggler_mode {self.straggler_mode!r}; "
                 f"expected {DROP!r} or {DOWNWEIGHT!r}")
+        if self.staleness_mode not in (STALE_DROP, STALE_REQUEUE):
+            raise ValueError(
+                f"unknown staleness_mode {self.staleness_mode!r}; "
+                f"expected {STALE_DROP!r} or {STALE_REQUEUE!r}")
+        if self.staleness_cap is not None and self.staleness_cap < 0:
+            raise ValueError("staleness_cap must be >= 0")
 
 
 def base_weights(method: str, use_aio: bool, updates: Sequence,
@@ -166,6 +180,17 @@ class FedBuffPolicy:
 
     def should_aggregate(self, buffer) -> bool:
         return len(buffer) >= self.cfg.buffer_size
+
+    def admit(self, staleness: int) -> bool:
+        """Staleness-cap admission control: an arriving update whose model
+        version lags the server by more than the cap never enters the
+        buffer (ROADMAP item; guards against divergence under deep
+        asynchrony).  The runner then either lets the client's automatic
+        re-dispatch replace the work (``drop``) or retrains the rejected
+        round's exact minibatches against the current version
+        (``requeue``)."""
+        return self.cfg.staleness_cap is None \
+            or staleness <= self.cfg.staleness_cap
 
     def weights(self, method: str, use_aio: bool, buffer,
                 fedhq_L: Sequence[int]) -> jax.Array:

@@ -27,6 +27,7 @@ Timeline semantics:
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Optional
 
 import jax
@@ -39,12 +40,14 @@ from repro.core.anycost import (AnycostClient, AnycostServer, ClientUpdate,
                                 bucket_alpha)
 from repro.data.partition import partition_dirichlet, partition_iid
 from repro.data.synthetic import make_image_task
+from repro.fleet import AlwaysOn, FleetDynamicsConfig, make_selection
 from repro.models import cnn as cnn_mod
 from repro.models.registry import build_model
 from repro.orchestrator import events as ev_mod
 from repro.orchestrator.client_pool import ClientPool, TrainJob
-from repro.orchestrator.policies import (OrchestratorConfig, apply_scales,
-                                         base_weights, make_policy)
+from repro.orchestrator.policies import (STALE_REQUEUE, OrchestratorConfig,
+                                         apply_scales, base_weights,
+                                         make_policy)
 from repro.sysmodel.population import FleetConfig, make_fleet
 from repro.train.baselines import BaselinePolicy
 from repro.train.fl_loop import (FLRunConfig, History, RoundLog,
@@ -131,6 +134,45 @@ class Simulation:
         self.pool = ClientPool(self.client)
         self._agg_fast = None
         self._shrink_cache: dict = {}
+
+        # ---- fleet-dynamics control plane.  Selection randomness lives in
+        # its own generator so who-trains-when ablations never perturb the
+        # model-init / data / channel streams; --selection-seed decouples it
+        # from the run seed entirely.
+        dyn = self.dyn = fleet_cfg.dynamics or FleetDynamicsConfig()
+        sel_seed = dyn.selection_seed if dyn.selection_seed is not None \
+            else run_cfg.seed
+        self.selection = make_selection(
+            dyn.selection, np.random.default_rng([0x5E1EC7, sel_seed]))
+        self.dispatch_log: list[tuple] = []
+        self.fleet_dynamic = (
+            (self.fleet.trace is not None
+             and not isinstance(self.fleet.trace, AlwaysOn))
+            or self.fleet.battery is not None)
+
+    # ------------------------------------------------------- fleet dynamics
+
+    def gate_round(self, t_wall: float, envs: list[schedule.DeviceEnv]):
+        """Availability/battery/selection gating for a round-based dispatch.
+
+        Static-fleet identity: an always-on trace with no battery and
+        uniform selection under a non-binding cap selects every device in
+        order, consumes no randomness, and hands back the caller's env
+        objects untouched — bit-identical to the ungated loop.
+        """
+        n = self.fleet_cfg.n_devices
+        cand = [i for i in range(n) if self.fleet.available(i, t_wall)]
+        envs_eff = {i: self.fleet.dynamic_env(i, envs[i], t_wall)
+                    for i in cand}
+        headroom = {i: (self.fleet.battery.headroom(i, t_wall)
+                        if self.fleet.battery is not None
+                        else envs_eff[i].E_max) for i in cand}
+        if not cand:
+            return [], envs_eff, n, headroom
+        cap = len(cand) if self.dyn.participation >= 1.0 \
+            else max(1, math.ceil(self.dyn.participation * len(cand)))
+        selected = self.selection.select(cand, envs_eff, headroom, cap)
+        return selected, envs_eff, n - len(cand), headroom
 
     # ------------------------------------------------------------ round body
 
@@ -290,24 +332,48 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
         sorted_params = sim.sort_params(params)
         sim.ensure_planner(sorted_params)
 
-        pendings = [p for p in (sim.prepare(i, env)
-                                for i, env in enumerate(envs))
+        selected, envs_eff, n_unavail, headroom = sim.gate_round(t_wall,
+                                                                 envs)
+        pendings = [p for p in (sim.prepare(i, envs_eff[i])
+                                for i in selected)
                     if p is not None]
+        for p in pendings:
+            sim.dispatch_log.append((t_wall, p.client_id,
+                                     headroom[p.client_id]))
+
+        # mid-round churn: a device that leaves the cell before its
+        # *planned* T_cmp + T_com elapses aborts — its update never
+        # arrives, training is skipped, and the compute/energy burned up
+        # to the departure is charged (pro-rated over the planned flight)
+        live, aborted = [], []
+        for p in pendings:
+            t_off = sim.fleet.next_departure(p.client_id, t_wall)
+            planned = p.strat.T_cmp + p.strat.T_com
+            if t_off < t_wall + planned:
+                p.dispatched_at = t_wall
+                p.completes_at = t_off
+                frac = min(1.0, (t_off - t_wall) / planned) \
+                    if planned > 0 else 1.0
+                p.energy = frac * (p.strat.E_cmp + p.strat.E_com)
+                aborted.append(p)
+            else:
+                live.append(p)
+
         subs: dict = {}
         if use_pool and rc.method == "anycostfl":
-            for p in pendings:
+            for p in live:
                 if p.alpha not in subs:
                     subs[p.alpha] = sim.shrink_fast(sorted_params, p.alpha)
         if use_pool:
             trained = sim.pool.train_shared(
                 sorted_params,
                 [TrainJob(p.client_id, p.alpha, p.batches)
-                 for p in pendings], subs)
+                 for p in live], subs)
         else:
-            trained = [sim.train_one(p, sorted_params) for p in pendings]
+            trained = [sim.train_one(p, sorted_params) for p in live]
 
         en, fl, cb = 0.0, 0.0, 0.0
-        for p, tr in zip(pendings, trained):
+        for p, tr in zip(live, trained):
             sim.materialize(p, tr, sorted_params, fast=use_pool,
                             sub=subs.get(p.alpha))
             p.dispatched_at = t_wall
@@ -316,18 +382,39 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
             en += p.energy
             fl += p.update.flops
             cb += p.update.bits
-        for _ in range(len(pendings)):     # record the arrival order
+        for p in aborted:
+            queue.push(p.completes_at, ev_mod.CHURN, p.client_id, p)
+            en += p.energy
+        for _ in range(len(live) + len(aborted)):  # record arrival order
             queue.pop()
 
-        if not pendings:           # every device faded out this round
-            hist.rounds.append(RoundLog(round=t, latency_s=0.0, energy_j=0.0,
-                                        flops=0.0, comm_bits=0.0,
-                                        mean_alpha=0.0, mean_beta=0.0,
-                                        mean_gain=0.0, t_wall=t_wall))
+        if not live:               # every device faded out this round
+            for p in aborted:
+                sim.fleet.debit(p.client_id, p.energy, p.completes_at)
+            hist.rounds.append(RoundLog(
+                round=t, latency_s=0.0, energy_j=en, flops=0.0,
+                comm_bits=0.0, mean_alpha=0.0, mean_beta=0.0,
+                mean_gain=0.0, t_wall=t_wall, n_unavailable=n_unavail,
+                n_aborted=len(aborted),
+                mean_soc=(sim.fleet.battery.mean_soc_frac(t_wall)
+                          if sim.fleet.battery is not None else 1.0)))
+            if sim.fleet_dynamic:
+                # idle server deadline: let traces/batteries evolve so the
+                # fleet can come back (a static fleet must not drift)
+                t_wall += sim.fleet_cfg.T_max
             continue
 
-        accepted, scales, lat = policy.accept(pendings, 0.0)
+        accepted, scales, lat = policy.accept(live, 0.0)
+        if aborted:
+            # the server learns of a dropout at the departure moment, but
+            # never waits past its own deadline barrier (semisync)
+            barrier = getattr(policy, "deadline", math.inf)
+            lat = max(lat, min(barrier,
+                               max(p.completes_at - t_wall
+                                   for p in aborted)))
         t_wall += lat
+        for p in live + aborted:
+            sim.fleet.debit(p.client_id, p.energy, t_wall)
         if accepted:
             fedhq_L = [p.fedhq_level for p in accepted] \
                 if rc.method == "fedhq" else []
@@ -339,12 +426,15 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
 
         log = RoundLog(
             round=t, latency_s=lat, energy_j=en, flops=fl, comm_bits=cb,
-            mean_alpha=float(np.mean([p.update.alpha for p in pendings])),
+            mean_alpha=float(np.mean([p.update.alpha for p in live])),
             mean_beta=float(np.mean([p.update.beta_realized
-                                     for p in pendings])),
-            mean_gain=float(np.mean([p.strat.gain for p in pendings])),
+                                     for p in live])),
+            mean_gain=float(np.mean([p.strat.gain for p in live])),
             t_wall=t_wall, n_clients=len(accepted),
-            n_dropped=len(pendings) - len(accepted))
+            n_dropped=len(live) - len(accepted),
+            n_unavailable=n_unavail, n_aborted=len(aborted),
+            mean_soc=(sim.fleet.battery.mean_soc_frac(t_wall)
+                      if sim.fleet.battery is not None else 1.0))
         if t % rc.eval_every == 0 or t == rc.rounds - 1:
             acc, loss = sim.evaluate(params)
             log.test_acc = acc
@@ -361,6 +451,7 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
                 and t_wall >= orch.max_wallclock_s:
             break
     hist.trace = queue.trace_signature()
+    hist.dispatch_log = sim.dispatch_log
     return hist
 
 
@@ -373,6 +464,10 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
         else policy.pool_default
     retry_dt = orch.retry_interval_s if orch.retry_interval_s is not None \
         else sim.fleet_cfg.T_max
+    if sim.dyn.selection != "uniform" or sim.dyn.participation < 1.0:
+        print("[fedbuff] warning: selection policies and participation "
+              "caps are round-based controls; fedbuff devices free-run "
+              "(availability/battery gating still applies)")
     queue = ev_mod.EventQueue()
     hist = History(rc, [])
 
@@ -387,7 +482,35 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
     last_agg_t = 0.0
     en, fl, cb = 0.0, 0.0, 0.0
 
+    def enqueue_flight(p: PendingUpdate, now: float) -> None:
+        """COMPLETE at the planned arrival — unless the availability trace
+        says the device churns out of the cell first."""
+        i = p.client_id
+        inflight_version[i] = p.version
+        t_off = sim.fleet.next_departure(i, now)
+        if t_off < p.completes_at:
+            queue.push(t_off, ev_mod.CHURN, i, p)
+        else:
+            queue.push(p.completes_at, ev_mod.COMPLETE, i, p)
+
     def dispatch(i: int, env: schedule.DeviceEnv, now: float) -> None:
+        # availability / battery gating: an off-cell device re-enters the
+        # queue when its trace flips back on; a drained one when the
+        # trickle restores its reserve headroom (never, with no recharge)
+        fleet = sim.fleet
+        if fleet.trace is not None and not fleet.trace.available(i, now):
+            inflight_version.pop(i, None)
+            t_on = fleet.trace.next_change(i, now)
+            if math.isfinite(t_on):
+                queue.push(t_on, ev_mod.RETRY, i)
+            return
+        if fleet.battery is not None and not fleet.battery.available(i, now):
+            inflight_version.pop(i, None)
+            t_rdy = fleet.battery.ready_time(i, now)
+            if math.isfinite(t_rdy):
+                queue.push(max(t_rdy, now + 1e-9), ev_mod.RETRY, i)
+            return
+        env = fleet.dynamic_env(i, env, now)
         p = sim.prepare(i, env)
         if p is None:
             queue.push(now + retry_dt, ev_mod.RETRY, i)
@@ -399,8 +522,36 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
         t_cmp = p.alpha * env.tau * env.D * env.W / p.strat.freq
         t_com = p.alpha * p.strat.beta * env.S_bits / env.rate
         p.completes_at = now + t_cmp + t_com
-        inflight_version[i] = version
-        queue.push(p.completes_at, ev_mod.COMPLETE, i, p)
+        sim.dispatch_log.append((now, i,
+                                 fleet.battery.headroom(i, now)
+                                 if fleet.battery is not None
+                                 else env.E_max))
+        enqueue_flight(p, now)
+
+    def requeue(p: PendingUpdate, now: float) -> None:
+        """Staleness-cap ``requeue`` mode: retrain the rejected round's
+        exact minibatch draw against the *current* model version (same
+        env/strategy, fresh flight) instead of discarding the work.
+        Subject to the same availability/battery gates as a dispatch —
+        a device that just spent itself below reserve falls back to the
+        gated dispatch path (which schedules its recharge RETRY)."""
+        fleet = sim.fleet
+        i = p.client_id
+        if (fleet.trace is not None
+                and not fleet.trace.available(i, now)) \
+                or (fleet.battery is not None
+                    and not fleet.battery.available(i, now)):
+            dispatch(i, fleet.device_env(sim.rng, i, sim.W, sim.S_bits),
+                     now)
+            return
+        q = dataclasses.replace(p, version=version, dispatched_at=now,
+                                staleness=0, update=None)
+        q.completes_at = now + (p.completes_at - p.dispatched_at)
+        sim.dispatch_log.append((now, i,
+                                 fleet.battery.headroom(i, now)
+                                 if fleet.battery is not None
+                                 else p.env.E_max))
+        enqueue_flight(q, now)
 
     for i, env in enumerate(sim.fleet.round_envs(sim.rng, sim.W,
                                                  sim.S_bits)):
@@ -416,6 +567,7 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
         wall_limit = rc.rounds * orch.buffer_size * cycle * 4.0
 
     now = 0.0
+    n_stale = n_aborted = 0
     while len(queue):
         ev = queue.pop()
         if ev.time > wall_limit:
@@ -426,9 +578,39 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
                      sim.fleet.device_env(sim.rng, ev.client, sim.W,
                                           sim.S_bits), now)
             continue
+        if ev.kind == ev_mod.CHURN:
+            # the device left the cell mid-flight: abort, charge the
+            # pro-rated planned energy, and come back when the trace does
+            p = ev.payload
+            planned = p.completes_at - p.dispatched_at
+            frac = min(1.0, (now - p.dispatched_at) / planned) \
+                if planned > 0 else 1.0
+            waste = frac * (p.strat.E_cmp + p.strat.E_com)
+            en += waste
+            sim.fleet.debit(p.client_id, waste, now)
+            n_aborted += 1
+            inflight_version.pop(p.client_id, None)
+            t_on = sim.fleet.trace.next_change(p.client_id, now)
+            if math.isfinite(t_on):
+                queue.push(t_on, ev_mod.RETRY, p.client_id)
+            continue
 
         p = ev.payload
         p.staleness = version - p.version
+        # the device spent its planned round energy whether or not the
+        # server admits the update (battery model; the energy *log* keeps
+        # realized costs from materialization, as in the sync loop)
+        sim.fleet.debit(p.client_id, p.strat.E_cmp + p.strat.E_com, now)
+        if not policy.admit(p.staleness):
+            n_stale += 1
+            en += p.strat.E_cmp + p.strat.E_com   # spent, never aggregated
+            if orch.staleness_mode == STALE_REQUEUE:
+                requeue(p, now)
+            else:
+                dispatch(p.client_id,
+                         sim.fleet.device_env(sim.rng, p.client_id, sim.W,
+                                              sim.S_bits), now)
+            continue
         buffer.append(p)
         dispatch(p.client_id,
                  sim.fleet.device_env(sim.rng, p.client_id, sim.W,
@@ -485,7 +667,11 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
                                      for b in buffer])),
             mean_gain=float(np.mean([b.strat.gain for b in buffer])),
             t_wall=now, n_clients=len(buffer),
-            mean_staleness=float(np.mean([b.staleness for b in buffer])))
+            mean_staleness=float(np.mean([b.staleness for b in buffer])),
+            max_staleness=int(max(b.staleness for b in buffer)),
+            n_stale_dropped=n_stale, n_aborted=n_aborted,
+            mean_soc=(sim.fleet.battery.mean_soc_frac(now)
+                      if sim.fleet.battery is not None else 1.0))
         done = (orch.max_wallclock_s is None and n_agg >= rc.rounds)
         if (n_agg - 1) % rc.eval_every == 0 or done:
             acc, loss = sim.evaluate(current)
@@ -500,6 +686,7 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
         hist.rounds.append(log)
         buffer = []
         en, fl, cb = 0.0, 0.0, 0.0
+        n_stale = n_aborted = 0
         last_agg_t = now
         if done:
             break
@@ -511,6 +698,7 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
         hist.rounds[-1].test_loss = loss
         hist.best_acc = max(hist.best_acc, acc)
     hist.trace = queue.trace_signature()
+    hist.dispatch_log = sim.dispatch_log
     return hist
 
 

@@ -7,11 +7,14 @@ E_max ~ U[3, 9] J (CIFAR; halved for FMNIST); shared latency budget T_max.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 import numpy as np
 
 from repro.core.schedule import DeviceEnv
+from repro.fleet import (AvailabilityTrace, BatteryState,
+                         FleetDynamicsConfig, make_trace)
 from repro.sysmodel.wireless import WirelessConfig, achievable_rate, \
     drop_positions
 
@@ -33,6 +36,8 @@ class FleetConfig:
     eps_var_scale: float = 1.0
     dist_mean_m: Optional[float] = None      # None -> uniform in cell
     dist_var_scale: float = 1.0
+    # fleet dynamics control plane (None -> static always-on roster)
+    dynamics: Optional[FleetDynamicsConfig] = None
 
 
 @dataclasses.dataclass
@@ -41,6 +46,9 @@ class Fleet:
     eps_hw: np.ndarray        # (I,) fixed per device
     E_max: np.ndarray         # (I,) fixed per device
     data_sizes: np.ndarray    # (I,) samples per device
+    # dynamics state (seeded independently of the sampling rng stream)
+    trace: Optional[AvailabilityTrace] = None
+    battery: Optional[BatteryState] = None
 
     def _env(self, i: int, rate: float, W: float, S_bits: float) -> DeviceEnv:
         c = self.cfg
@@ -80,6 +88,34 @@ class Fleet:
         rate = achievable_rate(dist, self.cfg.wireless, rng=rng)
         return self._env(i, rate[0], W, S_bits)
 
+    # -------------------------------------------------------- fleet dynamics
+
+    def available(self, i: int, t: float) -> bool:
+        """Is device i dispatchable at simulated time t (in cell + charged)?"""
+        if self.trace is not None and not self.trace.available(i, t):
+            return False
+        if self.battery is not None and not self.battery.available(i, t):
+            return False
+        return True
+
+    def next_departure(self, i: int, t: float) -> float:
+        """When a currently-present device next leaves the cell (inf: never)."""
+        return self.trace.next_change(i, t) if self.trace is not None \
+            else math.inf
+
+    def dynamic_env(self, i: int, env: DeviceEnv, t: float) -> DeviceEnv:
+        """Clamp the per-round energy budget by the battery headroom, so
+        the Problem-(P4) solver optimizes against what the device can
+        actually spend right now.  Identity when no battery is attached."""
+        if self.battery is None:
+            return env
+        return dataclasses.replace(
+            env, E_max=min(env.E_max, self.battery.headroom(i, t)))
+
+    def debit(self, i: int, energy_j: float, t: float) -> None:
+        if self.battery is not None:
+            self.battery.debit(i, energy_j, t)
+
 
 def make_fleet(rng: np.random.Generator, cfg: FleetConfig,
                data_sizes: np.ndarray) -> Fleet:
@@ -91,4 +127,13 @@ def make_fleet(rng: np.random.Generator, cfg: FleetConfig,
     e_lo, e_hi = cfg.E_max_range
     e_max = rng.uniform(e_lo, e_hi, cfg.n_devices)
     assert len(data_sizes) == cfg.n_devices
-    return Fleet(cfg, eps, e_max, np.asarray(data_sizes))
+    trace = battery = None
+    if cfg.dynamics is not None:
+        # dynamics draw from their own seeded generators, never from the
+        # shared sampling rng: attaching a (trivial or not) control plane
+        # leaves the eps/E_max/position streams untouched
+        trace = make_trace(cfg.dynamics.availability, cfg.n_devices)
+        if cfg.dynamics.battery is not None:
+            battery = BatteryState(cfg.dynamics.battery, cfg.n_devices)
+    return Fleet(cfg, eps, e_max, np.asarray(data_sizes),
+                 trace=trace, battery=battery)

@@ -74,6 +74,12 @@ class RoundLog:
     n_clients: int = 0            # updates that entered the aggregation
     n_dropped: int = 0            # completed but rejected (semisync)
     mean_staleness: float = 0.0   # fedbuff: mean server-version lag
+    # fleet-dynamics extensions (zero under the static always-on roster)
+    max_staleness: int = 0        # fedbuff: worst admitted version lag
+    n_stale_dropped: int = 0      # fedbuff: rejected by the staleness cap
+    n_unavailable: int = 0        # off-cell / drained at dispatch time
+    n_aborted: int = 0            # churned out of the cell mid-round
+    mean_soc: float = 1.0         # battery fleet state of charge (fraction)
 
 
 @dataclasses.dataclass
@@ -82,6 +88,9 @@ class History:
     rounds: list
     best_acc: float = 0.0
     trace: Optional[tuple] = None   # event-queue replay signature
+    # (t, client_id, headroom_j) per successful dispatch — lets tests and
+    # benchmarks audit the control plane's availability/battery gating
+    dispatch_log: Optional[list] = None
 
     def cumulative(self, field: str) -> np.ndarray:
         return np.cumsum([getattr(r, field) for r in self.rounds])

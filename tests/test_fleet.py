@@ -1,0 +1,319 @@
+"""Fleet dynamics & client-selection control plane.
+
+Covers: seeded availability traces replay identically, battery SoC
+invariants (never negative, drained devices never dispatched), the
+static-defaults bit-identity with the pre-control-plane loop, selection
+policies, and the independent selection seed.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # offline container: seeded-random fallback
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.fleet import (AvailabilityConfig, BatteryConfig, BatteryState,
+                         FleetDynamicsConfig, ReplayTrace, make_selection,
+                         make_trace)
+from repro.orchestrator import OrchestratorConfig, run_orchestrated
+from repro.sysmodel.population import FleetConfig
+from repro.train.fl_loop import FLRunConfig, run_fl
+
+TINY = dict(rounds=3, n_train=128, n_test=64, eval_every=1, lr=0.1,
+            batch_size=32, seed=3, use_planner=False)
+
+
+# ------------------------------------------------------- availability traces
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_markov_trace_replays_identically(seed):
+    cfg = AvailabilityConfig(kind="markov", seed=seed, mean_on_s=10.0,
+                             mean_off_s=5.0)
+    t1, t2 = make_trace(cfg, 3), make_trace(cfg, 3)
+    grid = np.linspace(0.0, 300.0, 200)
+    for i in range(3):
+        assert [t1.available(i, t) for t in grid] == \
+               [t2.available(i, t) for t in grid]
+
+
+def test_markov_trace_seed_changes_sequence():
+    a = make_trace(AvailabilityConfig(kind="markov", seed=0), 4)
+    b = make_trace(AvailabilityConfig(kind="markov", seed=1), 4)
+    grid = np.linspace(0.0, 500.0, 300)
+    seq = lambda tr: [tr.available(i, t) for i in range(4) for t in grid]
+    assert seq(a) != seq(b)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 100), st.floats(0.0, 200.0))
+def test_markov_state_constant_until_next_change(seed, t):
+    tr = make_trace(AvailabilityConfig(kind="markov", seed=seed,
+                                       mean_on_s=20.0, mean_off_s=8.0), 2)
+    for i in range(2):
+        nc = tr.next_change(i, t)
+        assert nc > t
+        s = tr.available(i, t)
+        assert tr.available(i, 0.5 * (t + nc)) == s
+        assert tr.available(i, nc + 1e-6) == (not s)
+
+
+def test_markov_query_order_insensitive():
+    """Per-device rng streams: probing device 1 first must not shift
+    device 0's trace."""
+    cfg = AvailabilityConfig(kind="markov", seed=7)
+    a, b = make_trace(cfg, 2), make_trace(cfg, 2)
+    b.available(1, 400.0)        # extend device 1 deep into the future
+    grid = np.linspace(0.0, 200.0, 100)
+    assert [a.available(0, t) for t in grid] == \
+           [b.available(0, t) for t in grid]
+
+
+def test_diurnal_duty_fraction_and_boundaries():
+    tr = make_trace(AvailabilityConfig(kind="diurnal", seed=1,
+                                       period_s=100.0, duty=0.6), 8)
+    grid = np.linspace(0.0, 1000.0, 4000)
+    on = np.mean([[tr.available(i, t) for t in grid] for i in range(8)])
+    assert abs(on - 0.6) < 0.05
+    for i in range(8):
+        nc = tr.next_change(i, 3.0)
+        assert nc > 3.0
+        assert tr.available(i, nc + 1e-4) != tr.available(i, 3.0)
+
+
+def test_replay_contiguous_intervals_are_one_on_stretch():
+    """Touching/overlapping intervals merge: no phantom mid-stretch
+    'departure' that would falsely abort a round."""
+    tr = ReplayTrace([[(0, 10), (10, 20)], [(0, 8), (4, 12)]], 2)
+    assert tr.next_change(0, 5.0) == 20.0
+    assert tr.available(0, 10.0)
+    assert tr.next_change(1, 2.0) == 12.0
+
+
+def test_replay_trace_honors_intervals(tmp_path):
+    path = tmp_path / "trace.json"
+    path.write_text(json.dumps(
+        {"devices": [[[0, 10], [20, 30]], [[5, 25]]]}))
+    tr = ReplayTrace.from_file(str(path), 3)   # device 2 cycles to device 0
+    assert tr.available(0, 5.0) and not tr.available(0, 15.0)
+    assert tr.available(1, 24.0) and not tr.available(1, 30.0)
+    assert tr.available(2, 25.0)
+    assert tr.next_change(0, 12.0) == 20.0
+    assert tr.next_change(0, 35.0) == math.inf
+
+
+# ------------------------------------------------------------------ battery
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.floats(0.0, 30.0), st.floats(0.0, 20.0)),
+                min_size=1, max_size=12))
+def test_battery_soc_stays_in_bounds(events):
+    """Any debit/recharge sequence keeps 0 <= SoC <= capacity."""
+    cfg = BatteryConfig(capacity_j=20.0, recharge_w=0.5, seed=1)
+    b = BatteryState(cfg, 1)
+    t = 0.0
+    for energy, dt in events:
+        t += dt
+        b.debit(0, energy, t)
+        assert 0.0 <= b.soc[0] <= cfg.capacity_j
+        assert 0.0 <= b.soc_at(0, t + 0.1) <= cfg.capacity_j
+
+
+def test_battery_drained_then_ready_after_recharge():
+    cfg = BatteryConfig(capacity_j=10.0, recharge_w=0.2, seed=0)
+    b = BatteryState(cfg, 2)
+    b.debit(0, 1e3, 5.0)
+    assert b.soc[0] == 0.0 and not b.available(0, 5.0)
+    t_rdy = b.ready_time(0, 5.0)
+    assert t_rdy > 5.0 and b.available(0, t_rdy + 1e-9)
+    # no recharge -> never ready again
+    b2 = BatteryState(BatteryConfig(capacity_j=10.0, recharge_w=0.0), 1)
+    b2.debit(0, 1e3, 0.0)
+    assert b2.ready_time(0, 1.0) == math.inf
+
+
+# ---------------------------------------------------------------- selection
+
+def _envs(e_max):
+    # workload sized so the energy budget binds: the solved gain is then
+    # strictly increasing in E_max (alpha grows, beta already at its cap)
+    from repro.core.schedule import DeviceEnv
+    return {i: DeviceEnv(T_max=10.0, E_max=e, P_com=0.1, rate=1e6,
+                         W=1e8, D=64, tau=1.0, eps_hw=7.5e-27,
+                         S_bits=5.3e7, f_min=0.3e9, f_max=2.0e9)
+            for i, e in enumerate(e_max)}
+
+
+def test_uniform_noncapped_is_identity_and_consumes_no_rng():
+    rng = np.random.default_rng(0)
+    state = json.dumps(rng.bit_generator.state)
+    pol = make_selection("uniform", rng)
+    cand = [0, 1, 2, 3]
+    assert pol.select(cand, {}, {}, cap=4) == cand
+    assert json.dumps(rng.bit_generator.state) == state
+
+
+def test_gain_aware_picks_highest_gain_deterministically():
+    from repro.core.schedule import solve
+    envs = _envs([2.0, 9.0, 4.0, 6.5])
+    gains = [solve(envs[i]).gain for i in range(4)]
+    assert gains[1] > gains[3] > gains[2] > gains[0]   # budget binds
+    pol = make_selection("gain", np.random.default_rng(0))
+    assert pol.select([0, 1, 2, 3], envs, {}, cap=2) == [1, 3]
+    assert pol.select([0, 1, 2, 3], envs, {}, cap=2) == [1, 3]
+
+
+def test_energy_selection_survives_sparse_headroom():
+    """cap > number of positive-headroom devices must not crash the
+    weighted draw (zero weights get a strictly positive floor)."""
+    pol = make_selection("energy", np.random.default_rng(0))
+    head = {0: 1.0, 1: 0.0, 2: 0.0, 3: 0.0}
+    out = pol.select([0, 1, 2, 3], {}, head, cap=3)
+    assert len(out) == 3 and 0 in out
+    # all-zero headroom degrades to uniform, still no crash
+    assert len(pol.select([0, 1, 2, 3], {}, dict.fromkeys(range(4), 0.0),
+                          cap=2)) == 2
+
+
+def test_energy_selection_prefers_headroom():
+    pol = make_selection("energy", np.random.default_rng(0))
+    head = {0: 100.0, 1: 0.001, 2: 100.0, 3: 0.001}
+    counts = {i: 0 for i in range(4)}
+    for _ in range(200):
+        for i in pol.select([0, 1, 2, 3], {}, head, cap=2):
+            counts[i] += 1
+    assert counts[0] + counts[2] > 20 * (counts[1] + counts[3])
+
+
+# ------------------------------------------------------ runner integration
+
+def _run(dynamics=None, n_devices=4, **kw):
+    cfg = FLRunConfig(method="anycostfl", **{**TINY, **kw})
+    fleet = FleetConfig(n_devices=n_devices, dynamics=dynamics)
+    return run_orchestrated(fleet_cfg=fleet, run_cfg=cfg,
+                            orch=OrchestratorConfig(policy="sync",
+                                                    use_pool=False))
+
+
+def test_static_defaults_bit_identical_to_no_dynamics():
+    """--availability always --battery off --selection uniform must
+    reproduce the undynamic loop exactly (the golden-compat guarantee)."""
+    h0 = _run(dynamics=None)
+    h1 = _run(dynamics=FleetDynamicsConfig())
+    assert h0.trace == h1.trace
+    for a, b in zip(h0.rounds, h1.rounds):
+        assert (a.latency_s, a.energy_j, a.comm_bits, a.flops,
+                a.test_acc, a.test_loss) == \
+               (b.latency_s, b.energy_j, b.comm_bits, b.flops,
+                b.test_acc, b.test_loss)
+
+
+def test_dynamic_fleet_run_is_seeded_deterministic():
+    dyn = FleetDynamicsConfig(
+        availability=AvailabilityConfig(kind="markov", seed=11,
+                                        mean_on_s=8.0, mean_off_s=4.0),
+        battery=BatteryConfig(capacity_j=30.0, recharge_w=0.2, seed=11))
+    h1, h2 = _run(dynamics=dyn), _run(dynamics=dyn)
+    assert h1.trace == h2.trace
+    assert [r.energy_j for r in h1.rounds] == \
+        [r.energy_j for r in h2.rounds]
+    assert h1.dispatch_log == h2.dispatch_log
+
+
+def test_availability_gates_dispatch_and_aborts_churners():
+    dyn = FleetDynamicsConfig(
+        availability=AvailabilityConfig(kind="markov", seed=2,
+                                        mean_on_s=8.0, mean_off_s=6.0))
+    h = _run(dynamics=dyn, n_devices=6, rounds=4)
+    skipped = sum(r.n_unavailable for r in h.rounds)
+    aborted = sum(r.n_aborted for r in h.rounds)
+    assert skipped > 0          # somebody was off-cell at a round start
+    assert aborted > 0          # somebody churned out mid-round
+    walls = [r.t_wall for r in h.rounds]
+    assert all(b >= a for a, b in zip(walls, walls[1:]))
+    # dispatched + skipped + aborted + infeasible account for the fleet
+    for r in h.rounds:
+        assert r.n_clients + r.n_dropped + r.n_aborted \
+            + r.n_unavailable <= 6
+
+
+def test_drained_battery_is_never_dispatched():
+    cfg = BatteryConfig(capacity_j=8.0, recharge_w=0.0, seed=5)
+    dyn = FleetDynamicsConfig(battery=cfg)
+    h = _run(dynamics=dyn, n_devices=4, rounds=6)
+    # the fleet drains: late rounds dispatch fewer clients than round 0
+    n0, nL = h.rounds[0].n_clients, h.rounds[-1].n_clients
+    assert nL < n0
+    assert h.rounds[-1].mean_soc < h.rounds[0].mean_soc
+    # every dispatch happened with headroom above the dispatch floor, and
+    # the dynamic E_max clamp keeps devices from spending their reserve
+    assert h.dispatch_log, "no dispatches recorded"
+    assert all(head >= cfg.min_headroom_j - 1e-9
+               for _, _, head in h.dispatch_log)
+
+
+def test_participation_cap_and_selection_seed_decoupling():
+    def dyn(sel_seed):
+        return FleetDynamicsConfig(participation=0.5,
+                                   selection_seed=sel_seed)
+    h_a, h_b = _run(dynamics=dyn(1)), _run(dynamics=dyn(2))
+    h_a2 = _run(dynamics=dyn(1))
+    # same selection seed -> identical runs; different -> different cohorts
+    assert h_a.dispatch_log == h_a2.dispatch_log
+    assert [c for _, c, _ in h_a.dispatch_log] != \
+        [c for _, c, _ in h_b.dispatch_log]
+    # the cap binds: at most ceil(0.5 * 4) = 2 dispatches per round
+    for r in h_a.rounds:
+        assert r.n_clients <= 2
+
+
+def test_gain_selection_runs_end_to_end():
+    dyn = FleetDynamicsConfig(selection="gain", participation=0.5)
+    h = _run(dynamics=dyn, n_devices=6)
+    assert all(r.n_clients <= 3 for r in h.rounds)
+    assert h.best_acc > 0
+
+
+def test_battery_gated_fedbuff_respects_reserve():
+    dyn = FleetDynamicsConfig(
+        battery=BatteryConfig(capacity_j=20.0, recharge_w=0.1, seed=3))
+    cfg = FLRunConfig(method="anycostfl", **TINY)
+    h = run_orchestrated(
+        cfg, FleetConfig(n_devices=3, dynamics=dyn),
+        OrchestratorConfig(policy="fedbuff", buffer_size=2,
+                           max_wallclock_s=40.0))
+    assert h.dispatch_log
+    assert all(head >= 0.5 - 1e-9 for _, _, head in h.dispatch_log)
+    assert all(r.mean_soc >= 0.0 for r in h.rounds)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        FleetDynamicsConfig(selection="best-effort")
+    with pytest.raises(ValueError):
+        FleetDynamicsConfig(participation=0.0)
+    with pytest.raises(ValueError):
+        AvailabilityConfig(kind="sometimes")
+    with pytest.raises(ValueError):
+        AvailabilityConfig(kind="replay")          # needs trace_file
+    with pytest.raises(ValueError):
+        BatteryConfig(reserve_frac=1.5)
+    with pytest.raises(ValueError):
+        # dispatch threshold above capacity: never dispatchable
+        BatteryConfig(capacity_j=0.5, reserve_frac=0.2, min_headroom_j=0.5)
+
+
+def test_semisync_churn_never_extends_past_deadline():
+    dyn = FleetDynamicsConfig(
+        availability=AvailabilityConfig(kind="markov", seed=2,
+                                        mean_on_s=8.0, mean_off_s=6.0))
+    cfg = FLRunConfig(method="anycostfl", **TINY)
+    h = run_orchestrated(
+        cfg, FleetConfig(n_devices=6, dynamics=dyn),
+        OrchestratorConfig(policy="semisync", deadline_s=10.0,
+                           straggler_mode="drop", use_pool=False))
+    assert sum(r.n_aborted for r in h.rounds) > 0
+    assert all(r.latency_s <= 10.0 + 1e-9 for r in h.rounds)

@@ -152,7 +152,7 @@ def test_sync_matches_pre_refactor_golden():
 def _fedbuff(seed=3, **kw):
     cfg = FLRunConfig(method="anycostfl", **{**TINY, "seed": seed})
     orch = OrchestratorConfig(policy="fedbuff", buffer_size=2,
-                              max_wallclock_s=30.0, **kw)
+                              **{"max_wallclock_s": 30.0, **kw})
     return run_orchestrated(cfg, _fleet(), orch)
 
 
@@ -180,6 +180,34 @@ def test_fedbuff_advances_wallclock_and_tracks_staleness():
     # at least one merge should see a non-fresh update under a tiny buffer
     assert any(r.mean_staleness > 0 for r in h.rounds)
     assert all(r.test_acc is not None for r in h.rounds)  # eval_every=1
+
+
+def test_fedbuff_staleness_cap_bounds_aggregated_staleness():
+    """Admission control: a capped run never aggregates an update staler
+    than the cap, and the cap actually binds (an uncapped run sees
+    staler updates and the capped run reports rejected arrivals)."""
+    h_free = _fedbuff(max_wallclock_s=60.0)
+    assert max(r.max_staleness for r in h_free.rounds) > 1
+    for cap in (0, 1):
+        h = _fedbuff(max_wallclock_s=60.0, staleness_cap=cap)
+        assert all(r.max_staleness <= cap for r in h.rounds)
+        assert sum(r.n_stale_dropped for r in h.rounds) > 0
+        assert all(r.mean_staleness <= cap for r in h.rounds)
+
+
+def test_fedbuff_staleness_requeue_mode_runs_and_bounds():
+    h = _fedbuff(max_wallclock_s=60.0, staleness_cap=1,
+                 staleness_mode="requeue")
+    assert len(h.rounds) >= 2
+    assert all(r.max_staleness <= 1 for r in h.rounds)
+    assert all(np.isfinite(r.energy_j) for r in h.rounds)
+
+
+def test_staleness_config_validation():
+    with pytest.raises(ValueError):
+        OrchestratorConfig(policy="fedbuff", staleness_cap=-1)
+    with pytest.raises(ValueError):
+        OrchestratorConfig(policy="fedbuff", staleness_mode="defer")
 
 
 @pytest.mark.slow
