@@ -1,0 +1,184 @@
+"""Hierarchical scaling study: streaming-AIO memory + flat-vs-hier TTA.
+
+Two measurements, one artifact (experiments/fl/hier_scaling_<scale>.json):
+
+1. **Peak aggregation memory vs client count.**  The batched Eq.-5 path
+   materializes the zero-padded ``(I, N)`` update/mask stack — live bytes
+   linear in the fleet size I.  The streaming ``PartialAgg`` monoid folds
+   one update at a time into an O(N) ``(num, den)`` accumulator — live
+   bytes constant in I.  Both paths are executed on real arrays (updates
+   generated per device, batched path stacks them, streaming path never
+   holds more than one) with explicit live-byte accounting, and their
+   outputs are checked against each other.
+
+2. **Flat vs hierarchical time-to-accuracy.**  The same method/seed run
+   over one 550 m macro cell versus a client->edge->cloud topology
+   (per-cell wireless with area-tiled radii, streaming edge partials,
+   modeled backhaul).  Smaller cells mean shorter uplink distances and
+   higher Eq.-8 rates, which the Problem-(P4) solver converts into
+   higher-fidelity strategies — the hierarchy buys accuracy per
+   simulated second at the price of one backhaul hop.
+
+``PYTHONPATH=src python benchmarks/hier_scaling.py``
+(BENCH_SCALE=fast|full; full is the ~1k-client fleet)
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import CACHE_DIR  # noqa: E402
+from repro.core import aggregation as A  # noqa: E402
+from repro.orchestrator import (OrchestratorConfig,  # noqa: E402
+                                run_orchestrated)
+from repro.sysmodel.population import FleetConfig  # noqa: E402
+from repro.topology import BackhaulConfig, TopologyConfig  # noqa: E402
+from repro.train.fl_loop import FLRunConfig  # noqa: E402
+
+SCALES = {
+    "fast": dict(n_devices=64, n_cells=4, rounds=16, n_train=1024,
+                 n_test=256, eval_every=2,
+                 mem_clients=(8, 32, 128, 512, 1024), mem_n=65536),
+    "full": dict(n_devices=1000, n_cells=10, rounds=30, n_train=4096,
+                 n_test=512, eval_every=3,
+                 mem_clients=(8, 64, 512, 1024, 4096), mem_n=262144),
+}
+
+# fast-scale runs only clear the low bars; full keeps the paper-style ones
+ACC_TARGETS = (0.15, 0.2, 0.25, 0.3, 0.4, 0.5)
+
+
+# ------------------------------------------------- 1) aggregation memory
+
+def _device_update(key, n):
+    ku, km = jax.random.split(key)
+    u = jax.random.normal(ku, (n,), jnp.float32)
+    m = (jax.random.uniform(km, (n,)) > 0.5).astype(jnp.float32)
+    return u, m
+
+
+def measure_memory(n_clients: int, n: int, seed: int = 0) -> dict:
+    """Run both aggregation paths over the same I updates and account
+    the peak concurrently-live aggregation arrays of each."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_clients)
+    w = np.linspace(0.5, 1.5, n_clients).astype(np.float32)
+
+    # batched oracle: the (I, N) stacks must coexist with the output
+    t0 = time.time()
+    pairs = [_device_update(k, n) for k in keys]
+    u_stack = jnp.stack([u for u, _ in pairs])
+    m_stack = jnp.stack([m for _, m in pairs])
+    del pairs
+    out_b = A.aio_aggregate_stacked(u_stack, m_stack, jnp.asarray(w))
+    out_b.block_until_ready()
+    t_batched = time.time() - t0
+    batched_peak = (u_stack.nbytes + m_stack.nbytes + out_b.nbytes)
+    del u_stack, m_stack
+
+    # streaming monoid: accumulator pair + ONE in-flight update
+    t0 = time.time()
+    part = A.partial_init(out_b)
+    live_one_update = 0
+    for k, wi in zip(keys, w):
+        u, m = _device_update(k, n)
+        live_one_update = u.nbytes + m.nbytes
+        part = A.partial_absorb(part, u, m, float(wi))
+    out_s = A.partial_finalize(part)
+    out_s.block_until_ready()
+    t_streaming = time.time() - t0
+    streaming_peak = (part.num.nbytes + part.den.nbytes
+                      + live_one_update + out_s.nbytes)
+
+    err = float(jnp.max(jnp.abs(out_s - out_b)))
+    return {"n_clients": n_clients, "n_elems": n,
+            "batched_peak_bytes": int(batched_peak),
+            "streaming_peak_bytes": int(streaming_peak),
+            "batched_s": t_batched, "streaming_s": t_streaming,
+            "max_abs_err": err}
+
+
+# ----------------------------------------------------- 2) flat vs hier TTA
+
+def _tta_row(name: str, hist, topo) -> dict:
+    return {
+        "topology": name,
+        "n_cells": topo.n_cells if topo is not None else 1,
+        "best_acc": hist.best_acc,
+        "sim_wallclock_s": hist.wallclock(),
+        "energy_j": float(hist.cumulative("energy_j")[-1]),
+        "uplink_mb": float(hist.cumulative("comm_bits")[-1] / 8e6),
+        "backhaul_mb": float(sum(r.backhaul_bits
+                                 for r in hist.rounds) / 8e6),
+        "mean_round_latency_s": float(np.mean([r.latency_s
+                                               for r in hist.rounds])),
+        "time_to_acc_s": {f"{t:.2f}": hist.time_to_acc(t)
+                          for t in ACC_TARGETS},
+    }
+
+
+def run_tta(sc: dict, seed: int = 0) -> list[dict]:
+    run_cfg = FLRunConfig(method="anycostfl", seed=seed, lr=0.1,
+                          rounds=sc["rounds"], n_train=sc["n_train"],
+                          n_test=sc["n_test"],
+                          eval_every=sc["eval_every"])
+    orch = OrchestratorConfig(policy="sync", use_pool=True)
+    rows = []
+    h_flat = run_orchestrated(
+        run_cfg, FleetConfig(n_devices=sc["n_devices"]), orch)
+    rows.append(_tta_row("flat", h_flat, None))
+    topo = TopologyConfig(kind="hier", n_cells=sc["n_cells"],
+                          backhaul=BackhaulConfig(rate_bps=1e9,
+                                                  latency_s=0.01))
+    h_hier = run_orchestrated(
+        run_cfg, FleetConfig(n_devices=sc["n_devices"], topology=topo),
+        orch)
+    rows.append(_tta_row("hier", h_hier, topo))
+    return rows
+
+
+def main(seed: int = 0) -> dict:
+    scale_tag = os.environ.get("BENCH_SCALE", "fast")
+    sc = SCALES[scale_tag]
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, f"hier_scaling_{scale_tag}.json")
+    if os.path.exists(path):
+        result = json.load(open(path))
+    else:
+        mem = [measure_memory(i, sc["mem_n"], seed)
+               for i in sc["mem_clients"]]
+        peaks = [r["streaming_peak_bytes"] for r in mem]
+        result = {
+            "scale": scale_tag,
+            "memory": mem,
+            # the acceptance claim: the streaming path's peak is flat in
+            # client count while the batched stack grows linearly
+            "streaming_peak_constant": len(set(peaks)) == 1,
+            "batched_growth_x": mem[-1]["batched_peak_bytes"]
+            / mem[0]["batched_peak_bytes"],
+            "tta": run_tta(sc, seed),
+        }
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+    for row in result["memory"]:
+        print(json.dumps(row))
+    print(json.dumps({"streaming_peak_constant":
+                      result["streaming_peak_constant"],
+                      "batched_growth_x": result["batched_growth_x"]}))
+    for row in result["tta"]:
+        print(json.dumps(row))
+    assert result["streaming_peak_constant"], \
+        "streaming aggregation peak memory must be flat in client count"
+    return result
+
+
+if __name__ == "__main__":
+    main()

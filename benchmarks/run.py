@@ -35,11 +35,13 @@ def main() -> None:
                             kernel_micro, lemma1_divergence,
                             roofline_report, schedule_solver,
                             table1_cost_to_acc, theorem2_convergence)
-    from benchmarks import async_modes, fig1_breakdown, selection_policies
+    from benchmarks import (async_modes, fig1_breakdown, hier_scaling,
+                            selection_policies)
     ok = True
     ok &= _section("fig1_breakdown", fig1_breakdown.main)
     ok &= _section("async_modes", async_modes.main)
     ok &= _section("selection_policies", selection_policies.main)
+    ok &= _section("hier_scaling", hier_scaling.main)
     ok &= _section("kernel_micro", kernel_micro.main)
     ok &= _section("lemma1_divergence", lemma1_divergence.main)
     ok &= _section("theorem2_convergence", theorem2_convergence.main)

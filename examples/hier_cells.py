@@ -1,0 +1,51 @@
+"""Hierarchical multi-cell demo: edge partials over a modeled backhaul.
+
+Runs the same tiny AnycostFL workload over (a) the paper's flat single
+550 m cell and (b) a 3-cell client->edge->cloud hierarchy — per-cell
+wireless with area-tiled radii, each edge streaming its local uplinks
+into one O(N) AIO partial, and a 100 Mbit/s / 50 ms backhaul hop — then
+prints a per-round comparison of latency, energy, and backhaul traffic.
+
+``PYTHONPATH=src python examples/hier_cells.py``
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.orchestrator import OrchestratorConfig, run_orchestrated
+from repro.sysmodel.population import FleetConfig
+from repro.topology import BackhaulConfig, TopologyConfig
+from repro.train.fl_loop import FLRunConfig
+
+
+def main():
+    run_cfg = FLRunConfig(method="anycostfl", rounds=4, n_train=512,
+                          n_test=128, eval_every=2, lr=0.1, seed=0,
+                          use_planner=False)
+    orch = OrchestratorConfig(policy="sync")
+
+    flat = run_orchestrated(run_cfg, FleetConfig(n_devices=9), orch)
+
+    topo = TopologyConfig(
+        kind="hier", n_cells=3,
+        backhaul=BackhaulConfig(rate_bps=1e8, latency_s=0.05))
+    hier = run_orchestrated(
+        run_cfg, FleetConfig(n_devices=9, topology=topo), orch)
+
+    print(f"{'round':>5} {'flat_lat':>9} {'hier_lat':>9} {'flat_E':>8} "
+          f"{'hier_E':>8} {'cells':>6} {'backhaul_mb':>12}")
+    for a, b in zip(flat.rounds, hier.rounds):
+        print(f"{a.round:>5} {a.latency_s:>9.2f} {b.latency_s:>9.2f} "
+              f"{a.energy_j:>8.2f} {b.energy_j:>8.2f} "
+              f"{b.n_cells_reporting:>6} {b.backhaul_bits / 8e6:>12.1f}")
+    print(f"flat  best_acc={flat.best_acc:.3f} "
+          f"wallclock={flat.wallclock():.1f}s")
+    print(f"hier  best_acc={hier.best_acc:.3f} "
+          f"wallclock={hier.wallclock():.1f}s "
+          f"(smaller cells -> shorter uplinks -> higher Eq.-8 rates; "
+          f"the cloud sees 3 constant-size partials, not 9 updates)")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,9 +14,32 @@ Updates arrive zero-padded to full coordinates (see shrinking.expand_update)
 with their {0,1} masks; stacking them gives the (I, ...) arrays the Pallas
 ``aio_aggregate`` kernel consumes on TPU (kernels/aio_agg.py; the pure-jnp
 path below is the oracle).
+
+Streaming form — the :class:`PartialAgg` monoid
+-----------------------------------------------
+
+Eq. 5 is a normalized ratio, so its unnormalized running sums
+
+    num = sum_i p_i m_i u_i        den = sum_i p_i m_i
+
+form a commutative monoid under element-wise addition:
+
+    init                           identity (all-zero partial)
+    absorb(part, u_i, m_i, p_i)    fold one device update in, O(N) memory
+    merge(a, b)                    fuse two partials (edge -> cloud)
+    finalize(part)                 num / den where covered, else 0
+
+Any absorb/merge order yields the same aggregate (up to float rounding),
+and because the ratio cancels a common weight scale, ``absorb`` takes
+*unnormalized* coefficients — a streaming consumer never needs to know the
+full participant set up front.  This is what lets a server (or an edge
+aggregator in a client->edge->cloud topology) fold arrivals into one
+O(N) accumulator instead of materializing the ``(I, N)`` stack that the
+batched ``aio_aggregate`` consumes; the batched path stays as the oracle.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Sequence
 
 import jax
@@ -73,3 +96,102 @@ def aio_aggregate_stacked(u: jax.Array, m: jax.Array, weights: jax.Array
     num = jnp.sum(w * m * u, axis=0)
     den = jnp.sum(w * m, axis=0)
     return jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+
+
+# --------------------------------------------------------------- PartialAgg
+
+
+@dataclasses.dataclass
+class PartialAgg:
+    """Unnormalized AIO running sums over a pytree of coordinates.
+
+    ``num``/``den`` share the model treedef; ``count`` tracks how many
+    device updates have been folded in (bookkeeping only — it does not
+    enter the math, so ``merge`` stays a pure monoid op).
+    """
+    num: PyTree
+    den: PyTree
+    count: int = 0
+
+
+def partial_init(template: PyTree) -> PartialAgg:
+    """The monoid identity: an all-zero partial shaped like ``template``."""
+    zeros = jax.tree.map(
+        lambda x: jnp.zeros(jnp.shape(x), jnp.float32), template)
+    return PartialAgg(num=zeros,
+                      den=jax.tree.map(jnp.zeros_like, zeros), count=0)
+
+
+def _absorb_leaves(num, den, u, m, w, *, use_kernel: bool):
+    if use_kernel:
+        from repro.kernels.ops import aio_absorb_op
+        shape = u.shape
+        n2, d2 = aio_absorb_op(num.reshape(-1), den.reshape(-1),
+                               u.reshape(-1), m.reshape(-1), w)
+        return n2.reshape(shape), d2.reshape(shape)
+    wm = w * m.astype(jnp.float32)
+    return num + wm * u.astype(jnp.float32), den + wm
+
+
+def absorb_trees(num: PyTree, den: PyTree, values: PyTree, mask: PyTree,
+                 weight, *, use_kernel: bool = False
+                 ) -> tuple[PyTree, PyTree]:
+    """The absorb update rule over (num, den) pytrees — jit-compatible.
+
+    Single home of the ``num += w*m*u, den += w*m`` math; both
+    :func:`partial_absorb` and the runner's jit'd edge absorb route
+    through here so the rule cannot drift between call sites.
+    """
+    w = jnp.asarray(weight, jnp.float32)
+    pairs = jax.tree.map(
+        lambda n, d, u, m: _absorb_leaves(n, d, u, m, w,
+                                          use_kernel=use_kernel),
+        num, den, values, mask)
+    treedef = jax.tree.structure(num)
+    flat = treedef.flatten_up_to(pairs)
+    return (jax.tree.unflatten(treedef, [p[0] for p in flat]),
+            jax.tree.unflatten(treedef, [p[1] for p in flat]))
+
+
+def partial_absorb(part: PartialAgg, values: PyTree, mask: PyTree,
+                   weight, *, use_kernel: bool = False) -> PartialAgg:
+    """Fold one device update in: num += w*m*u, den += w*m.
+
+    ``weight`` is the device's *unnormalized* coefficient (e.g. the
+    Theorem-1 inverse divergence, or |D_i| for FedAvg) — Eq. 5's ratio
+    cancels any common normalization, see the module docstring.
+    """
+    num, den = absorb_trees(part.num, part.den, values, mask, weight,
+                            use_kernel=use_kernel)
+    return PartialAgg(num=num, den=den, count=part.count + 1)
+
+
+def partial_merge(a: PartialAgg, b: PartialAgg, *,
+                  use_kernel: bool = False) -> PartialAgg:
+    """Fuse two partials (commutative, associative up to float rounding)."""
+    if use_kernel:
+        from repro.kernels.ops import aio_merge_op
+
+        def leaf(na, da, nb, db):
+            shape = na.shape
+            n, d = aio_merge_op(na.reshape(-1), da.reshape(-1),
+                                nb.reshape(-1), db.reshape(-1))
+            return n.reshape(shape), d.reshape(shape)
+
+        pairs = jax.tree.map(leaf, a.num, a.den, b.num, b.den)
+        treedef = jax.tree.structure(a.num)
+        flat = treedef.flatten_up_to(pairs)
+        return PartialAgg(
+            num=jax.tree.unflatten(treedef, [p[0] for p in flat]),
+            den=jax.tree.unflatten(treedef, [p[1] for p in flat]),
+            count=a.count + b.count)
+    return PartialAgg(num=jax.tree.map(jnp.add, a.num, b.num),
+                      den=jax.tree.map(jnp.add, a.den, b.den),
+                      count=a.count + b.count)
+
+
+def partial_finalize(part: PartialAgg) -> PyTree:
+    """Eq. 5's ratio: num/den where any device covered, else 0."""
+    return jax.tree.map(
+        lambda n, d: jnp.where(d > 0, n / jnp.maximum(d, 1e-12), 0.0),
+        part.num, part.den)

@@ -13,8 +13,9 @@ out:
                   the headroom above reserve becomes a *dynamic*
                   ``E_max`` fed into the Problem-(P4) solver.
 ``selection``     uniform / energy-headroom-weighted / gain-aware
-                  (Definition 3) sampling behind one interface, with
-                  per-round participation caps and an independent
+                  (Definition 3) / Oort-style (gain x speed with an
+                  exploration reserve) sampling behind one interface,
+                  with per-round participation caps and an independent
                   selection seed.
 ``dynamics``      the bundle config a ``FleetConfig`` carries.
 
@@ -26,8 +27,9 @@ from repro.fleet.availability import (AlwaysOn, AvailabilityConfig,
 from repro.fleet.battery import BatteryConfig, BatteryState
 from repro.fleet.dynamics import FleetDynamicsConfig
 from repro.fleet.selection import (SELECTIONS, EnergyHeadroomSelection,
-                                   GainAwareSelection, SelectionPolicy,
-                                   UniformSelection, make_selection)
+                                   GainAwareSelection, OortSelection,
+                                   SelectionPolicy, UniformSelection,
+                                   make_selection)
 
 __all__ = [
     "AlwaysOn", "AvailabilityConfig", "AvailabilityTrace", "DiurnalTrace",
@@ -35,5 +37,6 @@ __all__ = [
     "BatteryConfig", "BatteryState",
     "FleetDynamicsConfig",
     "SELECTIONS", "SelectionPolicy", "UniformSelection",
-    "EnergyHeadroomSelection", "GainAwareSelection", "make_selection",
+    "EnergyHeadroomSelection", "GainAwareSelection", "OortSelection",
+    "make_selection",
 ]

@@ -21,6 +21,12 @@ follow device order, so a stable ordering keeps seeded runs replayable).
   Problem-(P4) strategy under its current channel/budget draw: the
   control plane ranks devices by how much useful training their budgets
   buy this round.
+* ``oort``    — Oort-style utility = solved gain x speed, where speed is
+  the deadline fraction the device's planned round leaves unused,
+  ``min(1, T_max / (T_cmp + T_com))^speed_exp`` — plus an exploration
+  reserve: a fraction of each round's cap is spent on devices the policy
+  has selected least often (ties broken uniformly at random), so a
+  momentarily-faded fast device is still probed over time.
 
 Selection randomness comes from a dedicated generator (see
 ``--selection-seed``) so who-trains-when ablations never perturb the
@@ -28,13 +34,14 @@ model-init / data / channel streams.
 """
 from __future__ import annotations
 
+import collections
 from typing import Mapping, Sequence
 
 import numpy as np
 
 from repro.core import schedule
 
-SELECTIONS = ("uniform", "energy", "gain")
+SELECTIONS = ("uniform", "energy", "gain", "oort")
 
 
 class SelectionPolicy:
@@ -97,6 +104,54 @@ class GainAwareSelection(SelectionPolicy):
         return sorted(ranked[:cap])
 
 
+class OortSelection(SelectionPolicy):
+    """Utility = solved gain x speed, with a least-selected exploration
+    reserve (Lai et al., *Oort: Efficient Federated Learning via Guided
+    Participant Selection*, adapted to AnycostFL's Definition-3 gain).
+
+    Exploitation ranks candidates by how much useful training their
+    budgets buy this round *and* how quickly they return it; exploration
+    keeps probing under-sampled devices whose current channel draw looks
+    bad, so the policy never locks onto an early cohort.  Stateful across
+    rounds (selection counts), seeded by the dedicated selection rng.
+    """
+
+    name = "oort"
+
+    def __init__(self, rng: np.random.Generator, *,
+                 explore_frac: float = 0.2, speed_exp: float = 1.0):
+        self.rng = rng
+        self.explore_frac = explore_frac
+        self.speed_exp = speed_exp
+        self.n_selected: collections.Counter = collections.Counter()
+
+    def utility(self, env: schedule.DeviceEnv) -> float:
+        s = schedule.solve(env)
+        t = max(s.T_cmp + s.T_com, 1e-9)
+        speed = min(1.0, env.T_max / t) ** self.speed_exp
+        return s.gain * speed
+
+    def select(self, candidates, envs, headroom, cap):
+        if cap >= len(candidates):
+            picked = list(candidates)     # no draw: golden-compatible
+        else:
+            n_explore = min(int(round(self.explore_frac * cap)), cap)
+            # exploration reserve: least-selected first, uniform-random
+            # within a count tie (the only randomness this policy uses)
+            order = self.rng.permutation(len(candidates))
+            by_count = sorted((self.n_selected[candidates[j]], k)
+                              for k, j in enumerate(order))
+            explore = [candidates[order[k]]
+                       for _, k in by_count[:n_explore]]
+            taken = set(explore)
+            ranked = sorted((i for i in candidates if i not in taken),
+                            key=lambda i: (-self.utility(envs[i]), i))
+            picked = explore + ranked[:cap - len(explore)]
+        for i in picked:
+            self.n_selected[i] += 1
+        return sorted(picked)
+
+
 def make_selection(name: str, rng: np.random.Generator) -> SelectionPolicy:
     if name == "uniform":
         return UniformSelection(rng)
@@ -104,5 +159,7 @@ def make_selection(name: str, rng: np.random.Generator) -> SelectionPolicy:
         return EnergyHeadroomSelection(rng)
     if name == "gain":
         return GainAwareSelection(rng)
+    if name == "oort":
+        return OortSelection(rng)
     raise ValueError(f"unknown selection policy {name!r}; "
                      f"expected one of {SELECTIONS}")

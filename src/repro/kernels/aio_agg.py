@@ -1,13 +1,22 @@
-"""Pallas TPU kernel: AIO element-wise masked weighted aggregation (Eq. 5).
+"""Pallas TPU kernels: AIO aggregation (Eq. 5), batched and streaming.
 
-Hot spot: the server fuses I device updates of N elements each — O(I*N)
-reads, O(N) writes, purely memory-bound. The kernel streams (I, BN) tiles
-through VMEM and emits one (BN,) tile of the global update per grid step, so
-HBM traffic is exactly one pass over the stacked updates (vs. the naive
-jnp composition which materializes w*m*u, w*m, and the two reductions).
+``aio_aggregate`` — the batched oracle.  Hot spot: the server fuses I
+device updates of N elements each — O(I*N) reads, O(N) writes, purely
+memory-bound. The kernel streams (I, BN) tiles through VMEM and emits one
+(BN,) tile of the global update per grid step, so HBM traffic is exactly
+one pass over the stacked updates (vs. the naive jnp composition which
+materializes w*m*u, w*m, and the two reductions).
 
 Tiling: BN = 8*128 lanes of f32; the device axis I stays whole in the tile
 (I <= ~256 in any realistic round; VMEM use = 2*I*BN*4B ≈ 2 MB at I=256).
+
+``aio_absorb`` / ``aio_merge`` — the streaming monoid
+(core/aggregation.PartialAgg).  ``absorb`` folds ONE device update into a
+running (num, den) accumulator pair — O(N) state, no (I, N) stack ever
+materialized, which is what lets the server scale the participant count
+past VMEM/HBM limits and lets edge aggregators fold local uplinks before
+one backhaul hop.  ``merge`` fuses two accumulator pairs (edge -> cloud).
+Both are single-pass element-wise kernels over (BN,) tiles.
 """
 from __future__ import annotations
 
@@ -53,3 +62,74 @@ def aio_aggregate(u: jax.Array, m: jax.Array, w: jax.Array, *,
         interpret=interpret,
     )(w.reshape(I, 1), u, m)
     return out[:N]
+
+
+# ----------------------------------------------------------- streaming monoid
+
+
+def _absorb_kernel(w_ref, num_ref, den_ref, u_ref, m_ref,
+                   onum_ref, oden_ref):
+    w = w_ref[0, 0]
+    wm = w * m_ref[...].astype(jnp.float32)        # (BN,)
+    onum_ref[...] = num_ref[...] + wm * u_ref[...].astype(jnp.float32)
+    oden_ref[...] = den_ref[...] + wm
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def aio_absorb(num: jax.Array, den: jax.Array, u: jax.Array, m: jax.Array,
+               w, *, interpret: bool = False, block_n: int = BN
+               ) -> tuple[jax.Array, jax.Array]:
+    """Stream one weighted masked update into a running accumulator.
+
+    num, den, u, m: (N,); w: scalar unnormalized coefficient.
+    Returns (num + w*m*u, den + w*m) — O(N) state, one pass over HBM.
+    """
+    (N,) = num.shape
+    n_pad = (-N) % block_n
+    if n_pad:
+        num = jnp.pad(num, (0, n_pad))
+        den = jnp.pad(den, (0, n_pad))
+        u = jnp.pad(u, (0, n_pad))
+        m = jnp.pad(m, (0, n_pad))
+    Np = N + n_pad
+    vec = pl.BlockSpec((block_n,), lambda i: (i,))
+    onum, oden = pl.pallas_call(
+        _absorb_kernel,
+        grid=(Np // block_n,),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  vec, vec, vec, vec],
+        out_specs=(vec, vec),
+        out_shape=(jax.ShapeDtypeStruct((Np,), jnp.float32),
+                   jax.ShapeDtypeStruct((Np,), jnp.float32)),
+        interpret=interpret,
+    )(jnp.asarray(w, jnp.float32).reshape(1, 1), num, den, u, m)
+    return onum[:N], oden[:N]
+
+
+def _merge_kernel(na_ref, da_ref, nb_ref, db_ref, onum_ref, oden_ref):
+    onum_ref[...] = na_ref[...] + nb_ref[...]
+    oden_ref[...] = da_ref[...] + db_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def aio_merge(num_a: jax.Array, den_a: jax.Array, num_b: jax.Array,
+              den_b: jax.Array, *, interpret: bool = False,
+              block_n: int = BN) -> tuple[jax.Array, jax.Array]:
+    """Fuse two (num, den) partial accumulators element-wise. All (N,)."""
+    (N,) = num_a.shape
+    n_pad = (-N) % block_n
+    args = [num_a, den_a, num_b, den_b]
+    if n_pad:
+        args = [jnp.pad(x, (0, n_pad)) for x in args]
+    Np = N + n_pad
+    vec = pl.BlockSpec((block_n,), lambda i: (i,))
+    onum, oden = pl.pallas_call(
+        _merge_kernel,
+        grid=(Np // block_n,),
+        in_specs=[vec, vec, vec, vec],
+        out_specs=(vec, vec),
+        out_shape=(jax.ShapeDtypeStruct((Np,), jnp.float32),
+                   jax.ShapeDtypeStruct((Np,), jnp.float32)),
+        interpret=interpret,
+    )(*args)
+    return onum[:N], oden[:N]

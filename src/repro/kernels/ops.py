@@ -28,6 +28,22 @@ def aio_aggregate_op(u: jax.Array, m: jax.Array, w: jax.Array, *,
     return ref.aio_aggregate_ref(u, m, w)
 
 
+def aio_absorb_op(num: jax.Array, den: jax.Array, u: jax.Array,
+                  m: jax.Array, w, *, use_pallas: bool = _ON_TPU):
+    if use_pallas:
+        return aio_agg.aio_absorb(num, den, u, m, w,
+                                  interpret=interpret_default())
+    return ref.aio_absorb_ref(num, den, u, m, w)
+
+
+def aio_merge_op(num_a: jax.Array, den_a: jax.Array, num_b: jax.Array,
+                 den_b: jax.Array, *, use_pallas: bool = _ON_TPU):
+    if use_pallas:
+        return aio_agg.aio_merge(num_a, den_a, num_b, den_b,
+                                 interpret=interpret_default())
+    return ref.aio_merge_ref(num_a, den_a, num_b, den_b)
+
+
 def kernel_l2_op(x: jax.Array, *, use_pallas: bool = _ON_TPU) -> jax.Array:
     if use_pallas:
         return sparsify.kernel_l2(x, interpret=interpret_default())

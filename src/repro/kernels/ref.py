@@ -51,3 +51,18 @@ def aio_aggregate_ref(u: jax.Array, m: jax.Array, w: jax.Array) -> jax.Array:
     num = jnp.sum(wf * mf * uf, axis=0)
     den = jnp.sum(wf * mf, axis=0)
     return jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+
+
+def aio_absorb_ref(num: jax.Array, den: jax.Array, u: jax.Array,
+                   m: jax.Array, w) -> tuple[jax.Array, jax.Array]:
+    """Streaming AIO: fold one update into the (num, den) accumulator.
+    num, den, u, m: (N,); w: scalar."""
+    wf = jnp.asarray(w, jnp.float32)
+    wm = wf * m.astype(jnp.float32)
+    return num + wm * u.astype(jnp.float32), den + wm
+
+
+def aio_merge_ref(num_a: jax.Array, den_a: jax.Array, num_b: jax.Array,
+                  den_b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fuse two streaming-AIO accumulator pairs. All (N,)."""
+    return num_a + num_b, den_a + den_b

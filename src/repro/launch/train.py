@@ -109,6 +109,24 @@ def _dynamics_config(args):
         selection_seed=args.selection_seed)
 
 
+def _topology_config(args):
+    """Multi-cell topology from CLI flags.  ``--topology flat`` (the
+    default) returns None — the paper's single macro cell, bit-identical
+    to the pre-topology loop."""
+    if args.topology == "flat":
+        return None
+    from repro.topology import BackhaulConfig, TopologyConfig
+    return TopologyConfig(
+        kind="hier", n_cells=args.cells,
+        assignment=args.cell_assignment,
+        cell_radius_scale=args.cell_radius_scale,
+        cell_deadline_s=args.cell_deadline,
+        backhaul=BackhaulConfig(
+            rate_bps=args.backhaul_rate,
+            latency_s=args.backhaul_latency,
+            energy_per_bit=args.backhaul_energy))
+
+
 def run_fl(args):
     from repro.orchestrator import OrchestratorConfig, run_orchestrated
     from repro.sysmodel.population import FleetConfig
@@ -120,7 +138,8 @@ def run_fl(args):
         seed=args.seed, iid=not args.non_iid, n_train=args.n_train,
         n_test=args.n_test, eval_every=args.eval_every)
     fleet = FleetConfig(n_devices=args.devices,
-                        dynamics=_dynamics_config(args))
+                        dynamics=_dynamics_config(args),
+                        topology=_topology_config(args))
     orch = OrchestratorConfig(
         policy=args.async_mode, max_wallclock_s=args.max_wallclock,
         deadline_s=args.deadline, buffer_size=args.buffer_size,
@@ -128,6 +147,7 @@ def run_fl(args):
         staleness_cap=args.staleness_cap,
         staleness_mode=args.staleness_mode,
         straggler_mode=args.straggler_mode,
+        max_inflight=args.max_inflight,
         use_pool=False if args.no_pool else None)
     hist = run_orchestrated(run_cfg, fleet, orch, verbose=True)
     # time-to-accuracy: simulated wall-clock at fixed accuracy milestones
@@ -136,8 +156,12 @@ def run_fl(args):
     print(json.dumps({"method": args.method, "policy": args.async_mode,
                       "availability": args.availability,
                       "selection": args.selection,
+                      "topology": args.topology,
+                      "cells": args.cells if args.topology == "hier" else 1,
                       "best_acc": hist.best_acc,
                       "sim_wallclock_s": hist.wallclock(),
+                      "backhaul_mb": float(sum(r.backhaul_bits
+                                               for r in hist.rounds) / 8e6),
                       "time_to_acc_s": tta,
                       "rows": hist.to_rows()[-1]}, indent=1))
     return hist
@@ -175,8 +199,34 @@ def main():
                     help="what to do with a cap-rejected update: discard "
                          "it, or retrain its minibatches on the current "
                          "model")
+    ap.add_argument("--max-inflight", type=int, default=None,
+                    help="fedbuff: cap concurrent dispatched clients "
+                         "(participation throttle; waiters join a FIFO)")
     ap.add_argument("--no-pool", action="store_true",
                     help="disable vmapped client batching")
+    # ---- hierarchical multi-cell topology
+    ap.add_argument("--topology", default="flat", choices=["flat", "hier"],
+                    help="flat = the paper's single cell; hier = "
+                         "client->edge->cloud with per-cell wireless, "
+                         "streaming edge aggregation, and a modeled "
+                         "backhaul (round-based policies only)")
+    ap.add_argument("--cells", type=int, default=4,
+                    help="number of edge cells under --topology hier")
+    ap.add_argument("--cell-assignment", default="contiguous",
+                    choices=["contiguous", "round_robin"],
+                    help="device->cell mapping")
+    ap.add_argument("--cell-radius-scale", type=float, default=None,
+                    help="per-cell radius as a fraction of the macro "
+                         "cell's (default: 1/sqrt(cells), area tiling)")
+    ap.add_argument("--cell-deadline", type=float, default=None,
+                    help="per-cell edge deadline in seconds (the edge "
+                         "ships its partial then; late arrivals drop)")
+    ap.add_argument("--backhaul-rate", type=float, default=1e9,
+                    help="edge->cloud backhaul throughput in bit/s")
+    ap.add_argument("--backhaul-latency", type=float, default=0.01,
+                    help="edge->cloud one-way latency in seconds")
+    ap.add_argument("--backhaul-energy", type=float, default=0.0,
+                    help="edge->cloud energy tariff in J/bit")
     # ---- fleet dynamics control plane
     ap.add_argument("--availability", default="always",
                     choices=["always", "markov", "diurnal", "replay"],
@@ -194,8 +244,9 @@ def main():
     ap.add_argument("--battery-recharge", type=float, default=0.05,
                     help="trickle recharge in joules per simulated second")
     ap.add_argument("--selection", default="uniform",
-                    choices=["uniform", "energy", "gain"],
-                    help="client-selection policy")
+                    choices=["uniform", "energy", "gain", "oort"],
+                    help="client-selection policy (oort = gain x speed "
+                         "utility with an exploration reserve)")
     ap.add_argument("--participation", type=float, default=1.0,
                     help="per-round cap as a fraction of available devices")
     ap.add_argument("--selection-seed", type=int, default=None,

@@ -51,7 +51,15 @@ Policy <-> paper-constraint map
              the current version (``requeue``) before they can poison the
              buffer.  EMS channel sorting (§III-B.1) is frozen at t=0:
              cross-version element-wise aggregation requires one
-             coordinate frame.
+             coordinate frame.  The buffer itself is one streaming O(N)
+             AIO accumulator (no per-update storage after training), and
+             ``max_inflight`` caps concurrent dispatched flights.
+
+Under a hierarchical ``FleetConfig.topology`` (round-based policies),
+the runner applies the arrival policy per cell, streams each cell's
+admitted arrivals into an edge partial, ships the constant-size
+partials over the modeled backhaul (EDGE_MERGE events), and merges them
+at the cloud — see ``repro.topology``.
 """
 from repro.orchestrator.events import Event, EventQueue
 from repro.orchestrator.policies import (OrchestratorConfig, make_policy,

@@ -25,6 +25,8 @@ from typing import Any, Optional
 COMPLETE = "complete"     # a client's (T_cmp + T_com) elapsed; update arrived
 RETRY = "retry"           # infeasible budgets this draw; re-probe the channel
 CHURN = "churn"           # device left the cell mid-round; round aborted
+EDGE_MERGE = "edge_merge"  # an edge cell's partial landed at the cloud
+                           # (hierarchical topologies; client = cell id)
 
 
 @dataclasses.dataclass(frozen=True, order=True)

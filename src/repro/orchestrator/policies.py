@@ -14,10 +14,13 @@ One interface, three server behaviours:
   with the element-wise AIO rule, scaling each update's Theorem-1
   coefficient by a staleness discount ``(1 + s)^-gamma``.
 
-All three reuse the same base aggregation weights as the synchronous loop
-(Theorem-1 optimal coefficients for AnycostFL, FedHQ / FedAvg weights for
-the baselines); a policy only decides *which* updates enter the merge, *at
-what simulated time*, and with *what scale factors*.
+All three use the same per-update aggregation coefficients as the
+synchronous loop (Theorem-1 optimal for AnycostFL, FedHQ / FedAvg for the
+baselines) — round-based merges via the normalized :func:`base_weights`,
+fedbuff's streaming accumulator via :func:`unnormalized_weight` times the
+staleness discount (Eq. 5's ratio cancels the normalization; a guard test
+asserts the two stay in lock-step).  A policy only decides *which* updates
+enter the merge, *at what simulated time*, and with *what scale factors*.
 """
 from __future__ import annotations
 
@@ -57,6 +60,8 @@ class OrchestratorConfig:
     staleness_cap: Optional[int] = None    # admission: reject staler updates
     staleness_mode: str = STALE_DROP       # drop | requeue
     retry_interval_s: Optional[float] = None   # infeasible-draw backoff
+    max_inflight: Optional[int] = None     # cap concurrent dispatched
+                                           # clients (fedbuff throttle)
     # --- stopping / execution
     max_wallclock_s: Optional[float] = None    # simulated seconds
     use_pool: Optional[bool] = None        # None -> policy default
@@ -75,6 +80,8 @@ class OrchestratorConfig:
                 f"expected {STALE_DROP!r} or {STALE_REQUEUE!r}")
         if self.staleness_cap is not None and self.staleness_cap < 0:
             raise ValueError("staleness_cap must be >= 0")
+        if self.max_inflight is not None and self.max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
 
 
 def base_weights(method: str, use_aio: bool, updates: Sequence,
@@ -87,6 +94,27 @@ def base_weights(method: str, use_aio: bool, updates: Sequence,
     if method == "fedhq":
         return fedhq_weights(list(fedhq_L))
     return aggregation.fedavg_coefficients([u.n_samples for u in updates])
+
+
+def unnormalized_weight(method: str, use_aio: bool, update,
+                        fedhq_level: Optional[int] = None) -> float:
+    """One update's aggregation coefficient WITHOUT the cohort sum.
+
+    The streaming-AIO monoid needs this: Eq. 5's num/den ratio cancels any
+    common normalization, so an edge aggregator (or the fedbuff
+    accumulator) can absorb an arrival the moment it lands without knowing
+    who else participates.  Normalizing these per-cohort reproduces
+    exactly :func:`base_weights` — the ratio of either is the same
+    aggregate up to float rounding.
+    """
+    if method == "anycostfl" and use_aio:
+        d = float(aggregation.divergence_factor(
+            update.alpha, max(update.beta_target, 1e-6)))
+        return 1.0 / max(d * d, 1e-12)
+    if method == "fedhq":
+        L = int(fedhq_level)
+        return 1.0 / (1.0 + 1.0 / (4.0 * L * L))
+    return float(update.n_samples)
 
 
 def apply_scales(weights: jax.Array, scales: Sequence[float]) -> jax.Array:
@@ -191,14 +219,6 @@ class FedBuffPolicy:
         (``requeue``)."""
         return self.cfg.staleness_cap is None \
             or staleness <= self.cfg.staleness_cap
-
-    def weights(self, method: str, use_aio: bool, buffer,
-                fedhq_L: Sequence[int]) -> jax.Array:
-        base = base_weights(method, use_aio, [b.update for b in buffer],
-                            fedhq_L)
-        return staleness_scaled_weights(
-            base, [b.staleness for b in buffer],
-            self.cfg.staleness_exponent)
 
 
 def make_policy(cfg: OrchestratorConfig, *, fleet_T_max: float):

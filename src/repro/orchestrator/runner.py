@@ -23,11 +23,29 @@ Timeline semantics:
   reservation) while energy/comm accounting uses realized bits, exactly as
   in the synchronous loop.  EMS channel sorting is frozen at t=0 in this
   mode: cross-version element-wise merges require a fixed coordinate frame.
+  The merge itself streams: each materialized update is folded into one
+  ``(num, den)`` accumulator (the AIO monoid) and its decoded pytrees are
+  dropped on the spot — the server never stacks the buffer into an
+  ``(I, N)`` array, and ``--max-inflight`` can additionally cap how many
+  clients hold a dispatched flight at once (waiters join a FIFO).
+
+**Hierarchical topologies** (``FleetConfig.topology``, round-based
+policies only): devices are partitioned into cells, each with its own
+wireless environment and per-cell availability/selection; an edge
+aggregator per cell streams its local arrivals into an O(N) partial
+(``topology/edge.py``), applies the arrival policy *per cell* (the
+semisync deadline — or ``TopologyConfig.cell_deadline_s`` — binds at the
+edge), and ships the constant-size partial over the modeled backhaul.
+The cloud merges cell partials (EDGE_MERGE events) and finalizes Eq. 5
+once.  Weights are the per-update *unnormalized* coefficients
+(``policies.unnormalized_weight``) — Eq. 5's ratio cancels the cohort
+normalization, which is what makes the fold order-free.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+from collections import deque
 from typing import Any, Optional
 
 import jax
@@ -47,8 +65,10 @@ from repro.orchestrator import events as ev_mod
 from repro.orchestrator.client_pool import ClientPool, TrainJob
 from repro.orchestrator.policies import (STALE_REQUEUE, OrchestratorConfig,
                                          apply_scales, base_weights,
-                                         make_policy)
+                                         make_policy, staleness_scales,
+                                         unnormalized_weight)
 from repro.sysmodel.population import FleetConfig, make_fleet
+from repro.topology.edge import EdgeAggregator, finalize_apply, cloud_merge
 from repro.train.baselines import BaselinePolicy
 from repro.train.fl_loop import (FLRunConfig, History, RoundLog,
                                  _device_batches, _make_eval,
@@ -150,6 +170,14 @@ class Simulation:
              and not isinstance(self.fleet.trace, AlwaysOn))
             or self.fleet.battery is not None)
 
+        # ---- hierarchical topology (None -> the paper's flat single cell,
+        # which keeps every code path below bit-identical to the pre-
+        # topology loop)
+        topo = fleet_cfg.topology
+        self.topo = topo if topo is not None and topo.kind == "hier" \
+            else None
+        self.edge_kernel = jax.default_backend() == "tpu"
+
     # ------------------------------------------------------- fleet dynamics
 
     def gate_round(self, t_wall: float, envs: list[schedule.DeviceEnv]):
@@ -169,6 +197,20 @@ class Simulation:
                         else envs_eff[i].E_max) for i in cand}
         if not cand:
             return [], envs_eff, n, headroom
+        if self.topo is not None and self.fleet.n_cells > 1:
+            # per-cell selection: each edge runs the policy over its own
+            # roster with its own participation cap (ascending cell order
+            # keeps seeded runs replayable)
+            selected = []
+            for k in range(self.fleet.n_cells):
+                ck = [i for i in cand if self.fleet.cell_of(i) == k]
+                if not ck:
+                    continue
+                cap = len(ck) if self.dyn.participation >= 1.0 \
+                    else max(1, math.ceil(self.dyn.participation * len(ck)))
+                selected.extend(self.selection.select(ck, envs_eff,
+                                                      headroom, cap))
+            return sorted(selected), envs_eff, n - len(cand), headroom
         cap = len(cand) if self.dyn.participation >= 1.0 \
             else max(1, math.ceil(self.dyn.participation * len(cand)))
         selected = self.selection.select(cand, envs_eff, headroom, cap)
@@ -317,6 +359,76 @@ class Simulation:
 
 # ---------------------------------------------------------------- round mode
 
+def _hier_round_merge(sim: Simulation, policy, live, aborted,
+                      sorted_params, queue, t_wall: float):
+    """One hierarchical round tail: per-cell accept -> edge absorb ->
+    backhaul ship -> cloud merge.
+
+    Each cell applies the arrival policy over its own arrivals (per-cell
+    deadline semantics), folds the admitted updates into an O(N)
+    streaming partial with *unnormalized* AIO coefficients, and ships the
+    constant-size partial over the backhaul; the round's latency is the
+    slowest cell's barrier plus its shipping time.  Returns
+    ``(accepted, new_params|None, lat, ship_energy, backhaul_bits,
+    n_cells_reporting)``.
+    """
+    topo, fleet, rc = sim.topo, sim.fleet, sim.run_cfg
+    cell_dl = topo.cell_deadline_s
+    accepted_all, parts, ships = [], [], []
+    lat = e_ship = bh_bits = 0.0
+    for k in range(fleet.n_cells):
+        cell_live = [p for p in live if fleet.cell_of(p.client_id) == k]
+        cell_ab = [p for p in aborted if fleet.cell_of(p.client_id) == k]
+        if not cell_live and not cell_ab:
+            continue
+        acc_k, scales_k, lat_k = policy.accept(cell_live, 0.0)
+        if cell_dl is not None:
+            # the edge never waits past its own deadline, whatever the
+            # global policy's barrier would have been
+            pairs = [(p, s) for p, s in zip(acc_k, scales_k)
+                     if p.duration <= cell_dl]
+            if len(pairs) < len(acc_k):
+                acc_k = [p for p, _ in pairs]
+                scales_k = [s for _, s in pairs]
+                lat_k = cell_dl
+            else:
+                lat_k = min(lat_k, cell_dl)
+        if cell_ab:
+            # the edge learns of a dropout at the departure moment, but
+            # never waits past its barrier (mirrors the flat loop)
+            barrier = cell_dl if cell_dl is not None \
+                else getattr(policy, "deadline", math.inf)
+            lat_k = max(lat_k, min(barrier,
+                                   max(p.completes_at - t_wall
+                                       for p in cell_ab)))
+        if acc_k:
+            edge = EdgeAggregator(k, sorted_params,
+                                  use_kernel=sim.edge_kernel)
+            for p, s in zip(acc_k, scales_k):
+                w_un = unnormalized_weight(rc.method, rc.use_aio, p.update,
+                                           p.fedhq_level) * s
+                edge.absorb(p.update.values, p.update.mask, w_un)
+            t_ship, e_k = topo.backhaul.ship_cost(sim.S_bits)
+            parts.append(edge.ship())
+            bh_bits += topo.backhaul.payload_bits(sim.S_bits)
+            e_ship += e_k
+            ships.append((t_wall + lat_k + t_ship, k))
+            lat = max(lat, lat_k + t_ship)
+        else:
+            lat = max(lat, lat_k)
+        accepted_all.extend(acc_k)
+    for t_arr, k in ships:      # record cloud arrival order
+        queue.push(t_arr, ev_mod.EDGE_MERGE, k)
+    for _ in ships:
+        queue.pop()
+    new_params = None
+    if parts:
+        merged = cloud_merge(parts, use_kernel=sim.edge_kernel)
+        new_params = finalize_apply(sorted_params, merged.num, merged.den,
+                                    sim.server.server_lr)
+    return accepted_all, new_params, lat, e_ship, bh_bits, len(parts)
+
+
 def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
                      verbose: bool) -> History:
     rc = sim.run_cfg
@@ -404,25 +516,37 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
                 t_wall += sim.fleet_cfg.T_max
             continue
 
-        accepted, scales, lat = policy.accept(live, 0.0)
-        if aborted:
-            # the server learns of a dropout at the departure moment, but
-            # never waits past its own deadline barrier (semisync)
-            barrier = getattr(policy, "deadline", math.inf)
-            lat = max(lat, min(barrier,
-                               max(p.completes_at - t_wall
-                                   for p in aborted)))
-        t_wall += lat
-        for p in live + aborted:
-            sim.fleet.debit(p.client_id, p.energy, t_wall)
-        if accepted:
-            fedhq_L = [p.fedhq_level for p in accepted] \
-                if rc.method == "fedhq" else []
-            w = base_weights(rc.method, rc.use_aio,
-                             [p.update for p in accepted], fedhq_L)
-            w = apply_scales(w, scales)
-            params = sim.aggregate(sorted_params, accepted, w,
-                                   fast=use_pool)
+        bh_bits, n_cells_rep = 0.0, 0
+        if sim.topo is not None:
+            (accepted, new_params, lat, e_ship, bh_bits,
+             n_cells_rep) = _hier_round_merge(sim, policy, live, aborted,
+                                              sorted_params, queue, t_wall)
+            en += e_ship
+            t_wall += lat
+            for p in live + aborted:
+                sim.fleet.debit(p.client_id, p.energy, t_wall)
+            if new_params is not None:
+                params = new_params
+        else:
+            accepted, scales, lat = policy.accept(live, 0.0)
+            if aborted:
+                # the server learns of a dropout at the departure moment,
+                # but never waits past its own deadline barrier (semisync)
+                barrier = getattr(policy, "deadline", math.inf)
+                lat = max(lat, min(barrier,
+                                   max(p.completes_at - t_wall
+                                       for p in aborted)))
+            t_wall += lat
+            for p in live + aborted:
+                sim.fleet.debit(p.client_id, p.energy, t_wall)
+            if accepted:
+                fedhq_L = [p.fedhq_level for p in accepted] \
+                    if rc.method == "fedhq" else []
+                w = base_weights(rc.method, rc.use_aio,
+                                 [p.update for p in accepted], fedhq_L)
+                w = apply_scales(w, scales)
+                params = sim.aggregate(sorted_params, accepted, w,
+                                       fast=use_pool)
 
         log = RoundLog(
             round=t, latency_s=lat, energy_j=en, flops=fl, comm_bits=cb,
@@ -434,7 +558,8 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
             n_dropped=len(live) - len(accepted),
             n_unavailable=n_unavail, n_aborted=len(aborted),
             mean_soc=(sim.fleet.battery.mean_soc_frac(t_wall)
-                      if sim.fleet.battery is not None else 1.0))
+                      if sim.fleet.battery is not None else 1.0),
+            n_cells_reporting=n_cells_rep, backhaul_bits=bh_bits)
         if t % rc.eval_every == 0 or t == rc.rounds - 1:
             acc, loss = sim.evaluate(params)
             log.test_acc = acc
@@ -481,12 +606,19 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
     n_agg = 0
     last_agg_t = 0.0
     en, fl, cb = 0.0, 0.0, 0.0
+    # --max-inflight participation throttle: clients beyond the cap of
+    # concurrent dispatched flights wait in FIFO order for a free slot
+    cap = orch.max_inflight
+    waiting: deque = deque()
+    peak_inflight = 0
 
     def enqueue_flight(p: PendingUpdate, now: float) -> None:
         """COMPLETE at the planned arrival — unless the availability trace
         says the device churns out of the cell first."""
+        nonlocal peak_inflight
         i = p.client_id
         inflight_version[i] = p.version
+        peak_inflight = max(peak_inflight, len(inflight_version))
         t_off = sim.fleet.next_departure(i, now)
         if t_off < p.completes_at:
             queue.push(t_off, ev_mod.CHURN, i, p)
@@ -528,21 +660,40 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
                                  else env.E_max))
         enqueue_flight(p, now)
 
+    def pump(now: float) -> None:
+        """Fill free flight slots from the waiting FIFO (fresh channel
+        draw per dispatch, as in the unthrottled runner)."""
+        while waiting and (cap is None or len(inflight_version) < cap):
+            j = waiting.popleft()
+            dispatch(j, sim.fleet.device_env(sim.rng, j, sim.W,
+                                             sim.S_bits), now)
+
+    def redispatch(i: int, now: float) -> None:
+        """Throttle-aware re-dispatch: join the FIFO behind any earlier
+        waiters, then fill whatever slots are free.  With no cap the
+        queue is always empty, so this is the unthrottled runner's
+        immediate dispatch with the identical env-draw order."""
+        waiting.append(i)
+        pump(now)
+
     def requeue(p: PendingUpdate, now: float) -> None:
         """Staleness-cap ``requeue`` mode: retrain the rejected round's
         exact minibatch draw against the *current* model version (same
         env/strategy, fresh flight) instead of discarding the work.
         Subject to the same availability/battery gates as a dispatch —
         a device that just spent itself below reserve falls back to the
-        gated dispatch path (which schedules its recharge RETRY)."""
+        gated dispatch path (which schedules its recharge RETRY).
+        Deliberately bypasses the --max-inflight FIFO: the replay takes
+        back the slot its own rejected flight just freed (routing it
+        through the queue would drop the retained minibatches and
+        degrade requeue to a plain re-dispatch)."""
         fleet = sim.fleet
         i = p.client_id
         if (fleet.trace is not None
                 and not fleet.trace.available(i, now)) \
                 or (fleet.battery is not None
                     and not fleet.battery.available(i, now)):
-            dispatch(i, fleet.device_env(sim.rng, i, sim.W, sim.S_bits),
-                     now)
+            redispatch(i, now)
             return
         q = dataclasses.replace(p, version=version, dispatched_at=now,
                                 staleness=0, update=None)
@@ -555,7 +706,10 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
 
     for i, env in enumerate(sim.fleet.round_envs(sim.rng, sim.W,
                                                  sim.S_bits)):
-        dispatch(i, env, 0.0)
+        if cap is not None and len(inflight_version) >= cap:
+            waiting.append(i)
+        else:
+            dispatch(i, env, 0.0)
 
     # Progress guard: without a wall-clock budget the run targets rc.rounds
     # merges, but an all-infeasible fleet (deep fade draws on every retry)
@@ -574,9 +728,7 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
             break
         now = ev.time
         if ev.kind == ev_mod.RETRY:
-            dispatch(ev.client,
-                     sim.fleet.device_env(sim.rng, ev.client, sim.W,
-                                          sim.S_bits), now)
+            redispatch(ev.client, now)
             continue
         if ev.kind == ev_mod.CHURN:
             # the device left the cell mid-flight: abort, charge the
@@ -593,9 +745,11 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
             t_on = sim.fleet.trace.next_change(p.client_id, now)
             if math.isfinite(t_on):
                 queue.push(t_on, ev_mod.RETRY, p.client_id)
+            pump(now)      # the aborted flight freed a throttle slot
             continue
 
         p = ev.payload
+        inflight_version.pop(p.client_id, None)   # flight landed
         p.staleness = version - p.version
         # the device spent its planned round energy whether or not the
         # server admits the update (battery model; the energy *log* keeps
@@ -607,14 +761,10 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
             if orch.staleness_mode == STALE_REQUEUE:
                 requeue(p, now)
             else:
-                dispatch(p.client_id,
-                         sim.fleet.device_env(sim.rng, p.client_id, sim.W,
-                                              sim.S_bits), now)
+                redispatch(p.client_id, now)
             continue
         buffer.append(p)
-        dispatch(p.client_id,
-                 sim.fleet.device_env(sim.rng, p.client_id, sim.W,
-                                      sim.S_bits), now)
+        redispatch(p.client_id, now)
 
         if not policy.should_aggregate(buffer):
             continue
@@ -638,17 +788,29 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
             trained = [sim.client._local_steps(j.alpha, int(
                 jax.tree_util.tree_leaves(j.batches)[0].shape[0]))(
                     j.sub_params, j.batches) for j in jobs]
+        # stream each decoded update into one O(N) AIO accumulator and
+        # drop its pytrees on the spot — the server never materializes
+        # the (I, N) buffer stack.  Unnormalized weights x the FedBuff
+        # staleness discount; Eq. 5's ratio cancels the cohort
+        # normalization the round-based base_weights would have applied.
+        stream_acc = EdgeAggregator(-1, current,
+                                    use_kernel=sim.edge_kernel)
+        gamma = orch.staleness_exponent
         for b, j, tr in zip(buffer, jobs, trained):
             sim.materialize(b, tr, version_params[b.version],
                             fast=use_pool, sub=j.sub_params)
             en += b.energy
             fl += b.update.flops
             cb += b.update.bits
-
-        fedhq_L = [b.fedhq_level for b in buffer] \
-            if rc.method == "fedhq" else []
-        w = policy.weights(rc.method, rc.use_aio, buffer, fedhq_L)
-        current = sim.aggregate(current, buffer, w, fast=use_pool)
+            w_b = unnormalized_weight(rc.method, rc.use_aio, b.update,
+                                      b.fedhq_level) \
+                * staleness_scales([b.staleness], gamma)[0]
+            stream_acc.absorb(b.update.values, b.update.mask, w_b)
+            b.update = dataclasses.replace(b.update, values=None,
+                                           mask=None)
+        part = stream_acc.ship()
+        current = finalize_apply(current, part.num, part.den,
+                                 sim.server.server_lr)
         version += 1
         version_params[version] = current
         # retain only versions still referenced by an in-flight client (a
@@ -693,12 +855,13 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
 
     # final eval so best_acc reflects the last merged model
     if hist.rounds and hist.rounds[-1].test_acc is None:
-        acc, loss = sim.evaluate(current)
-        hist.rounds[-1].test_acc = acc
+        acc_, loss = sim.evaluate(current)
+        hist.rounds[-1].test_acc = acc_
         hist.rounds[-1].test_loss = loss
-        hist.best_acc = max(hist.best_acc, acc)
+        hist.best_acc = max(hist.best_acc, acc_)
     hist.trace = queue.trace_signature()
     hist.dispatch_log = sim.dispatch_log
+    hist.peak_inflight = peak_inflight
     return hist
 
 
@@ -712,6 +875,11 @@ def run_orchestrated(run_cfg: FLRunConfig,
     orch = orch or OrchestratorConfig()
     sim = Simulation(run_cfg, fleet_cfg)
     policy = make_policy(orch, fleet_T_max=sim.fleet_cfg.T_max)
+    if not policy.round_based and sim.topo is not None:
+        raise ValueError(
+            "hierarchical topology needs a round-based policy "
+            "(sync/semisync): fedbuff's cross-version stream has no "
+            "per-cell round barrier to ship partials at")
     if policy.round_based:
         return _run_round_based(sim, policy, orch, verbose)
     return _run_fedbuff(sim, policy, orch, verbose)

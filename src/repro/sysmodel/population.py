@@ -17,6 +17,7 @@ from repro.fleet import (AvailabilityTrace, BatteryState,
                          FleetDynamicsConfig, make_trace)
 from repro.sysmodel.wireless import WirelessConfig, achievable_rate, \
     drop_positions
+from repro.topology import TopologyConfig, assign_cells
 
 
 @dataclasses.dataclass
@@ -38,6 +39,8 @@ class FleetConfig:
     dist_var_scale: float = 1.0
     # fleet dynamics control plane (None -> static always-on roster)
     dynamics: Optional[FleetDynamicsConfig] = None
+    # multi-cell topology (None / flat -> the paper's single cell)
+    topology: Optional[TopologyConfig] = None
 
 
 @dataclasses.dataclass
@@ -49,33 +52,67 @@ class Fleet:
     # dynamics state (seeded independently of the sampling rng stream)
     trace: Optional[AvailabilityTrace] = None
     battery: Optional[BatteryState] = None
+    # hierarchical topology: device -> cell id and per-cell wireless
+    # (None -> single macro cell, the paper's geometry)
+    cells: Optional[np.ndarray] = None
+    cell_wireless: Optional[list] = None
+
+    @property
+    def n_cells(self) -> int:
+        return len(self.cell_wireless) if self.cell_wireless else 1
+
+    def cell_of(self, i: int) -> int:
+        return int(self.cells[i]) if self.cells is not None else 0
+
+    def _wireless(self, i: int) -> WirelessConfig:
+        if self.cell_wireless is None:
+            return self.cfg.wireless
+        return self.cell_wireless[self.cell_of(i)]
 
     def _env(self, i: int, rate: float, W: float, S_bits: float) -> DeviceEnv:
         c = self.cfg
         return DeviceEnv(
             T_max=c.T_max, E_max=float(self.E_max[i]),
-            P_com=c.wireless.tx_power_w, rate=float(rate),
+            P_com=self._wireless(i).tx_power_w, rate=float(rate),
             W=W, D=int(self.data_sizes[i]), tau=c.tau,
             eps_hw=float(self.eps_hw[i]), S_bits=S_bits,
             f_min=c.f_min, f_max=c.f_max, alpha_min=c.alpha_min,
             beta_min=c.beta_min, beta_max=c.beta_max)
 
-    def _distances(self, rng: np.random.Generator, n: int) -> np.ndarray:
+    def _distances(self, rng: np.random.Generator, n: int,
+                   wireless: Optional[WirelessConfig] = None) -> np.ndarray:
         c = self.cfg
+        w = wireless if wireless is not None else c.wireless
         if c.dist_mean_m is None:
-            pos = drop_positions(rng, n, c.wireless)
+            pos = drop_positions(rng, n, w)
             return np.linalg.norm(pos, axis=-1)
-        spread = (c.wireless.cell_radius_m / 4.0) * np.sqrt(
+        spread = (w.cell_radius_m / 4.0) * np.sqrt(
             c.dist_var_scale)
         return np.clip(rng.normal(c.dist_mean_m, spread, n),
-                       10.0, c.wireless.cell_radius_m)
+                       10.0, w.cell_radius_m)
 
     def round_envs(self, rng: np.random.Generator, W: float, S_bits: float
                    ) -> list[DeviceEnv]:
-        """Refresh positions/channels and build per-device envs (Eq. 6-9)."""
+        """Refresh positions/channels and build per-device envs (Eq. 6-9).
+
+        Multi-cell fleets draw each cell's positions/fading against that
+        cell's wireless config, in ascending cell order.  A 1-cell
+        hierarchy with unit radius scale takes the identical vectorized
+        draws as the flat path — same rng stream, same envs.
+        """
         c = self.cfg
-        dist = self._distances(rng, c.n_devices)
-        rates = achievable_rate(dist, c.wireless, rng=rng)
+        if self.cells is None or self.n_cells == 1:
+            w = self.cell_wireless[0] if self.cell_wireless else c.wireless
+            dist = self._distances(rng, c.n_devices, w)
+            rates = achievable_rate(dist, w, rng=rng)
+            return [self._env(i, rates[i], W, S_bits)
+                    for i in range(c.n_devices)]
+        rates = np.empty(c.n_devices)
+        for k in range(self.n_cells):
+            idx = np.flatnonzero(self.cells == k)
+            w = self.cell_wireless[k]
+            dist = self._distances(rng, len(idx), w)
+            rates[idx] = achievable_rate(dist, w, rng=rng)
         return [self._env(i, rates[i], W, S_bits)
                 for i in range(c.n_devices)]
 
@@ -84,8 +121,9 @@ class Fleet:
         """Fresh position/channel draw for a single device (asynchronous
         re-dispatch: mobility refreshes the channel per dispatch, not per
         global round)."""
-        dist = self._distances(rng, 1)
-        rate = achievable_rate(dist, self.cfg.wireless, rng=rng)
+        w = self._wireless(i)
+        dist = self._distances(rng, 1, w)
+        rate = achievable_rate(dist, w, rng=rng)
         return self._env(i, rate[0], W, S_bits)
 
     # -------------------------------------------------------- fleet dynamics
@@ -135,5 +173,12 @@ def make_fleet(rng: np.random.Generator, cfg: FleetConfig,
         trace = make_trace(cfg.dynamics.availability, cfg.n_devices)
         if cfg.dynamics.battery is not None:
             battery = BatteryState(cfg.dynamics.battery, cfg.n_devices)
+    cells = cell_wireless = None
+    if cfg.topology is not None and cfg.topology.kind == "hier":
+        # deterministic assignment — no rng, so attaching a topology never
+        # perturbs the eps/E_max/position sampling streams
+        cells = assign_cells(cfg.n_devices, cfg.topology)
+        cell_wireless = cfg.topology.cell_wireless(cfg.wireless)
     return Fleet(cfg, eps, e_max, np.asarray(data_sizes),
-                 trace=trace, battery=battery)
+                 trace=trace, battery=battery,
+                 cells=cells, cell_wireless=cell_wireless)

@@ -1,0 +1,25 @@
+"""Hierarchical multi-cell FL: client -> edge -> cloud.
+
+The paper's §V setup is one 550 m cell whose server materializes every
+round's full update stack.  This package supplies the edge-network
+deployment shape of Luo et al. / Tan et al.: the fleet is partitioned
+across cells, each with its own wireless environment and per-cell
+availability/selection; an :class:`EdgeAggregator` streams local uplinks
+into one O(N) partial (the ``core/aggregation`` AIO monoid — no (I, N)
+stack anywhere); each cell ships its constant-size partial over a
+modeled backhaul link; the cloud merges cell partials and finalizes
+Eq. 5 once.
+
+``TopologyConfig(kind="flat")`` (the default everywhere) is the paper's
+single cell and stays bit-identical to the pre-topology loop; a 1-cell
+hierarchy over a zero-cost backhaul reproduces the flat trajectory.
+"""
+from repro.topology.backhaul import BackhaulConfig
+from repro.topology.cells import (ASSIGNMENTS, TOPOLOGIES, TopologyConfig,
+                                  assign_cells)
+from repro.topology.edge import EdgeAggregator, cloud_merge
+
+__all__ = [
+    "ASSIGNMENTS", "TOPOLOGIES", "TopologyConfig", "assign_cells",
+    "BackhaulConfig", "EdgeAggregator", "cloud_merge",
+]

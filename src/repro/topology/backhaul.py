@@ -1,0 +1,53 @@
+"""Edge->cloud backhaul link model (client->edge->cloud topologies).
+
+Each edge aggregator ships one payload per round regardless of how many
+local uplinks it absorbed: the streaming-AIO partial is the unnormalized
+``(num, den)`` pair (core/aggregation.PartialAgg), so its wire size is a
+constant multiple of the full update size — by default ``2 * S_bits``
+(one f32 plane each for num and den), never the per-client stack.  This
+is the memory/traffic argument for hierarchical FL in mobile edge
+networks (Luo et al.; Tan et al.): the cloud sees O(cells) traffic, not
+O(clients).
+
+Costs mirror the device-side Eq. 6-9 shape: a fixed propagation latency
+plus serialization at the provisioned rate, and an energy-per-bit tariff
+for the wired/microwave hop.  ``BackhaulConfig.zero_cost()`` builds the
+degenerate free link under which a 1-cell hierarchy reproduces the flat
+single-cell trajectory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class BackhaulConfig:
+    rate_bps: float = 1e9          # provisioned edge->cloud throughput
+    latency_s: float = 0.01        # one-way propagation + handshake
+    energy_per_bit: float = 0.0    # J/bit tariff of the hop
+    payload_factor: float = 2.0    # partial wire size / S_bits (num + den)
+
+    def __post_init__(self):
+        if self.rate_bps <= 0:
+            raise ValueError("backhaul rate_bps must be > 0")
+        if self.latency_s < 0 or self.energy_per_bit < 0:
+            raise ValueError("backhaul latency/energy must be >= 0")
+        if self.payload_factor <= 0:
+            raise ValueError("backhaul payload_factor must be > 0")
+
+    @classmethod
+    def zero_cost(cls) -> "BackhaulConfig":
+        """A free, instantaneous link (flat-equivalence degenerate case)."""
+        return cls(rate_bps=math.inf, latency_s=0.0, energy_per_bit=0.0)
+
+    def payload_bits(self, s_bits: float) -> float:
+        """Wire size of one shipped partial — constant in client count."""
+        return self.payload_factor * s_bits
+
+    def ship_cost(self, s_bits: float) -> tuple[float, float]:
+        """(latency_s, energy_j) of shipping one partial over the hop."""
+        bits = self.payload_bits(s_bits)
+        t = self.latency_s + (bits / self.rate_bps
+                              if math.isfinite(self.rate_bps) else 0.0)
+        return t, bits * self.energy_per_bit

@@ -1,0 +1,82 @@
+"""Edge-tier aggregator: stream local uplinks into one O(N) partial.
+
+An :class:`EdgeAggregator` is the per-cell server of a hierarchical
+deployment.  It folds each arriving client update into a running
+``(num, den)`` accumulator (the streaming-AIO monoid of
+``core/aggregation``) the moment the uplink lands — it never stores the
+update, so edge memory is constant in how many clients the cell serves.
+At the cell's barrier/deadline it ships the partial over the backhaul;
+the cloud merges the per-cell partials and finalizes Eq. 5 once.
+
+The jit'd absorb/merge closures compile once per model treedef (the
+weight is traced); on TPU the same math routes through the Pallas
+``aio_absorb`` / ``aio_merge`` kernels via ``use_kernel``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation
+
+PyTree = Any
+
+
+# jit over the shared absorb rule (one compile per model treedef; the
+# weight is traced, so per-update coefficients never retrace)
+_absorb_jnp = jax.jit(aggregation.absorb_trees)
+
+
+@functools.partial(jax.jit, static_argnames=("server_lr",))
+def finalize_apply(params: PyTree, num: PyTree, den: PyTree,
+                    server_lr: float = 1.0) -> PyTree:
+    agg = aggregation.partial_finalize(
+        aggregation.PartialAgg(num=num, den=den))
+    return jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - server_lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, agg)
+
+
+class EdgeAggregator:
+    """Streaming per-cell accumulator with absorb/merge/ship bookkeeping."""
+
+    def __init__(self, cell_id: int, template: PyTree, *,
+                 use_kernel: bool = False):
+        self.cell_id = cell_id
+        self.use_kernel = use_kernel
+        self.part = aggregation.partial_init(template)
+
+    @property
+    def n_absorbed(self) -> int:
+        return self.part.count
+
+    def absorb(self, values: PyTree, mask: PyTree, weight: float) -> None:
+        """Fold one uplink in; ``weight`` is the client's *unnormalized*
+        aggregation coefficient (Eq. 5's ratio cancels normalization)."""
+        if self.use_kernel:
+            self.part = aggregation.partial_absorb(
+                self.part, values, mask, weight, use_kernel=True)
+            return
+        num, den = _absorb_jnp(self.part.num, self.part.den, values, mask,
+                               jnp.float32(weight))
+        self.part = aggregation.PartialAgg(num=num, den=den,
+                                           count=self.part.count + 1)
+
+    def ship(self) -> aggregation.PartialAgg:
+        """Hand the partial to the cloud (the accumulator is spent)."""
+        part, self.part = self.part, None
+        return part
+
+
+def cloud_merge(partials: list[aggregation.PartialAgg], *,
+                use_kernel: bool = False) -> Optional[aggregation.PartialAgg]:
+    """Fuse the per-cell partials the backhaul delivered (any order)."""
+    merged = None
+    for part in partials:
+        merged = part if merged is None else aggregation.partial_merge(
+            merged, part, use_kernel=use_kernel)
+    return merged

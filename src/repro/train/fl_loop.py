@@ -80,6 +80,9 @@ class RoundLog:
     n_unavailable: int = 0        # off-cell / drained at dispatch time
     n_aborted: int = 0            # churned out of the cell mid-round
     mean_soc: float = 1.0         # battery fleet state of charge (fraction)
+    # hierarchical-topology extensions (zero under the flat single cell)
+    n_cells_reporting: int = 0    # edge partials merged at the cloud
+    backhaul_bits: float = 0.0    # edge->cloud traffic this round
 
 
 @dataclasses.dataclass
@@ -91,6 +94,9 @@ class History:
     # (t, client_id, headroom_j) per successful dispatch — lets tests and
     # benchmarks audit the control plane's availability/battery gating
     dispatch_log: Optional[list] = None
+    # fedbuff: most concurrent in-flight clients observed (audits the
+    # --max-inflight participation throttle)
+    peak_inflight: int = 0
 
     def cumulative(self, field: str) -> np.ndarray:
         return np.cumsum([getattr(r, field) for r in self.rounds])

@@ -78,6 +78,99 @@ def test_aio_pytree_matches_stacked():
                                    np.asarray(ref), atol=1e-6)
 
 
+# ------------------------------------------------ streaming PartialAgg monoid
+
+def _stacked(seed, I, N=257):
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.normal(size=(I, N)).astype(np.float32))
+    m = jnp.asarray((rng.uniform(size=(I, N)) > 0.4).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.1, 2.0, size=I).astype(np.float32))
+    return u, m, w
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 10 ** 6))
+def test_any_absorb_order_matches_batched_aio(I, seed):
+    """Folding the updates in ANY order reproduces the batched Eq. 5."""
+    u, m, w = _stacked(seed, I)
+    want = np.asarray(A.aio_aggregate_stacked(u, m, w))
+    order = np.random.default_rng(seed + 1).permutation(I)
+    part = A.partial_init(u[0])
+    for i in order:
+        part = A.partial_absorb(part, u[i], m[i], float(w[i]))
+    assert part.count == I
+    np.testing.assert_allclose(np.asarray(A.partial_finalize(part)),
+                               want, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 10 ** 6))
+def test_any_merge_tree_matches_batched_aio(I, seed):
+    """Splitting the updates across single-absorb partials and fusing
+    them in a RANDOM merge tree reproduces the batched Eq. 5 — the
+    edge/cloud topology can shard arbitrarily."""
+    u, m, w = _stacked(seed, I)
+    want = np.asarray(A.aio_aggregate_stacked(u, m, w))
+    rng = np.random.default_rng(seed + 2)
+    parts = [A.partial_absorb(A.partial_init(u[0]), u[i], m[i], float(w[i]))
+             for i in range(I)]
+    while len(parts) > 1:
+        a = parts.pop(int(rng.integers(len(parts))))
+        b = parts.pop(int(rng.integers(len(parts))))
+        parts.append(A.partial_merge(a, b))
+    assert parts[0].count == I
+    np.testing.assert_allclose(np.asarray(A.partial_finalize(parts[0])),
+                               want, atol=1e-5)
+
+
+def test_partial_identity_and_weight_scale_invariance():
+    u, m, w = _stacked(0, 4)
+    part = A.partial_init(u[0])
+    for i in range(4):
+        part = A.partial_absorb(part, u[i], m[i], float(w[i]))
+    # merging with the identity is a bitwise no-op
+    ident = A.partial_init(u[0])
+    merged = A.partial_merge(ident, part)
+    assert bool(jnp.all(merged.num == part.num))
+    assert bool(jnp.all(merged.den == part.den))
+    # a common weight scale cancels in the finalize ratio: streaming
+    # consumers never need the cohort normalization
+    scaled = A.partial_init(u[0])
+    for i in range(4):
+        scaled = A.partial_absorb(scaled, u[i], m[i], 7.5 * float(w[i]))
+    np.testing.assert_allclose(np.asarray(A.partial_finalize(scaled)),
+                               np.asarray(A.partial_finalize(part)),
+                               atol=1e-5)
+
+
+def test_partial_absorb_pytree_matches_stacked():
+    ks = jax.random.split(KEY, 6)
+    updates = [{"a": jax.random.normal(ks[i], (4, 5)),
+                "b": jax.random.normal(ks[i + 3], (7,))} for i in range(3)]
+    masks = [jax.tree.map(
+        lambda x, i=i: (jax.random.uniform(ks[i], x.shape) > 0.4
+                        ).astype(jnp.float32), u)
+        for i, u in enumerate(updates)]
+    w = [0.2, 0.3, 0.5]
+    part = A.partial_init(updates[0])
+    for upd, msk, wi in zip(updates, masks, w):
+        part = A.partial_absorb(part, upd, msk, wi)
+    out = A.partial_finalize(part)
+    for path in ("a", "b"):
+        su = jnp.stack([u[path].reshape(-1) for u in updates])
+        sm = jnp.stack([m[path].reshape(-1) for m in masks])
+        ref = A.aio_aggregate_stacked(su, sm, jnp.asarray(w))
+        np.testing.assert_allclose(np.asarray(out[path]).reshape(-1),
+                                   np.asarray(ref), atol=1e-6)
+
+
+def test_empty_partial_finalizes_to_zero():
+    part = A.partial_init({"w": jnp.ones((3, 2))})
+    out = A.partial_finalize(part)
+    assert np.all(np.asarray(out["w"]) == 0.0)
+    assert part.count == 0
+
+
 def test_aio_degenerates_to_fedavg_when_full():
     """g=1 for all devices -> AnycostFL degrades to conventional FL
     (Proposition 1)."""

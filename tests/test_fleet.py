@@ -188,6 +188,49 @@ def test_energy_selection_prefers_headroom():
     assert counts[0] + counts[2] > 20 * (counts[1] + counts[3])
 
 
+def test_oort_exploits_gain_times_speed():
+    # same energy-binding fleet as the gain test: every solved strategy
+    # fits the deadline, so speed = 1 and the utility ordering is the
+    # gain ordering. With explore_frac=0 the pick is pure exploitation.
+    from repro.fleet import OortSelection
+    envs = _envs([2.0, 9.0, 4.0, 6.5])
+    pol = OortSelection(np.random.default_rng(0), explore_frac=0.0)
+    assert pol.select([0, 1, 2, 3], envs, {}, cap=2) == [1, 3]
+    assert pol.select([0, 1, 2, 3], envs, {}, cap=2) == [1, 3]
+
+
+def test_oort_speed_term_penalizes_deadline_violators():
+    from repro.fleet import OortSelection
+    envs = _envs([2.0, 9.0])
+    pol = OortSelection(np.random.default_rng(0))
+    u_fast = pol.utility(envs[1])
+    from repro.core.schedule import solve
+    s = solve(envs[1])
+    # same gain, but a round that takes 3x the deadline: utility shrinks
+    import dataclasses
+    slow = dataclasses.replace(envs[1], T_max=(s.T_cmp + s.T_com) / 3.0)
+    assert pol.utility(slow) < u_fast
+
+
+def test_oort_exploration_reaches_every_device():
+    """gain-only ranking would never pick the weakest device; the
+    exploration reserve probes least-selected candidates over rounds."""
+    from repro.fleet import OortSelection
+    envs = _envs([2.0, 9.0, 4.0, 6.5])
+    pol = OortSelection(np.random.default_rng(0), explore_frac=0.5)
+    seen = set()
+    for _ in range(12):
+        picked = pol.select([0, 1, 2, 3], envs, {}, cap=2)
+        assert len(picked) == 2 and picked == sorted(picked)
+        seen.update(picked)
+    assert seen == {0, 1, 2, 3}
+
+
+def test_oort_noncapped_selects_everyone():
+    pol = make_selection("oort", np.random.default_rng(0))
+    assert pol.select([0, 1, 2], {}, {}, cap=3) == [0, 1, 2]
+
+
 # ------------------------------------------------------ runner integration
 
 def _run(dynamics=None, n_devices=4, **kw):
@@ -275,6 +318,17 @@ def test_gain_selection_runs_end_to_end():
     h = _run(dynamics=dyn, n_devices=6)
     assert all(r.n_clients <= 3 for r in h.rounds)
     assert h.best_acc > 0
+
+
+def test_oort_selection_runs_end_to_end():
+    dyn = FleetDynamicsConfig(selection="oort", participation=0.5)
+    h = _run(dynamics=dyn, n_devices=6)
+    assert all(1 <= r.n_clients <= 3 for r in h.rounds)
+    assert h.best_acc > 0
+    # the cap binds, and over the run exploration spreads participation
+    # past the top-utility half of the roster
+    participants = {c for _, c, _ in h.dispatch_log}
+    assert len(participants) > 3
 
 
 def test_battery_gated_fedbuff_respects_reserve():

@@ -24,6 +24,50 @@ def test_aio_aggregate(I, N, dtype):
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=tol)
 
 
+@pytest.mark.parametrize("N", [512, 3000, 17])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_aio_absorb_matches_ref(N, dtype):
+    ks = jax.random.split(KEY, 4)
+    num = jax.random.normal(ks[0], (N,))
+    den = jax.random.uniform(ks[1], (N,))
+    u = jax.random.normal(ks[2], (N,), dtype)
+    m = (jax.random.uniform(ks[3], (N,)) > 0.5).astype(dtype)
+    got = aio_agg.aio_absorb(num, den, u, m, 0.37, interpret=True,
+                             block_n=512)
+    want = ref.aio_absorb_ref(num, den, u, m, 0.37)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=tol)
+
+
+@pytest.mark.parametrize("N", [512, 3000, 17])
+def test_aio_merge_matches_ref(N):
+    ks = jax.random.split(KEY, 4)
+    args = [jax.random.normal(ks[i], (N,)) for i in range(4)]
+    got = aio_agg.aio_merge(*args, interpret=True, block_n=512)
+    want = ref.aio_merge_ref(*args)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-6)
+
+
+def test_chained_absorb_matches_batched_kernel():
+    """Streaming I kernel absorbs + the finalize ratio == the batched
+    (I, N) aio_aggregate kernel — the O(N)-memory path is exact."""
+    I, N = 5, 700
+    ks = jax.random.split(KEY, 3)
+    u = jax.random.normal(ks[0], (I, N))
+    m = (jax.random.uniform(ks[1], (I, N)) > 0.5).astype(jnp.float32)
+    w = jax.random.uniform(ks[2], (I,), jnp.float32)
+    num = jnp.zeros((N,), jnp.float32)
+    den = jnp.zeros((N,), jnp.float32)
+    for i in range(I):
+        num, den = aio_agg.aio_absorb(num, den, u[i], m[i], w[i],
+                                      interpret=True, block_n=512)
+    got = jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+    want = aio_agg.aio_aggregate(u, m, w, interpret=True, block_n=512)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
 @pytest.mark.parametrize("K,C", [(8, 128), (100, 700), (256, 512),
                                  (33, 1000), (1000, 9)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -75,3 +119,20 @@ def test_ops_dispatch_matches_ref():
     a = ops.aio_aggregate_op(u, m, w, use_pallas=False)
     b = ops.aio_aggregate_op(u, m, w, use_pallas=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_ops_absorb_merge_dispatch_matches_ref():
+    from repro.kernels import ops
+    ks = jax.random.split(KEY, 4)
+    num = jax.random.normal(ks[0], (300,))
+    den = jax.random.uniform(ks[1], (300,))
+    u = jax.random.normal(ks[2], (300,))
+    m = (jax.random.uniform(ks[3], (300,)) > 0.5).astype(jnp.float32)
+    a = ops.aio_absorb_op(num, den, u, m, 0.6, use_pallas=False)
+    b = ops.aio_absorb_op(num, den, u, m, 0.6, use_pallas=True)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+    a2 = ops.aio_merge_op(num, den, u, m, use_pallas=False)
+    b2 = ops.aio_merge_op(num, den, u, m, use_pallas=True)
+    for x, y in zip(a2, b2):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)

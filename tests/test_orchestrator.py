@@ -73,6 +73,28 @@ def test_zero_staleness_keeps_base_weights_bitwise():
     assert bool(jnp.all(w == base))    # scales of 1.0 short-circuit
 
 
+def test_unnormalized_weights_stay_in_lockstep_with_base_weights():
+    """Guard: the streaming path's per-update coefficients, normalized
+    over the cohort, must match base_weights for every method — a change
+    to one formula (Theorem-1 floor, FedHQ noise term, FedAvg counts)
+    that misses the other breaks hier/fedbuff vs flat silently."""
+    from repro.orchestrator.policies import base_weights, \
+        unnormalized_weight
+
+    class U:
+        def __init__(self, alpha, beta, n):
+            self.alpha, self.beta_target, self.n_samples = alpha, beta, n
+
+    ups = [U(0.25, 1e-3, 96), U(0.7, 0.02, 128), U(1.0, 1.0 / 15, 64)]
+    fedhq_L = [2, 16, 256]
+    for method, use_aio in (("anycostfl", True), ("anycostfl", False),
+                            ("fedhq", False), ("fedavg", False)):
+        base = np.asarray(base_weights(method, use_aio, ups, fedhq_L))
+        raw = np.array([unnormalized_weight(method, use_aio, u, L)
+                        for u, L in zip(ups, fedhq_L)])
+        np.testing.assert_allclose(raw / raw.sum(), base, rtol=1e-6)
+
+
 def test_semisync_deadline_partition():
     class P:
         def __init__(self, d):
@@ -208,6 +230,23 @@ def test_staleness_config_validation():
         OrchestratorConfig(policy="fedbuff", staleness_cap=-1)
     with pytest.raises(ValueError):
         OrchestratorConfig(policy="fedbuff", staleness_mode="defer")
+    with pytest.raises(ValueError):
+        OrchestratorConfig(policy="fedbuff", max_inflight=0)
+
+
+def test_fedbuff_max_inflight_throttles_concurrency():
+    """--max-inflight caps concurrent dispatched flights: an uncapped
+    3-device run has all 3 in flight at t=0; a cap of 2 is never
+    exceeded, waiters drain FIFO, and the run still makes progress."""
+    h_free = _fedbuff()
+    assert h_free.peak_inflight == 3
+    h_cap = _fedbuff(max_inflight=2)
+    assert 1 <= h_cap.peak_inflight <= 2
+    assert len(h_cap.rounds) >= 1
+    assert all(np.isfinite(r.energy_j) and r.energy_j > 0
+               for r in h_cap.rounds)
+    # seeded determinism under the throttle
+    assert h_cap.trace == _fedbuff(max_inflight=2).trace
 
 
 @pytest.mark.slow

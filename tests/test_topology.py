@@ -1,0 +1,152 @@
+"""Hierarchical multi-cell topology: cell assignment, backhaul model,
+edge-tier streaming aggregation, and the flat-equivalence guarantees."""
+import numpy as np
+import pytest
+
+from repro.orchestrator import OrchestratorConfig, run_orchestrated
+from repro.sysmodel.population import FleetConfig
+from repro.sysmodel.wireless import WirelessConfig
+from repro.topology import BackhaulConfig, TopologyConfig, assign_cells
+from repro.train.fl_loop import FLRunConfig
+
+TINY = dict(rounds=2, n_train=128, n_test=64, eval_every=1, lr=0.1,
+            batch_size=32, seed=3, use_planner=False)
+
+
+def _run(topology=None, n=4, policy="sync", **kw):
+    cfg = FLRunConfig(method="anycostfl", **TINY)
+    fleet = FleetConfig(n_devices=n, topology=topology)
+    return run_orchestrated(cfg, fleet,
+                            OrchestratorConfig(policy=policy,
+                                               use_pool=False, **kw))
+
+
+# ------------------------------------------------------------ config / cells
+
+def test_assign_cells_contiguous_and_round_robin():
+    t = TopologyConfig(kind="hier", n_cells=3)
+    c = assign_cells(7, t)
+    assert sorted(set(c.tolist())) == [0, 1, 2]
+    assert all(np.diff(c) >= 0)          # contiguous blocks
+    rr = assign_cells(7, TopologyConfig(kind="hier", n_cells=3,
+                                        assignment="round_robin"))
+    assert rr.tolist()[:3] == [0, 1, 2]  # striped
+    for k in range(3):                   # every cell non-empty
+        assert (c == k).sum() >= 2
+        assert (rr == k).sum() >= 2
+
+
+def test_topology_validation():
+    with pytest.raises(ValueError):
+        TopologyConfig(kind="mesh")
+    with pytest.raises(ValueError):
+        TopologyConfig(kind="flat", n_cells=2)
+    with pytest.raises(ValueError):
+        TopologyConfig(kind="hier", n_cells=0)
+    with pytest.raises(ValueError):
+        assign_cells(2, TopologyConfig(kind="hier", n_cells=3))
+    with pytest.raises(ValueError):
+        BackhaulConfig(rate_bps=0.0)
+    with pytest.raises(ValueError):
+        BackhaulConfig(latency_s=-1.0)
+
+
+def test_backhaul_costs():
+    assert BackhaulConfig.zero_cost().ship_cost(1e6) == (0.0, 0.0)
+    b = BackhaulConfig(rate_bps=1e6, latency_s=0.5, energy_per_bit=1e-9,
+                       payload_factor=2.0)
+    t, e = b.ship_cost(1e6)
+    assert t == pytest.approx(0.5 + 2.0)     # 2e6 bits at 1e6 bit/s
+    assert e == pytest.approx(2e6 * 1e-9)
+    assert b.payload_bits(1e6) == 2e6        # constant in client count
+
+
+def test_radius_scale_defaults_to_area_tiling():
+    base = WirelessConfig()
+    t4 = TopologyConfig(kind="hier", n_cells=4)
+    assert t4.radius_scale == pytest.approx(0.5)
+    ws = t4.cell_wireless(base)
+    assert len(ws) == 4
+    assert ws[0].cell_radius_m == pytest.approx(base.cell_radius_m * 0.5)
+    # 1 cell keeps the macro geometry object identity (flat equivalence)
+    assert TopologyConfig(kind="hier", n_cells=1).cell_wireless(base)[0] \
+        is base
+
+
+# -------------------------------------------------------- flat equivalences
+
+def test_hier_one_cell_zero_backhaul_reproduces_flat_sync():
+    """Acceptance: --topology hier --cells 1 with a zero-cost backhaul
+    reproduces the flat sync trajectory (costs bitwise, learning metrics
+    to float tolerance — the streaming fold reorders the Eq.-5 sums)."""
+    h_flat = _run()
+    topo = TopologyConfig(kind="hier", n_cells=1,
+                          backhaul=BackhaulConfig.zero_cost())
+    h_hier = _run(topology=topo)
+    assert len(h_flat.rounds) == len(h_hier.rounds)
+    # round 0 sees identical params, so every realized cost is bitwise
+    # equal; later rounds inherit the streaming fold's float reordering
+    # through the model (compression bits depend on the update values),
+    # so costs track to float tolerance
+    a0, b0 = h_flat.rounds[0], h_hier.rounds[0]
+    assert (a0.latency_s, a0.energy_j, a0.comm_bits, a0.mean_alpha,
+            a0.mean_beta) == (b0.latency_s, b0.energy_j, b0.comm_bits,
+                              b0.mean_alpha, b0.mean_beta)
+    for a, b in zip(h_flat.rounds, h_hier.rounds):
+        assert a.latency_s == pytest.approx(b.latency_s, rel=1e-6)
+        assert a.energy_j == pytest.approx(b.energy_j, rel=1e-6)
+        assert a.comm_bits == pytest.approx(b.comm_bits, rel=1e-6)
+        assert a.mean_alpha == b.mean_alpha
+        assert a.test_loss == pytest.approx(b.test_loss, rel=1e-4)
+    assert h_hier.rounds[0].n_cells_reporting == 1
+    assert h_hier.rounds[0].backhaul_bits > 0
+    assert h_flat.rounds[0].backhaul_bits == 0.0
+
+
+# ---------------------------------------------------------- multi-cell runs
+
+def test_hier_multicell_ships_per_cell_and_pays_backhaul():
+    bh = BackhaulConfig(rate_bps=1e8, latency_s=0.2, energy_per_bit=1e-10)
+    topo = TopologyConfig(kind="hier", n_cells=3, backhaul=bh)
+    h = _run(topology=topo, n=6)
+    r = h.rounds[0]
+    assert r.n_cells_reporting == 3
+    assert r.n_clients == 6
+    # each reporting cell ships one constant-size (num, den) partial
+    import jax
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+    from repro.utils.pytree import tree_size
+    n_params = tree_size(build_model(get_config("fmnist-cnn")).init(
+        jax.random.PRNGKey(0)))
+    assert r.backhaul_bits == pytest.approx(
+        3 * bh.payload_bits(32.0 * n_params))
+    # backhaul latency sits on the critical path of every round
+    assert all(x.latency_s >= 0.2 for x in h.rounds)
+    # EDGE_MERGE events are on the recorded timeline
+    assert any(kind == "edge_merge" for _, _, kind, _ in h.trace)
+
+
+def test_hier_seeded_determinism():
+    topo = TopologyConfig(kind="hier", n_cells=2)
+    h1, h2 = _run(topology=topo), _run(topology=topo)
+    assert h1.trace == h2.trace
+    assert [r.energy_j for r in h1.rounds] == \
+        [r.energy_j for r in h2.rounds]
+    assert h1.best_acc == h2.best_acc
+
+
+def test_hier_cell_deadline_binds_at_the_edge():
+    """A tight per-cell deadline caps every cell barrier (plus zero-cost
+    shipping, the whole round) and drops the stragglers."""
+    topo = TopologyConfig(kind="hier", n_cells=2, cell_deadline_s=0.5,
+                          backhaul=BackhaulConfig.zero_cost())
+    h = _run(topology=topo, n=6)
+    assert all(r.latency_s <= 0.5 + 1e-9 for r in h.rounds)
+    assert sum(r.n_dropped for r in h.rounds) > 0
+
+
+def test_hier_rejects_stream_policies():
+    with pytest.raises(ValueError):
+        _run(topology=TopologyConfig(kind="hier", n_cells=2),
+             policy="fedbuff", max_wallclock_s=5.0)
