@@ -1,6 +1,7 @@
-"""Hierarchical scaling study: streaming-AIO memory + flat-vs-hier TTA.
+"""Hierarchical scaling study: streaming-AIO memory, donated absorb,
+backhaul codec payloads, and flat-vs-hier TTA.
 
-Two measurements, one artifact (experiments/fl/hier_scaling_<scale>.json):
+Four measurements, one artifact (experiments/fl/hier_scaling_<scale>.json):
 
 1. **Peak aggregation memory vs client count.**  The batched Eq.-5 path
    materializes the zero-padded ``(I, N)`` update/mask stack — live bytes
@@ -11,13 +12,24 @@ Two measurements, one artifact (experiments/fl/hier_scaling_<scale>.json):
    holds more than one) with explicit live-byte accounting, and their
    outputs are checked against each other.
 
-2. **Flat vs hierarchical time-to-accuracy.**  The same method/seed run
+2. **Donated vs undonated absorb.**  The plain jnp absorb allocates a
+   fresh (num, den) pair per arrival, so the old and new accumulators
+   coexist transiently; the donated jit (``donate_argnums`` /
+   ``input_output_aliases``) writes the += into the operand buffers.
+   Whether each call actually reused its buffer is *measured* via
+   ``unsafe_buffer_pointer`` identity, and the peak accounts the
+   double-buffer only where reallocation really happened.
+
+3. **Backhaul codec payloads.**  One shipped partial encoded at
+   f32/bf16/int8 (topology/codec.py): exact encoded bits, ratio vs f32,
+   and the max finalize deviation of the decoded partial from the
+   uncompressed aggregate (int8 must sit within its amax/127 grid).
+
+4. **Flat vs hierarchical time-to-accuracy.**  The same method/seed run
    over one 550 m macro cell versus a client->edge->cloud topology
    (per-cell wireless with area-tiled radii, streaming edge partials,
-   modeled backhaul).  Smaller cells mean shorter uplink distances and
-   higher Eq.-8 rates, which the Problem-(P4) solver converts into
-   higher-fidelity strategies — the hierarchy buys accuracy per
-   simulated second at the price of one backhaul hop.
+   modeled backhaul), plus the same hierarchy on an int8 backhaul —
+   ~4x less backhaul traffic at matching accuracy.
 
 ``PYTHONPATH=src python benchmarks/hier_scaling.py``
 (BENCH_SCALE=fast|full; full is the ~1k-client fleet)
@@ -56,6 +68,10 @@ SCALES = {
 # fast-scale runs only clear the low bars; full keeps the paper-style ones
 ACC_TARGETS = (0.15, 0.2, 0.25, 0.3, 0.4, 0.5)
 
+# the same donated-absorb jit the EdgeAggregator hot path uses, built
+# from the public rule (one compile; donation is the thing under test)
+_DONATED_ABSORB = jax.jit(A.absorb_trees, donate_argnums=(0, 1))
+
 
 # ------------------------------------------------- 1) aggregation memory
 
@@ -67,8 +83,13 @@ def _device_update(key, n):
 
 
 def measure_memory(n_clients: int, n: int, seed: int = 0) -> dict:
-    """Run both aggregation paths over the same I updates and account
-    the peak concurrently-live aggregation arrays of each."""
+    """Run the aggregation paths over the same I updates and account the
+    peak concurrently-live aggregation arrays of each.
+
+    The streaming paths' accumulator double-buffering is *measured*, not
+    assumed: each absorb records whether the output pair landed at the
+    input pair's buffer addresses (donated jit: yes, in place; plain jnp:
+    no, a fresh pair coexists with the old one during the call)."""
     keys = jax.random.split(jax.random.PRNGKey(seed), n_clients)
     w = np.linspace(0.5, 1.5, n_clients).astype(np.float32)
 
@@ -84,29 +105,95 @@ def measure_memory(n_clients: int, n: int, seed: int = 0) -> dict:
     batched_peak = (u_stack.nbytes + m_stack.nbytes + out_b.nbytes)
     del u_stack, m_stack
 
-    # streaming monoid: accumulator pair + ONE in-flight update
-    t0 = time.time()
-    part = A.partial_init(out_b)
-    live_one_update = 0
-    for k, wi in zip(keys, w):
-        u, m = _device_update(k, n)
-        live_one_update = u.nbytes + m.nbytes
-        part = A.partial_absorb(part, u, m, float(wi))
-    out_s = A.partial_finalize(part)
-    out_s.block_until_ready()
-    t_streaming = time.time() - t0
-    streaming_peak = (part.num.nbytes + part.den.nbytes
-                      + live_one_update + out_s.nbytes)
+    def stream(absorb):
+        """Fold all updates through ``absorb``; returns the final pair,
+        elapsed time, and whether every absorb reused its buffers."""
+        t0 = time.time()
+        num = jnp.zeros_like(out_b)
+        den = jnp.zeros_like(out_b)
+        acc_bytes = num.nbytes + den.nbytes
+        in_place = True
+        live_one_update = 0
+        for k, wi in zip(keys, w):
+            u, m = _device_update(k, n)
+            live_one_update = u.nbytes + m.nbytes
+            ptr = num.unsafe_buffer_pointer()
+            num, den = absorb(num, den, u, m, wi)
+            in_place &= num.unsafe_buffer_pointer() == ptr
+        out = A.finalize_trees(num, den)
+        out.block_until_ready()
+        # old + new accumulator pairs coexist per absorb unless the call
+        # demonstrably wrote in place
+        peak = acc_bytes * (1 if in_place else 2) \
+            + live_one_update + out.nbytes
+        return out, time.time() - t0, in_place, int(peak)
 
-    err = float(jnp.max(jnp.abs(out_s - out_b)))
+    out_d, t_donated, donated_in_place, donated_peak = stream(
+        lambda nu, de, u, m, wi: _DONATED_ABSORB(nu, de, u, m,
+                                                 jnp.float32(wi)))
+    out_u, t_undonated, undonated_in_place, undonated_peak = stream(
+        lambda nu, de, u, m, wi: A.absorb_trees(nu, de, u, m, float(wi)))
+
+    err = max(float(jnp.max(jnp.abs(out_d - out_b))),
+              float(jnp.max(jnp.abs(out_u - out_b))))
     return {"n_clients": n_clients, "n_elems": n,
             "batched_peak_bytes": int(batched_peak),
-            "streaming_peak_bytes": int(streaming_peak),
-            "batched_s": t_batched, "streaming_s": t_streaming,
+            "streaming_peak_bytes": donated_peak,
+            "streaming_undonated_peak_bytes": undonated_peak,
+            "absorb_in_place": donated_in_place,
+            "undonated_in_place": undonated_in_place,
+            "batched_s": t_batched, "streaming_s": t_donated,
+            "streaming_undonated_s": t_undonated,
             "max_abs_err": err}
 
 
-# ----------------------------------------------------- 2) flat vs hier TTA
+# ----------------------------------------------------- 2) backhaul codec
+
+def measure_codec(n: int, seed: int = 0, n_absorbed: int = 8) -> dict:
+    """Encode one realistic shipped partial at every wire dtype: exact
+    bits, ratio vs f32, and the finalize deviation of the decoded partial
+    from the uncompressed aggregate."""
+    from repro.topology import CODECS, decode_partial, encode_partial
+
+    keys = jax.random.split(jax.random.PRNGKey(seed + 17), n_absorbed)
+    num = jnp.zeros((n,), jnp.float32)
+    den = jnp.zeros((n,), jnp.float32)
+    for i, k in enumerate(keys):
+        u, m = _device_update(k, n)
+        num, den = A.absorb_trees(num, den, u, m, 0.5 + 0.1 * i)
+    part = A.PartialAgg(num=num, den=den, count=n_absorbed)
+    ref = A.partial_finalize(part)
+    rows = {}
+    f32_bits = None
+    for codec in CODECS:
+        enc = encode_partial(part, codec)
+        got = A.partial_finalize(decode_partial(enc))
+        if codec == "f32":
+            f32_bits = enc.bits
+        # elementwise grid bound of the ratio: (Δn + |n/d|Δd)/d with each
+        # codec's own per-plane step: exact at f32, half-ulp relative
+        # truncation at bf16 (8 mantissa bits), amax/127 at int8
+        if codec == "f32":
+            step_n = step_d = 0.0
+        elif codec == "bf16":
+            step_n = float(jnp.max(jnp.abs(part.num))) * 2.0 ** -8
+            step_d = float(jnp.max(jnp.abs(part.den))) * 2.0 ** -8
+        else:
+            step_n = float(jnp.max(jnp.abs(part.num))) / 127
+            step_d = float(jnp.max(jnp.abs(part.den))) / 127
+        dmin = jnp.maximum(part.den, 1e-12)
+        bound = (step_n + jnp.abs(ref) * step_d) / dmin
+        err = jnp.abs(ref - got)
+        rows[codec] = {
+            "bits": enc.bits,
+            "ratio_vs_f32": f32_bits / enc.bits,
+            "max_finalize_err": float(jnp.max(err)),
+            "within_grid": bool(jnp.all(err <= bound + 1e-5)),
+        }
+    return rows
+
+
+# ----------------------------------------------------- 3) flat vs hier TTA
 
 def _tta_row(name: str, hist, topo) -> dict:
     return {
@@ -142,6 +229,14 @@ def run_tta(sc: dict, seed: int = 0) -> list[dict]:
         run_cfg, FleetConfig(n_devices=sc["n_devices"], topology=topo),
         orch)
     rows.append(_tta_row("hier", h_hier, topo))
+    topo8 = TopologyConfig(kind="hier", n_cells=sc["n_cells"],
+                           backhaul=BackhaulConfig(rate_bps=1e9,
+                                                   latency_s=0.01,
+                                                   codec="int8"))
+    h_int8 = run_orchestrated(
+        run_cfg, FleetConfig(n_devices=sc["n_devices"], topology=topo8),
+        orch)
+    rows.append(_tta_row("hier-int8", h_int8, topo8))
     return rows
 
 
@@ -150,20 +245,31 @@ def main(seed: int = 0) -> dict:
     sc = SCALES[scale_tag]
     os.makedirs(CACHE_DIR, exist_ok=True)
     path = os.path.join(CACHE_DIR, f"hier_scaling_{scale_tag}.json")
+    result = None
     if os.path.exists(path):
-        result = json.load(open(path))
-    else:
+        cached = json.load(open(path))
+        # a pre-codec/pre-donation artifact (older schema) must not be
+        # served as if it carried the new measurements — regenerate
+        if "codec" in cached and "donated_in_place" in cached:
+            result = cached
+    if result is None:
         mem = [measure_memory(i, sc["mem_n"], seed)
                for i in sc["mem_clients"]]
         peaks = [r["streaming_peak_bytes"] for r in mem]
         result = {
             "scale": scale_tag,
             "memory": mem,
-            # the acceptance claim: the streaming path's peak is flat in
-            # client count while the batched stack grows linearly
+            # the acceptance claims: the streaming path's peak is flat in
+            # client count while the batched stack grows linearly, and the
+            # donated absorb demonstrably reuses its buffers (in place)
             "streaming_peak_constant": len(set(peaks)) == 1,
+            "donated_in_place": all(r["absorb_in_place"] for r in mem),
+            "donated_saving_bytes": (mem[-1]
+                                     ["streaming_undonated_peak_bytes"]
+                                     - mem[-1]["streaming_peak_bytes"]),
             "batched_growth_x": mem[-1]["batched_peak_bytes"]
             / mem[0]["batched_peak_bytes"],
+            "codec": measure_codec(sc["mem_n"], seed),
             "tta": run_tta(sc, seed),
         }
         with open(path, "w") as f:
@@ -172,11 +278,25 @@ def main(seed: int = 0) -> dict:
         print(json.dumps(row))
     print(json.dumps({"streaming_peak_constant":
                       result["streaming_peak_constant"],
+                      "donated_in_place": result["donated_in_place"],
+                      "donated_saving_bytes":
+                      result["donated_saving_bytes"],
                       "batched_growth_x": result["batched_growth_x"]}))
+    print(json.dumps(result["codec"]))
     for row in result["tta"]:
         print(json.dumps(row))
     assert result["streaming_peak_constant"], \
         "streaming aggregation peak memory must be flat in client count"
+    assert result["donated_in_place"], \
+        "donated absorb must update the accumulator buffers in place"
+    assert result["memory"][-1]["streaming_peak_bytes"] <= \
+        result["memory"][-1]["streaming_undonated_peak_bytes"], \
+        "donation must not regress streaming peak memory"
+    codec = result["codec"]
+    assert codec["int8"]["ratio_vs_f32"] > 3.9, \
+        "int8 backhaul payload must be ~4x smaller than f32"
+    assert codec["int8"]["within_grid"], \
+        "int8 finalize must stay within the amax/127 quantization grid"
     return result
 
 

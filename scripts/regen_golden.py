@@ -1,0 +1,45 @@
+"""Regenerate tests/goldens/fl_sync_golden.json.
+
+The golden pins the sync-policy trajectory bit-for-bit so refactors of the
+loop/orchestrator can prove equivalence.  It must be regenerated whenever
+the *numerics* of the sync path change on purpose (e.g. the Eq.-2
+sparsification threshold moving from jnp.quantile's interpolation to the
+exact order statistic) — see .claude/skills/verify/SKILL.md.
+
+  PYTHONPATH=src python scripts/regen_golden.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.sysmodel.population import FleetConfig            # noqa: E402
+from repro.train.fl_loop import FLRunConfig, run_fl          # noqa: E402
+
+CONFIG = dict(rounds=4, n_train=256, n_test=128, eval_every=2, lr=0.1,
+              batch_size=32, seed=3, use_planner=False, n_devices=4)
+FIELDS = ("round", "latency_s", "energy_j", "flops", "comm_bits",
+          "mean_alpha", "mean_beta", "mean_gain", "test_acc", "test_loss")
+
+
+def main():
+    results = {}
+    for method in ("anycostfl", "heterofl"):
+        c = {k: v for k, v in CONFIG.items() if k != "n_devices"}
+        hist = run_fl(FLRunConfig(method=method, **c),
+                      FleetConfig(n_devices=CONFIG["n_devices"]))
+        results[method] = {
+            "best_acc": hist.best_acc,
+            "rounds": [{f: getattr(r, f) for f in FIELDS}
+                       for r in hist.rounds],
+        }
+    path = os.path.join(os.path.dirname(__file__), "..", "tests",
+                        "goldens", "fl_sync_golden.json")
+    with open(path, "w") as f:
+        json.dump({"config": CONFIG, "results": results}, f, indent=1)
+    print(f"wrote {os.path.normpath(path)}")
+
+
+if __name__ == "__main__":
+    main()

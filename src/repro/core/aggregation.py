@@ -166,9 +166,17 @@ def partial_absorb(part: PartialAgg, values: PyTree, mask: PyTree,
     return PartialAgg(num=num, den=den, count=part.count + 1)
 
 
-def partial_merge(a: PartialAgg, b: PartialAgg, *,
-                  use_kernel: bool = False) -> PartialAgg:
-    """Fuse two partials (commutative, associative up to float rounding)."""
+def merge_trees(num_a: PyTree, den_a: PyTree, num_b: PyTree, den_b: PyTree,
+                *, use_kernel: bool = False) -> tuple[PyTree, PyTree]:
+    """The merge update rule over (num, den) pytrees — jit-compatible.
+
+    Single home of the element-wise pair addition; :func:`partial_merge`
+    and the runner's donated cloud-merge hot path both route through
+    here.  Under ``jax.jit(..., donate_argnums=(0, 1))`` the ``a``-side
+    accumulator is updated in place instead of reallocated per arrival
+    (the Pallas kernel route aliases its outputs onto the same operands
+    via ``input_output_aliases``).
+    """
     if use_kernel:
         from repro.kernels.ops import aio_merge_op
 
@@ -178,20 +186,32 @@ def partial_merge(a: PartialAgg, b: PartialAgg, *,
                                 nb.reshape(-1), db.reshape(-1))
             return n.reshape(shape), d.reshape(shape)
 
-        pairs = jax.tree.map(leaf, a.num, a.den, b.num, b.den)
-        treedef = jax.tree.structure(a.num)
+        pairs = jax.tree.map(leaf, num_a, den_a, num_b, den_b)
+        treedef = jax.tree.structure(num_a)
         flat = treedef.flatten_up_to(pairs)
-        return PartialAgg(
-            num=jax.tree.unflatten(treedef, [p[0] for p in flat]),
-            den=jax.tree.unflatten(treedef, [p[1] for p in flat]),
-            count=a.count + b.count)
-    return PartialAgg(num=jax.tree.map(jnp.add, a.num, b.num),
-                      den=jax.tree.map(jnp.add, a.den, b.den),
-                      count=a.count + b.count)
+        return (jax.tree.unflatten(treedef, [p[0] for p in flat]),
+                jax.tree.unflatten(treedef, [p[1] for p in flat]))
+    return (jax.tree.map(jnp.add, num_a, num_b),
+            jax.tree.map(jnp.add, den_a, den_b))
+
+
+def partial_merge(a: PartialAgg, b: PartialAgg, *,
+                  use_kernel: bool = False) -> PartialAgg:
+    """Fuse two partials (commutative, associative up to float rounding)."""
+    num, den = merge_trees(a.num, a.den, b.num, b.den,
+                           use_kernel=use_kernel)
+    return PartialAgg(num=num, den=den, count=a.count + b.count)
+
+
+def finalize_trees(num: PyTree, den: PyTree) -> PyTree:
+    """Eq. 5's ratio over (num, den) pytrees — the single home of the
+    zero-coverage floor, like :func:`absorb_trees`/:func:`merge_trees`
+    for their rules (the mesh route and benchmarks call this directly)."""
+    return jax.tree.map(
+        lambda n, d: jnp.where(d > 0, n / jnp.maximum(d, 1e-12), 0.0),
+        num, den)
 
 
 def partial_finalize(part: PartialAgg) -> PyTree:
     """Eq. 5's ratio: num/den where any device covered, else 0."""
-    return jax.tree.map(
-        lambda n, d: jnp.where(d > 0, n / jnp.maximum(d, 1e-12), 0.0),
-        part.num, part.den)
+    return finalize_trees(part.num, part.den)

@@ -77,15 +77,31 @@ def kernel_norms(v: jax.Array, seg_ids: np.ndarray, n_kernels: int
     return jnp.sqrt(sq)
 
 
+def sparsify_threshold(norms: jax.Array, rho) -> jax.Array:
+    """Eq. 2's threshold: the exact ``ceil((1-rho)*K)``-th largest norm.
+
+    ``jnp.quantile``'s linear interpolation lands *between* adjacent
+    order statistics and can shift the kept-kernel count by one at small
+    K; the appendix semantics are an exact order statistic, so we sort
+    and gather.  ``rho`` may be a traced scalar.  At ``rho == 1`` the
+    index clips to the largest norm, so the top kernel (and its ties)
+    always survives.
+    """
+    K = norms.shape[0]
+    rho = jnp.clip(jnp.asarray(rho, jnp.float32), 0.0, 1.0)
+    kept = jnp.ceil((1.0 - rho) * K)              # kernels to keep
+    idx = jnp.clip(K - kept, 0, K - 1).astype(jnp.int32)
+    return jnp.sort(norms)[idx]
+
+
 def sparsify_mask(v: jax.Array, seg_ids: np.ndarray, n_kernels: int,
                   rho: jax.Array) -> jax.Array:
-    """Eq. 2 — keep the top ``(1-rho)`` fraction of kernels by L2 norm.
+    """Eq. 2 — keep the top ``ceil((1-rho)*K)`` kernels by L2 norm.
 
     Returns the elementwise {0,1} mask. ``rho`` may be a traced scalar.
     """
     norms = kernel_norms(v, seg_ids, n_kernels)
-    # threshold = quantile so that P(norm >= thr) = 1 - rho
-    thr = jnp.quantile(norms, jnp.clip(rho, 0.0, 1.0))
+    thr = sparsify_threshold(norms, rho)
     keep = norms >= thr                       # (K,)
     return keep[jnp.asarray(seg_ids)].astype(v.dtype)
 

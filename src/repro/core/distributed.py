@@ -42,6 +42,28 @@ def magnitude_threshold(g: jax.Array, keep_frac: float) -> jax.Array:
     return std * jnp.sqrt(2.0) * erfinv(1.0 - keep_frac)
 
 
+def _local_compress(gf: jax.Array, keep_frac: float, quantize: bool):
+    """The local FGC stage shared by the sync collective and its EF
+    residual: magnitude threshold -> explicit keep mask -> optional int8
+    amax quantization.
+
+    Returns ``(sparse, keep, q, scale)``; ``q``/``scale`` are None when
+    ``quantize`` is off.  The *dequantized* contribution this pod puts on
+    the wire is ``q * scale`` (or ``sparse`` unquantized) — EF residuals
+    must subtract that, not the pre-quantization value, or the int8
+    rounding error is never fed back.
+    """
+    thr = magnitude_threshold(gf, keep_frac)
+    keep = (jnp.abs(gf) >= thr).astype(jnp.float32)
+    sparse = jnp.where(keep > 0, gf, 0.0)
+    if not quantize:
+        return sparse, keep, None, None
+    amax = jnp.max(jnp.abs(sparse))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(sparse / scale), -127, 127).astype(jnp.int8)
+    return sparse, keep, q, scale
+
+
 def anycost_sync_leaf(g: jax.Array, axis_name: str, keep_frac: float,
                       quantize: bool = True, axes=None) -> jax.Array:
     """Compressed AIO all-reduce of one gradient leaf over ``axis_name``.
@@ -53,6 +75,12 @@ def anycost_sync_leaf(g: jax.Array, axis_name: str, keep_frac: float,
     keeps the compression *shard-wise* (each device compresses and
     exchanges only its ZeRO shard over the pod axis — measured 30x wire
     difference, EXPERIMENTS.md §Perf P3).
+
+    The AIO denominator is built from the *explicit* keep mask, exchanged
+    alongside the values (1 bit/coordinate on a real wire — negligible
+    next to the int8 payload).  Inferring transmission from ``val != 0``
+    would mis-count a pod whose kept coordinate quantized (or genuinely
+    landed) on zero as absent and bias the mean.
     """
     from repro import sharding as shd
 
@@ -64,14 +92,10 @@ def anycost_sync_leaf(g: jax.Array, axis_name: str, keep_frac: float,
             x, shd.sharding_for(x.shape, names))
 
     gf = _pin(g.astype(jnp.float32))
-    thr = magnitude_threshold(gf, keep_frac)
-    sparse = _pin(jnp.where(jnp.abs(gf) >= thr, gf, 0.0))
+    sparse, keep, q, scale = _local_compress(gf, keep_frac, quantize)
+    sparse = _pin(sparse)
     if quantize:
-        amax = jnp.max(jnp.abs(sparse))
-        scale = jnp.maximum(amax, 1e-12) / 127.0
-        q = _pin(jnp.clip(jnp.round(sparse / scale), -127, 127)
-                 .astype(jnp.int8))
-        q_all = _pin(jax.lax.all_gather(q, axis_name), lead=1)  # (P,...)
+        q_all = _pin(jax.lax.all_gather(_pin(q), axis_name), lead=1)
         s_all = jax.lax.all_gather(scale, axis_name)            # (P,)
         vals = q_all.astype(jnp.float32) \
             * s_all.reshape((-1,) + (1,) * g.ndim)
@@ -83,8 +107,11 @@ def anycost_sync_leaf(g: jax.Array, axis_name: str, keep_frac: float,
     num = jnp.sum(vals, axis=0)
     if keep_frac >= 1.0:
         return (num / vals.shape[0]).astype(g.dtype)
-    mask = (vals != 0.0).astype(jnp.float32)
-    den = jnp.sum(mask, axis=0)
+    # exchange the mask at int8 ({0,1} is exact) so its wire cost stays
+    # a fraction of the payload's, not 4x it; cast back after the gather
+    m_all = _pin(jax.lax.all_gather(_pin(keep.astype(jnp.int8)),
+                                    axis_name), lead=1)
+    den = jnp.sum(m_all.astype(jnp.float32), axis=0)
     out = jnp.where(den > 0, num / jnp.maximum(den, 1.0), 0.0)
     return out.astype(g.dtype)
 
@@ -137,10 +164,13 @@ def anycost_gradient_sync_ef(grads: PyTree, residual: PyTree,
         corrected = g.astype(jnp.float32) + r
         synced = anycost_sync_leaf(corrected.astype(g.dtype), axis_name,
                                    keep_frac, quantize, axes=ax)
-        # the locally-transmitted part (pre-aggregation view): recompute the
-        # local sparse value to track what this pod actually contributed
-        thr = magnitude_threshold(corrected, keep_frac)
-        sent = jnp.where(jnp.abs(corrected) >= thr, corrected, 0.0)
+        # what this pod actually contributed: recompute the local compress
+        # stage on the same dtype-round-tripped view the collective saw.
+        # ``sent`` is the *dequantized* wire value — with quantize on, the
+        # int8 rounding error stays in the residual (EF's whole point).
+        gf = corrected.astype(g.dtype).astype(jnp.float32)
+        sparse, _, qv, scale = _local_compress(gf, keep_frac, quantize)
+        sent = qv.astype(jnp.float32) * scale if quantize else sparse
         return synced, corrected - sent
 
     if axes_tree is None:
@@ -153,3 +183,56 @@ def anycost_gradient_sync_ef(grads: PyTree, residual: PyTree,
     new_res = jax.tree.map(lambda t: t[1], pairs,
                            is_leaf=lambda x: isinstance(x, tuple))
     return synced, new_res
+
+
+# ------------------------------------------------- mesh-mapped edge cells
+
+def mesh_cell_aggregate(u: jax.Array, m: jax.Array, w: jax.Array, mesh, *,
+                        axis_name: str = "cell", finalize: bool = True):
+    """Pod-scale hierarchical AIO: edge cells mapped onto a mesh axis.
+
+    ``u``/``m``: ``(I, N)`` stacked updates/masks, ``w``: ``(I,)``
+    unnormalized coefficients, with the client dim ``I`` partitioned over
+    the ``axis_name`` mesh axis — each shard is one edge cell's roster.
+    Inside the manual region every cell folds its local clients into an
+    O(N) ``(num, den)`` partial with the streaming absorb (never holding
+    its ``(I_c, N)`` block as weighted copies), then the partials are
+    cloud-merged with the monoid over the axis: ``merge`` is element-wise
+    addition, so ``psum`` *is* the merge.  ``finalize=True`` applies the
+    Eq.-5 ratio once and returns the replicated ``(N,)`` aggregate;
+    ``finalize=False`` returns the merged ``(num, den)`` pair (for a
+    caller that wants to keep folding — e.g. across rounds or pods).
+
+    Equals the flat ``aio_aggregate_stacked`` oracle up to float
+    reordering, for any cell partitioning (the monoid is commutative).
+    Built on :func:`repro.utils.compat.shard_map`, so it runs on both
+    JAX 0.4.x and >= 0.6.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.ref import aio_absorb_ref
+    from repro.utils.compat import shard_map
+
+    def per_cell(u_c, m_c, w_c):
+        # shard-local streaming absorb: one pass over the cell's clients,
+        # O(N) accumulator state (the EdgeAggregator semantics, vectorized
+        # onto the mesh)
+        num = jnp.zeros(u_c.shape[1:], jnp.float32)
+        den = jnp.zeros_like(num)
+
+        def absorb(carry, upd):
+            ui, mi, wi = upd
+            return aio_absorb_ref(carry[0], carry[1], ui, mi, wi), None
+
+        (num, den), _ = jax.lax.scan(absorb, (num, den), (u_c, m_c, w_c))
+        num = jax.lax.psum(num, axis_name)      # monoid merge over cells
+        den = jax.lax.psum(den, axis_name)
+        if not finalize:
+            return num, den
+        from repro.core.aggregation import finalize_trees
+        return finalize_trees(num, den)
+
+    spec = P(axis_name)
+    out_specs = P() if finalize else (P(), P())
+    return shard_map(per_cell, mesh=mesh, in_specs=(spec, spec, spec),
+                     out_specs=out_specs, check_vma=False)(u, m, w)

@@ -17,6 +17,16 @@ materialized, which is what lets the server scale the participant count
 past VMEM/HBM limits and lets edge aggregators fold local uplinks before
 one backhaul hop.  ``merge`` fuses two accumulator pairs (edge -> cloud).
 Both are single-pass element-wise kernels over (BN,) tiles.
+
+Both streaming kernels are *donating*: the accumulator operands are
+aliased onto the outputs (``input_output_aliases``) and donated through
+``jax.jit`` (``donate_argnums``), so each absorb/merge updates the O(N)
+accumulator in place instead of reallocating it per arrival — the
+caller's input buffers are consumed (reusing them raises a deleted-array
+error; hand the returned pair forward instead).  When N is not a
+multiple of the lane tile the operands are padded first and the alias
+binds to the padded copy — size accumulators to the tile (or accept one
+transient copy) for true in-place streaming.
 """
 from __future__ import annotations
 
@@ -75,14 +85,16 @@ def _absorb_kernel(w_ref, num_ref, den_ref, u_ref, m_ref,
     oden_ref[...] = den_ref[...] + wm
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+@functools.partial(jax.jit, donate_argnums=(0, 1),
+                   static_argnames=("interpret", "block_n"))
 def aio_absorb(num: jax.Array, den: jax.Array, u: jax.Array, m: jax.Array,
                w, *, interpret: bool = False, block_n: int = BN
                ) -> tuple[jax.Array, jax.Array]:
     """Stream one weighted masked update into a running accumulator.
 
     num, den, u, m: (N,); w: scalar unnormalized coefficient.
-    Returns (num + w*m*u, den + w*m) — O(N) state, one pass over HBM.
+    Returns (num + w*m*u, den + w*m) — O(N) state, one pass over HBM,
+    in place: num/den are donated and aliased onto the outputs.
     """
     (N,) = num.shape
     n_pad = (-N) % block_n
@@ -101,6 +113,8 @@ def aio_absorb(num: jax.Array, den: jax.Array, u: jax.Array, m: jax.Array,
         out_specs=(vec, vec),
         out_shape=(jax.ShapeDtypeStruct((Np,), jnp.float32),
                    jax.ShapeDtypeStruct((Np,), jnp.float32)),
+        # operand order: (w, num, den, u, m) -> alias num/den onto outputs
+        input_output_aliases={1: 0, 2: 1},
         interpret=interpret,
     )(jnp.asarray(w, jnp.float32).reshape(1, 1), num, den, u, m)
     return onum[:N], oden[:N]
@@ -111,11 +125,14 @@ def _merge_kernel(na_ref, da_ref, nb_ref, db_ref, onum_ref, oden_ref):
     oden_ref[...] = da_ref[...] + db_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+@functools.partial(jax.jit, donate_argnums=(0, 1),
+                   static_argnames=("interpret", "block_n"))
 def aio_merge(num_a: jax.Array, den_a: jax.Array, num_b: jax.Array,
               den_b: jax.Array, *, interpret: bool = False,
               block_n: int = BN) -> tuple[jax.Array, jax.Array]:
-    """Fuse two (num, den) partial accumulators element-wise. All (N,)."""
+    """Fuse two (num, den) partial accumulators element-wise. All (N,).
+    The ``a`` side (the running cloud accumulator) is donated and updated
+    in place; ``b`` (the freshly shipped partial) is read-only."""
     (N,) = num_a.shape
     n_pad = (-N) % block_n
     args = [num_a, den_a, num_b, den_b]
@@ -130,6 +147,7 @@ def aio_merge(num_a: jax.Array, den_a: jax.Array, num_b: jax.Array,
         out_specs=(vec, vec),
         out_shape=(jax.ShapeDtypeStruct((Np,), jnp.float32),
                    jax.ShapeDtypeStruct((Np,), jnp.float32)),
+        input_output_aliases={0: 0, 1: 1},
         interpret=interpret,
     )(*args)
     return onum[:N], oden[:N]

@@ -30,6 +30,8 @@ def aio_aggregate_op(u: jax.Array, m: jax.Array, w: jax.Array, *,
 
 def aio_absorb_op(num: jax.Array, den: jax.Array, u: jax.Array,
                   m: jax.Array, w, *, use_pallas: bool = _ON_TPU):
+    """NOTE: the pallas route donates (num, den) — the caller must treat
+    them as consumed and carry the returned pair forward."""
     if use_pallas:
         return aio_agg.aio_absorb(num, den, u, m, w,
                                   interpret=interpret_default())
@@ -38,6 +40,7 @@ def aio_absorb_op(num: jax.Array, den: jax.Array, u: jax.Array,
 
 def aio_merge_op(num_a: jax.Array, den_a: jax.Array, num_b: jax.Array,
                  den_b: jax.Array, *, use_pallas: bool = _ON_TPU):
+    """NOTE: the pallas route donates the a-side accumulator pair."""
     if use_pallas:
         return aio_agg.aio_merge(num_a, den_a, num_b, den_b,
                                  interpret=interpret_default())

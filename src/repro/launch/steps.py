@@ -26,6 +26,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import sharding as shd
 from repro.configs.base import ArchConfig, InputShape
 from repro.core.distributed import anycost_gradient_sync
+from repro.utils.compat import shard_map
 from repro.models import layers as L
 from repro.models.registry import Model, loss_fn
 from repro.train.optimizer import Optimizer
@@ -163,7 +164,7 @@ def make_train_step(model: Model, opt: Optimizer, *, remat: str = "full",
 
             # partial-manual: only the pod axis is manual; data/model stay
             # under GSPMD. params replicated over pod; batch sharded on it.
-            loss, grads = jax.shard_map(
+            loss, grads = shard_map(
                 per_pod, mesh=mesh, axis_names=frozenset({"pod"}),
                 in_specs=(jax.tree.map(lambda _: P(), params),
                           jax.tree.map(lambda _: P("pod"), batch)),

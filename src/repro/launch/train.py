@@ -124,7 +124,8 @@ def _topology_config(args):
         backhaul=BackhaulConfig(
             rate_bps=args.backhaul_rate,
             latency_s=args.backhaul_latency,
-            energy_per_bit=args.backhaul_energy))
+            energy_per_bit=args.backhaul_energy,
+            codec=args.backhaul_codec))
 
 
 def run_fl(args):
@@ -227,6 +228,12 @@ def main():
                     help="edge->cloud one-way latency in seconds")
     ap.add_argument("--backhaul-energy", type=float, default=0.0,
                     help="edge->cloud energy tariff in J/bit")
+    ap.add_argument("--backhaul-codec", default="f32",
+                    choices=["f32", "bf16", "int8"],
+                    help="wire dtype of the shipped (num, den) partial: "
+                         "f32 = bitwise passthrough (flat-equivalent), "
+                         "bf16 = 2x smaller, int8 = 4x smaller with "
+                         "per-leaf amax scaling")
     # ---- fleet dynamics control plane
     ap.add_argument("--availability", default="always",
                     choices=["always", "markov", "diurnal", "replay"],

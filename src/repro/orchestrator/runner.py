@@ -68,6 +68,7 @@ from repro.orchestrator.policies import (STALE_REQUEUE, OrchestratorConfig,
                                          make_policy, staleness_scales,
                                          unnormalized_weight)
 from repro.sysmodel.population import FleetConfig, make_fleet
+from repro.topology.codec import decode_partial, encode_partial
 from repro.topology.edge import EdgeAggregator, finalize_apply, cloud_merge
 from repro.train.baselines import BaselinePolicy
 from repro.train.fl_loop import (FLRunConfig, History, RoundLog,
@@ -408,9 +409,13 @@ def _hier_round_merge(sim: Simulation, policy, live, aborted,
                 w_un = unnormalized_weight(rc.method, rc.use_aio, p.update,
                                            p.fedhq_level) * s
                 edge.absorb(p.update.values, p.update.mask, w_un)
-            t_ship, e_k = topo.backhaul.ship_cost(sim.S_bits)
-            parts.append(edge.ship())
-            bh_bits += topo.backhaul.payload_bits(sim.S_bits)
+            # encode the partial at the configured wire dtype; the exact
+            # encoded bit count (planes + int8 scale headers) is what the
+            # link serializes and what the energy tariff charges
+            enc = encode_partial(edge.ship(), topo.backhaul.codec)
+            t_ship, e_k = topo.backhaul.ship_bits(enc.bits)
+            parts.append(enc)
+            bh_bits += enc.bits
             e_ship += e_k
             ships.append((t_wall + lat_k + t_ship, k))
             lat = max(lat, lat_k + t_ship)
@@ -423,7 +428,8 @@ def _hier_round_merge(sim: Simulation, policy, live, aborted,
         queue.pop()
     new_params = None
     if parts:
-        merged = cloud_merge(parts, use_kernel=sim.edge_kernel)
+        merged = cloud_merge([decode_partial(e) for e in parts],
+                             use_kernel=sim.edge_kernel)
         new_params = finalize_apply(sorted_params, merged.num, merged.den,
                                     sim.server.server_lr)
     return accepted_all, new_params, lat, e_ship, bh_bits, len(parts)

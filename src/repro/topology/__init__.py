@@ -17,9 +17,12 @@ hierarchy over a zero-cost backhaul reproduces the flat trajectory.
 from repro.topology.backhaul import BackhaulConfig
 from repro.topology.cells import (ASSIGNMENTS, TOPOLOGIES, TopologyConfig,
                                   assign_cells)
+from repro.topology.codec import (CODECS, EncodedPartial, decode_partial,
+                                  encode_partial, payload_factor)
 from repro.topology.edge import EdgeAggregator, cloud_merge
 
 __all__ = [
-    "ASSIGNMENTS", "TOPOLOGIES", "TopologyConfig", "assign_cells",
-    "BackhaulConfig", "EdgeAggregator", "cloud_merge",
+    "ASSIGNMENTS", "CODECS", "TOPOLOGIES", "TopologyConfig",
+    "assign_cells", "BackhaulConfig", "EdgeAggregator", "EncodedPartial",
+    "cloud_merge", "decode_partial", "encode_partial", "payload_factor",
 ]

@@ -3,22 +3,29 @@
 Each edge aggregator ships one payload per round regardless of how many
 local uplinks it absorbed: the streaming-AIO partial is the unnormalized
 ``(num, den)`` pair (core/aggregation.PartialAgg), so its wire size is a
-constant multiple of the full update size — by default ``2 * S_bits``
-(one f32 plane each for num and den), never the per-client stack.  This
-is the memory/traffic argument for hierarchical FL in mobile edge
+constant multiple of the full update size — never the per-client stack.
+This is the memory/traffic argument for hierarchical FL in mobile edge
 networks (Luo et al.; Tan et al.): the cloud sees O(cells) traffic, not
 O(clients).
+
+The multiple is set by the configured wire ``codec``
+(:mod:`repro.topology.codec`): two f32 planes at ``f32`` (factor 2.0),
+bf16 truncation (1.0), or int8 amax-scaled planes (0.5 plus per-leaf
+scale headers).  ``payload_factor`` is *derived* from the encoded dtype;
+the runner feeds the exact encoded bit count into :meth:`ship_bits`.
 
 Costs mirror the device-side Eq. 6-9 shape: a fixed propagation latency
 plus serialization at the provisioned rate, and an energy-per-bit tariff
 for the wired/microwave hop.  ``BackhaulConfig.zero_cost()`` builds the
 degenerate free link under which a 1-cell hierarchy reproduces the flat
-single-cell trajectory.
+single-cell trajectory (the default ``f32`` codec is a bitwise
+passthrough, preserving that equivalence).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,14 +33,21 @@ class BackhaulConfig:
     rate_bps: float = 1e9          # provisioned edge->cloud throughput
     latency_s: float = 0.01        # one-way propagation + handshake
     energy_per_bit: float = 0.0    # J/bit tariff of the hop
-    payload_factor: float = 2.0    # partial wire size / S_bits (num + den)
+    codec: str = "f32"             # wire dtype of the shipped (num, den)
+    # explicit override of the wire-size multiple; None -> derived from
+    # the codec's encoded dtype (f32: 2.0, bf16: 1.0, int8: 0.5)
+    payload_factor: Optional[float] = None
 
     def __post_init__(self):
+        from repro.topology.codec import CODECS
         if self.rate_bps <= 0:
             raise ValueError("backhaul rate_bps must be > 0")
         if self.latency_s < 0 or self.energy_per_bit < 0:
             raise ValueError("backhaul latency/energy must be >= 0")
-        if self.payload_factor <= 0:
+        if self.codec not in CODECS:
+            raise ValueError(f"unknown backhaul codec {self.codec!r}; "
+                             f"expected one of {CODECS}")
+        if self.payload_factor is not None and self.payload_factor <= 0:
             raise ValueError("backhaul payload_factor must be > 0")
 
     @classmethod
@@ -41,13 +55,27 @@ class BackhaulConfig:
         """A free, instantaneous link (flat-equivalence degenerate case)."""
         return cls(rate_bps=math.inf, latency_s=0.0, energy_per_bit=0.0)
 
-    def payload_bits(self, s_bits: float) -> float:
-        """Wire size of one shipped partial — constant in client count."""
-        return self.payload_factor * s_bits
+    @property
+    def wire_factor(self) -> float:
+        """Partial wire size / S_bits — derived from the codec unless
+        explicitly overridden."""
+        if self.payload_factor is not None:
+            return self.payload_factor
+        from repro.topology.codec import payload_factor
+        return payload_factor(self.codec)
 
-    def ship_cost(self, s_bits: float) -> tuple[float, float]:
-        """(latency_s, energy_j) of shipping one partial over the hop."""
-        bits = self.payload_bits(s_bits)
+    def payload_bits(self, s_bits: float) -> float:
+        """Modelled wire size of one shipped partial — constant in client
+        count.  (The runner uses the codec's *exact* encoded size, which
+        adds the int8 per-leaf scale headers on top of this.)"""
+        return self.wire_factor * s_bits
+
+    def ship_bits(self, bits: float) -> tuple[float, float]:
+        """(latency_s, energy_j) of shipping ``bits`` over the hop."""
         t = self.latency_s + (bits / self.rate_bps
                               if math.isfinite(self.rate_bps) else 0.0)
         return t, bits * self.energy_per_bit
+
+    def ship_cost(self, s_bits: float) -> tuple[float, float]:
+        """(latency_s, energy_j) of shipping one partial over the hop."""
+        return self.ship_bits(self.payload_bits(s_bits))

@@ -1,0 +1,127 @@
+"""Backhaul codec: compress shipped streaming-AIO partials per plane.
+
+The paper's efficiency lever is compression on every uplink (§III-C);
+this module extends it to the edge->cloud tier — the hop Luo et al.
+identify as the system bottleneck.  An edge ships its ``(num, den)``
+partial (core/aggregation.PartialAgg) encoded as:
+
+* ``f32``  — identity.  Zero-copy passthrough, bitwise flat-equivalence
+  (the 1-cell hierarchy stays exactly the flat trajectory).
+* ``bf16`` — truncation of both planes; 2x smaller.
+* ``int8`` — per-leaf per-plane symmetric amax scaling, the same
+  quantization grid as ``core/compression``'s Eq.-3 machinery at its
+  coarsest (scale = amax/127, round-to-nearest): 4x smaller, decode
+  error <= amax/254 per element per plane.
+
+Eq. 5's finalize is the *ratio* num/den, so a common scale error mostly
+cancels — int8 partials track the uncompressed aggregate far inside the
+naive per-plane bound (the codec tests pin this).
+
+Bit accounting is exact: plane payloads at the encoded dtype width plus
+one 32-bit scale header per leaf per plane for ``int8``.  The
+:class:`~repro.topology.backhaul.BackhaulConfig` derives its
+``payload_factor`` from these widths; the runner feeds the *encoded*
+size into ``ship_cost``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation
+from repro.utils.pytree import tree_size
+
+PyTree = Any
+
+CODECS = ("f32", "bf16", "int8")
+_PLANE_BITS = {"f32": 32, "bf16": 16, "int8": 8}
+_SCALE_HEADER_BITS = 32          # one f32 amax scale per leaf per plane
+
+
+@dataclasses.dataclass
+class EncodedPartial:
+    """A wire-encoded (num, den) partial plus its exact bit size."""
+    codec: str
+    num: PyTree                  # plane payloads at the encoded dtype
+    den: PyTree
+    num_scale: Optional[PyTree]  # per-leaf f32 scales (int8 only)
+    den_scale: Optional[PyTree]
+    count: int
+    bits: float
+
+
+def payload_factor(codec: str) -> float:
+    """Wire size of a partial / S_bits (headerless model view): the two
+    planes at the encoded width over the f32 update width."""
+    if codec not in CODECS:
+        raise ValueError(f"unknown backhaul codec {codec!r}; "
+                         f"expected one of {CODECS}")
+    return 2.0 * _PLANE_BITS[codec] / 32.0
+
+
+def payload_bits(n_elems: int, n_leaves: int, codec: str) -> float:
+    """Exact encoded size in bits of one shipped partial."""
+    bits = 2.0 * _PLANE_BITS[codec] * n_elems
+    if codec == "int8":
+        bits += 2.0 * _SCALE_HEADER_BITS * n_leaves
+    return bits
+
+
+def _encode_plane_int8(tree: PyTree) -> tuple[PyTree, PyTree]:
+    def leaf(x):
+        xf = x.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(xf))
+        scale = jnp.maximum(amax, 1e-30) / 127.0
+        q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+
+    pairs = jax.tree.map(leaf, tree)
+    treedef = jax.tree.structure(tree)
+    flat = treedef.flatten_up_to(pairs)
+    return (jax.tree.unflatten(treedef, [p[0] for p in flat]),
+            jax.tree.unflatten(treedef, [p[1] for p in flat]))
+
+
+def encode_partial(part: aggregation.PartialAgg,
+                   codec: str = "f32") -> EncodedPartial:
+    """Encode a partial for the backhaul hop.  ``f32`` is the identity
+    (same arrays — bitwise flat-equivalence); the others re-materialize
+    the planes at the wire dtype."""
+    if codec not in CODECS:
+        raise ValueError(f"unknown backhaul codec {codec!r}; "
+                         f"expected one of {CODECS}")
+    n_elems = tree_size(part.num)
+    n_leaves = len(jax.tree_util.tree_leaves(part.num))
+    bits = payload_bits(n_elems, n_leaves, codec)
+    if codec == "f32":
+        return EncodedPartial(codec, part.num, part.den, None, None,
+                              part.count, bits)
+    if codec == "bf16":
+        cast = lambda t: jax.tree.map(
+            lambda x: x.astype(jnp.bfloat16), t)
+        return EncodedPartial(codec, cast(part.num), cast(part.den),
+                              None, None, part.count, bits)
+    qn, sn = _encode_plane_int8(part.num)
+    qd, sd = _encode_plane_int8(part.den)
+    return EncodedPartial(codec, qn, qd, sn, sd, part.count, bits)
+
+
+def decode_partial(enc: EncodedPartial) -> aggregation.PartialAgg:
+    """Inverse of :func:`encode_partial` (exact for f32, dequantized
+    otherwise); the cloud merges the result with the monoid."""
+    if enc.codec == "f32":
+        return aggregation.PartialAgg(num=enc.num, den=enc.den,
+                                      count=enc.count)
+    if enc.codec == "bf16":
+        up = lambda t: jax.tree.map(
+            lambda x: x.astype(jnp.float32), t)
+        return aggregation.PartialAgg(num=up(enc.num), den=up(enc.den),
+                                      count=enc.count)
+    deq = lambda t, s: jax.tree.map(
+        lambda q, sc: q.astype(jnp.float32) * sc, t, s)
+    return aggregation.PartialAgg(num=deq(enc.num, enc.num_scale),
+                                  den=deq(enc.den, enc.den_scale),
+                                  count=enc.count)

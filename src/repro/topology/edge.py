@@ -11,6 +11,13 @@ the cloud merges the per-cell partials and finalizes Eq. 5 once.
 The jit'd absorb/merge closures compile once per model treedef (the
 weight is traced); on TPU the same math routes through the Pallas
 ``aio_absorb`` / ``aio_merge`` kernels via ``use_kernel``.
+
+Both routes *donate* the running accumulator: the jnp path through
+``jax.jit(..., donate_argnums=(0, 1))``, the Pallas path through the
+kernels' ``input_output_aliases`` — every absorb/merge updates the O(N)
+``(num, den)`` pair in place instead of reallocating it per arrival.
+The donated buffers are consumed; :class:`EdgeAggregator` immediately
+rebinds ``self.part`` so no caller can observe them.
 """
 from __future__ import annotations
 
@@ -25,9 +32,12 @@ from repro.core import aggregation
 PyTree = Any
 
 
-# jit over the shared absorb rule (one compile per model treedef; the
-# weight is traced, so per-update coefficients never retrace)
-_absorb_jnp = jax.jit(aggregation.absorb_trees)
+# jit over the shared absorb/merge rules (one compile per model treedef;
+# the weight is traced, so per-update coefficients never retrace).  The
+# accumulator pair is donated: XLA writes the += into the operand buffers
+# instead of allocating a fresh O(N) pair per arrival.
+_absorb_jnp = jax.jit(aggregation.absorb_trees, donate_argnums=(0, 1))
+_merge_jnp = jax.jit(aggregation.merge_trees, donate_argnums=(0, 1))
 
 
 @functools.partial(jax.jit, static_argnames=("server_lr",))
@@ -74,9 +84,21 @@ class EdgeAggregator:
 
 def cloud_merge(partials: list[aggregation.PartialAgg], *,
                 use_kernel: bool = False) -> Optional[aggregation.PartialAgg]:
-    """Fuse the per-cell partials the backhaul delivered (any order)."""
+    """Fuse the per-cell partials the backhaul delivered (any order).
+
+    The running accumulator is donated through the merge (jnp route) or
+    aliased in place (kernel route), so the cloud's live state stays one
+    O(N) pair however many cells report."""
     merged = None
     for part in partials:
-        merged = part if merged is None else aggregation.partial_merge(
-            merged, part, use_kernel=use_kernel)
+        if merged is None:
+            merged = part
+        elif use_kernel:
+            merged = aggregation.partial_merge(merged, part,
+                                               use_kernel=True)
+        else:
+            num, den = _merge_jnp(merged.num, merged.den, part.num,
+                                  part.den)
+            merged = aggregation.PartialAgg(
+                num=num, den=den, count=merged.count + part.count)
     return merged

@@ -1,0 +1,51 @@
+"""JAX version-compatibility shims.
+
+``shard_map`` has moved twice across the JAX versions this repo supports:
+
+* JAX 0.4.x–0.5.x ship it as ``jax.experimental.shard_map.shard_map`` with
+  the positional ``(f, mesh, in_specs, out_specs)`` signature, a
+  ``check_rep=`` replication-check kwarg, and partial-manual mode spelled
+  as ``auto=`` (the set of mesh axes that *stay* under GSPMD).
+* JAX >= 0.6 ships it as ``jax.shard_map`` with keyword-only
+  ``mesh``/``in_specs``/``out_specs``, the check renamed to
+  ``check_vma=``, and partial-manual mode spelled as ``axis_names=``
+  (the set of mesh axes that *become* manual — the complement of the old
+  ``auto``).
+
+:func:`shard_map` below exposes the new-style surface and resolves to
+whichever implementation the installed JAX provides, so call sites (the
+anycost pod-sync step builder, the mesh-mapped cell aggregation route,
+and the distributed tests) are written once against the modern API.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f: Callable, *, mesh, in_specs: Any, out_specs: Any,
+              check_vma: bool = True,
+              axis_names: Optional[frozenset] = None) -> Callable:
+    """Version-portable ``shard_map`` (new-style keyword surface).
+
+    ``axis_names``: mesh axes to run in manual mode; ``None`` means all of
+    them (full-manual, both APIs' default).  On old JAX the complement is
+    passed as ``auto=``; on new JAX the set is forwarded verbatim.
+    """
+    if hasattr(jax, "shard_map"):          # JAX >= 0.6
+        kwargs: dict = dict(mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = frozenset(axis_names)
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kwargs = dict(check_rep=check_vma)
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kwargs["auto"] = auto
+    return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

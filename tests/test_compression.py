@@ -39,15 +39,40 @@ def test_sparsify_keeps_fraction(rho):
     seg, K = C.kernel_segments(tree)
     mask = C.sparsify_mask(vec, seg, K, jnp.float32(rho))
     norms = C.kernel_norms(vec, seg, K)
-    kept_kernels = 0
-    thr = jnp.quantile(norms, rho)
+    # documented semantics: threshold = the ceil((1-rho)*K)-th largest
+    # norm, kernels below it zeroed
+    want_kept = int(np.ceil((1 - rho) * K))
+    thr = np.sort(np.asarray(norms))[::-1][want_kept - 1]
     kept_kernels = int(jnp.sum(norms >= thr))
+    assert kept_kernels == want_kept          # norms are distinct here
     # mask covers exactly the elements of kept kernels
     kept_elems = int(jnp.sum(mask))
     expect = int(sum(int(jnp.sum(jnp.asarray(seg) == k)) for k in range(K)
                      if float(norms[k]) >= float(thr)))
     assert kept_elems == expect
-    assert kept_kernels >= max(int((1 - rho) * K), 1) - 1
+
+
+@pytest.mark.parametrize("K,rho,want_kept", [
+    # small-K boundaries where jnp.quantile's interpolated threshold
+    # drifts off the exact ceil((1-rho)*K) order statistic
+    (3, 0.5, 2),       # ceil(1.5) = 2
+    (5, 0.5, 3),       # ceil(2.5) = 3
+    (10, 0.25, 8),     # ceil(7.5) = 8 — quantile interpolation kept 7
+    (10, 0.34, 7),     # ceil(6.6) = 7 — quantile interpolation kept 6
+    (4, 0.25, 3),      # exact multiple: ceil(3.0) = 3
+    (7, 0.9, 1),       # ceil(0.7) = 1 (never empties the update)
+    (2, 1.0, 1),       # rho=1 clips to the top kernel
+    (6, 0.0, 6),       # rho=0 keeps everything
+])
+def test_sparsify_exact_order_statistic_at_boundaries(K, rho, want_kept):
+    """Regression: the kept-kernel count is the exact appendix formula at
+    boundary rho values (distinct norms, one element per kernel)."""
+    v = jnp.asarray(np.linspace(1.0, 2.0, K), jnp.float32)
+    seg = np.arange(K, dtype=np.int32)
+    mask = C.sparsify_mask(v, seg, K, jnp.float32(rho))
+    assert int(jnp.sum(mask)) == want_kept
+    # the survivors are exactly the largest-norm kernels
+    assert np.asarray(mask)[-want_kept:].all()
 
 
 @settings(max_examples=20, deadline=None)

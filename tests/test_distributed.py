@@ -1,5 +1,5 @@
 """Numerics of the compressed cross-pod gradient sync (subprocess with 2
-host devices acting as 2 pods)."""
+host devices acting as 2 pods) and the mesh-mapped edge-cell route."""
 import json
 import os
 import subprocess
@@ -17,7 +17,11 @@ import json
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
-from repro.core.distributed import anycost_gradient_sync, mean_gradient_sync
+from repro.core.aggregation import aio_aggregate_stacked
+from repro.core.distributed import (anycost_gradient_sync,
+                                    mean_gradient_sync,
+                                    mesh_cell_aggregate)
+from repro.utils.compat import shard_map
 
 mesh = jax.make_mesh((2,), ("pod",))
 g = {"w": (jnp.arange(64, dtype=jnp.float32).reshape(2, 32) + 1.0) / 64.0,
@@ -25,10 +29,11 @@ g = {"w": (jnp.arange(64, dtype=jnp.float32).reshape(2, 32) + 1.0) / 64.0,
 # leaves have a leading per-pod dim -> shard over pod
 specs = jax.tree.map(lambda _: P("pod"), g)
 
-def run(fn):
-    out = jax.shard_map(fn, mesh=mesh, in_specs=(specs,),
-                        out_specs=jax.tree.map(lambda _: P("pod"), g),
-                        check_vma=False)(g)
+def run(fn, tree=g):
+    out = shard_map(fn, mesh=mesh,
+                    in_specs=(jax.tree.map(lambda _: P("pod"), tree),),
+                    out_specs=jax.tree.map(lambda _: P("pod"), tree),
+                    check_vma=False)(tree)
     return jax.tree.map(np.asarray, out)
 
 exact = run(lambda x: mean_gradient_sync(x, "pod"))
@@ -44,8 +49,40 @@ err_quant = max(float(np.abs(exact[k] - quant[k]).max()) for k in exact)
 # kept them; everything is bounded by the max gradient magnitude
 amax = max(float(np.abs(exact[k]).max()) for k in exact)
 err_sparse = max(float(np.abs(exact[k] - sparse[k]).max()) for k in exact)
+
+# ---- zero-collision: pod 0 keeps a coordinate whose int8 level rounds to
+# zero (|g| << amax/254); the explicit keep mask must count it in the AIO
+# denominator, so the aggregate at that coordinate is the *mean* of the
+# two dequantized contributions, not pod 1's value alone.
+z = {"w": jnp.stack([jnp.asarray([100.0, 0.05, 50.0, -25.0]),
+                     jnp.asarray([100.0, 8.0, 50.0, -25.0])])}
+qz = run(lambda x: anycost_gradient_sync(x, "pod", keep_frac=0.999999,
+                                         quantize=True), z)
+# pod 0's 0.05 quantizes to level 0 -> dequantized 0; pod 1 sends ~8.0.
+# masked den = 2 -> aggregate ~= 4.0; den inferred from vals != 0 would
+# have given ~8.0.
+collision_val = float(qz["w"][0, 1])
+
+# ---- mesh-mapped edge cells: shard-local absorb + psum monoid merge
+# equals the flat stacked oracle (any device->cell split)
+key = jax.random.PRNGKey(0)
+ku, km, kw = jax.random.split(key, 3)
+I, N = 8, 640
+u = jax.random.normal(ku, (I, N), jnp.float32)
+mk = (jax.random.uniform(km, (I, N)) > 0.4).astype(jnp.float32)
+w = jax.random.uniform(kw, (I,), jnp.float32, 0.5, 1.5)
+cmesh = jax.make_mesh((2,), ("cell",))
+out_mesh = mesh_cell_aggregate(u, mk, w, cmesh)
+out_flat = aio_aggregate_stacked(u, mk, w)
+err_mesh = float(jnp.max(jnp.abs(out_mesh - out_flat)))
+num, den = mesh_cell_aggregate(u, mk, w, cmesh, finalize=False)
+err_part = float(jnp.max(jnp.abs(
+    jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0) - out_flat)))
+
 print(json.dumps({"err_lossless": err_lossless, "err_quant": err_quant,
-                  "err_sparse": err_sparse, "amax": amax}))
+                  "err_sparse": err_sparse, "amax": amax,
+                  "collision_val": collision_val,
+                  "err_mesh": err_mesh, "err_part": err_part}))
 """
 
 
@@ -63,3 +100,9 @@ def test_anycost_sync_numerics():
     assert res["err_quant"] <= res["amax"] / 127.0 + 1e-6
     # sparsified sync stays bounded (drops only small coordinates)
     assert res["err_sparse"] <= res["amax"]
+    # a kept-but-quantized-to-zero coordinate dilutes the mean (den counts
+    # it via the explicit mask): mean(0, ~8) ~= 4, not pod 1's 8
+    assert res["collision_val"] == pytest.approx(4.0, abs=0.5)
+    # mesh-mapped cells == flat oracle (float-reordering tolerance)
+    assert res["err_mesh"] < 1e-5
+    assert res["err_part"] < 1e-5

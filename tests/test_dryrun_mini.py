@@ -83,6 +83,18 @@ def test_mini_dryrun(arch, kind):
 
 @pytest.mark.slow
 def test_anycost_grad_sync_lowers_and_cuts_wire_bytes():
+    import jax
+    if not hasattr(jax, "shard_map"):
+        # the utils/compat shim makes the anycost step *buildable* on
+        # JAX 0.4.x, but lowering a partial-manual region (manual "pod",
+        # auto "data"/"model") over a multi-axis mesh aborts jaxlib
+        # 0.4.x's SPMD partitioner with a hard
+        # `sharding.IsManualSubgroup()` CHECK — verified identical with
+        # the pre-shim leaf body, so it is the old partitioner, not this
+        # repo's program.  Full-manual (single-axis) meshes work.
+        pytest.skip("partial-manual shard_map lowering aborts the "
+                    "jaxlib 0.4.x SPMD partitioner; the anycost pod "
+                    "route needs JAX >= 0.6")
     base = _run("granite-moe-1b-a400m", "train", "auto")
     comp = _run("granite-moe-1b-a400m", "train", "anycost")
     assert comp["n_coll"] > 0

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import distributed as D
+from repro.utils.compat import shard_map
 
 
 P = jax.sharding.PartitionSpec
@@ -17,7 +18,7 @@ def _fake_axis(fn, args, out_like):
     ``out_like``: a pytree prototype of the output (specs are P() for every
     leaf — eval_shape can't trace unbound axis names outside the map).
     """
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=jax.make_mesh((1,), ("pod",)),
         in_specs=tuple(jax.tree.map(lambda _: P(), a) for a in args),
         out_specs=jax.tree.map(lambda _: P(), out_like),
@@ -43,6 +44,29 @@ def test_residual_tracks_dropped_mass():
     assert float(jnp.abs(synced2["w"][1])) >= 0.0
 
 
+def test_residual_feeds_back_quantization_error():
+    """With quantize=True, ``sent`` is the *dequantized* int8 wire value,
+    so sent + residual == corrected exactly — the rounding error stays in
+    the residual instead of being silently dropped."""
+    g = {"w": jnp.asarray([10.0, 0.37, -8.13, 0.05, 3.1415, -0.61])}
+    res = D.init_error_feedback(g)
+
+    def run(gg, rr):
+        return D.anycost_gradient_sync_ef(gg, rr, "pod", keep_frac=1.0,
+                                          quantize=True)
+
+    synced, new_res = _fake_axis(run, (g, res), (g, res))
+    # reconstruct this pod's dequantized contribution the same way the
+    # collective computed it
+    _, _, q, scale = D._local_compress(g["w"], 1.0, True)
+    sent = np.asarray(q, np.float32) * float(scale)
+    np.testing.assert_allclose(np.asarray(new_res["w"]),
+                               np.asarray(g["w"]) - sent, atol=1e-6)
+    # the rounding error is genuinely nonzero at this amax spread — the
+    # pre-fix residual (corrected - pre-quantization sparse) was all-zero
+    assert float(np.abs(np.asarray(new_res["w"])).max()) > 1e-4
+
+
 def test_ef_converges_where_plain_compression_stalls():
     """Minimize ||w - b||^2 with heavy compression: EF reaches the optimum,
     plain (no-feedback) compression leaves persistent bias."""
@@ -56,7 +80,7 @@ def test_ef_converges_where_plain_compression_stalls():
         def body(wr, _):
             w, res = wr
             g = {"w": 2 * (w - b)}
-            synced, res = jax.shard_map(
+            synced, res = shard_map(
                 lambda gg, rr: D.anycost_gradient_sync_ef(
                     gg, rr, "pod", keep_frac=0.1, quantize=False),
                 mesh=mesh, in_specs=(jax.tree.map(lambda _: P(), g),
@@ -73,7 +97,7 @@ def test_ef_converges_where_plain_compression_stalls():
     def run_plain(w):
         def body(w, _):
             g = {"w": 2 * (w - b)}
-            synced = jax.shard_map(
+            synced = shard_map(
                 lambda gg: D.anycost_gradient_sync(gg, "pod",
                                                    keep_frac=0.1,
                                                    quantize=False),

@@ -3,10 +3,15 @@ edge-tier streaming aggregation, and the flat-equivalence guarantees."""
 import numpy as np
 import pytest
 
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation as A
 from repro.orchestrator import OrchestratorConfig, run_orchestrated
 from repro.sysmodel.population import FleetConfig
 from repro.sysmodel.wireless import WirelessConfig
-from repro.topology import BackhaulConfig, TopologyConfig, assign_cells
+from repro.topology import (BackhaulConfig, TopologyConfig, assign_cells,
+                            decode_partial, encode_partial, payload_factor)
 from repro.train.fl_loop import FLRunConfig
 
 TINY = dict(rounds=2, n_train=128, n_test=64, eval_every=1, lr=0.1,
@@ -59,6 +64,96 @@ def test_backhaul_costs():
     assert t == pytest.approx(0.5 + 2.0)     # 2e6 bits at 1e6 bit/s
     assert e == pytest.approx(2e6 * 1e-9)
     assert b.payload_bits(1e6) == 2e6        # constant in client count
+
+
+# ------------------------------------------------------------ backhaul codec
+
+def _partial(key, n=4096, count=3):
+    ku, kd = jax.random.split(key)
+    num = {"w": jax.random.normal(ku, (n,)) * 5.0,
+           "b": jax.random.normal(kd, (n // 8,))}
+    den = jax.tree.map(lambda x: jnp.abs(x) * 0.5, num)
+    return A.PartialAgg(num=num, den=den, count=count)
+
+
+def test_codec_f32_is_identity_passthrough():
+    part = _partial(jax.random.PRNGKey(0))
+    enc = encode_partial(part, "f32")
+    dec = decode_partial(enc)
+    # bitwise AND zero-copy: the very same arrays ride the wire
+    assert dec.num["w"] is part.num["w"]
+    assert dec.den["b"] is part.den["b"]
+    assert dec.count == part.count
+    n = 4096 + 512
+    assert enc.bits == 2 * 32 * n
+
+
+def test_codec_roundtrip_tolerances():
+    part = _partial(jax.random.PRNGKey(1))
+    n = 4096 + 512
+    for codec, factor, headers in (("bf16", 1.0, 0),
+                                   ("int8", 0.5, 2 * 2 * 32)):
+        enc = encode_partial(part, codec)
+        # payload_factor is wire size / S_bits with S_bits = 32*n
+        assert enc.bits == factor * 32 * n + headers
+        dec = decode_partial(enc)
+        for plane_in, plane_out in ((part.num, dec.num),
+                                    (part.den, dec.den)):
+            for k in plane_in:
+                x = np.asarray(plane_in[k], np.float32)
+                y = np.asarray(plane_out[k], np.float32)
+                amax = np.abs(x).max()
+                tol = amax / 254 + 1e-7 if codec == "int8" \
+                    else amax * 2.0 ** -8
+                assert np.abs(x - y).max() <= tol, (codec, k)
+
+
+def test_codec_int8_finalize_within_quantization_tolerance():
+    """The acceptance bound: finalize(decode(int8)) tracks the
+    uncompressed finalize within the amax/127 grid of the planes."""
+    part = _partial(jax.random.PRNGKey(2))
+    ref = A.partial_finalize(part)
+    got = A.partial_finalize(decode_partial(encode_partial(part, "int8")))
+    for k in ref:
+        x, y = np.asarray(ref[k]), np.asarray(got[k])
+        num_amax = float(np.abs(np.asarray(part.num[k])).max())
+        den = np.asarray(part.den[k])
+        # |Δ(n/d)| <= (Δn + |n/d| Δd) / d; bound with the floor den
+        dmin = np.maximum(den, 1e-12)
+        bound = (num_amax / 127 + np.abs(x) * den.max() / 127) / dmin
+        assert (np.abs(x - y) <= bound + 1e-5).all(), k
+
+
+def test_codec_validation_and_derived_payload_factor():
+    with pytest.raises(ValueError):
+        encode_partial(_partial(jax.random.PRNGKey(3)), "fp4")
+    with pytest.raises(ValueError):
+        BackhaulConfig(codec="fp4")
+    assert payload_factor("f32") == 2.0
+    assert payload_factor("bf16") == 1.0
+    assert payload_factor("int8") == 0.5
+    # derived unless explicitly overridden
+    assert BackhaulConfig(codec="int8").wire_factor == 0.5
+    assert BackhaulConfig(codec="int8",
+                          payload_factor=3.0).wire_factor == 3.0
+    b = BackhaulConfig(rate_bps=1e6, codec="bf16", latency_s=0.0)
+    assert b.ship_cost(1e6)[0] == pytest.approx(1.0)   # 1e6 bits @ 1e6 bps
+
+
+def test_hier_int8_codec_shrinks_backhaul_and_tracks_f32():
+    """An int8 backhaul pays ~4x fewer bits than f32 (modulo the scale
+    headers) and the learning trajectory stays close."""
+    bh32 = BackhaulConfig(rate_bps=1e9, latency_s=0.01)
+    bh8 = BackhaulConfig(rate_bps=1e9, latency_s=0.01, codec="int8")
+    h32 = _run(topology=TopologyConfig(kind="hier", n_cells=2,
+                                       backhaul=bh32), n=4)
+    h8 = _run(topology=TopologyConfig(kind="hier", n_cells=2,
+                                      backhaul=bh8), n=4)
+    b32 = h32.rounds[0].backhaul_bits
+    b8 = h8.rounds[0].backhaul_bits
+    assert b32 / b8 == pytest.approx(4.0, rel=0.01)
+    assert h8.rounds[0].test_acc == pytest.approx(
+        h32.rounds[0].test_acc, abs=0.1)
 
 
 def test_radius_scale_defaults_to_area_tiling():
