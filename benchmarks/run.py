@@ -2,11 +2,16 @@
 
 ``PYTHONPATH=src python -m benchmarks.run``  (BENCH_SCALE=fast|full)
 
+Run everything, or a single named section with an optional scale flag:
+
+``PYTHONPATH=src python -m benchmarks.run mobility_handover --fast``
+
 Prints ``name,us_per_call,derived`` CSV lines per section plus the per-
 table outputs. FL sections share cached runs under experiments/fl/.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import time
@@ -29,31 +34,59 @@ def _section(name, fn):
         return False
 
 
-def main() -> None:
+def _sections() -> dict:
     from benchmarks import (fig4_learning_curves, fig5a_ablation,
                             fig5bc_heterogeneity, fig5d_submodels,
                             kernel_micro, lemma1_divergence,
                             roofline_report, schedule_solver,
                             table1_cost_to_acc, theorem2_convergence)
     from benchmarks import (async_modes, fig1_breakdown, hier_scaling,
-                            selection_policies)
+                            mobility_handover, selection_policies)
+    return {
+        "fig1_breakdown": fig1_breakdown.main,
+        "async_modes": async_modes.main,
+        "selection_policies": selection_policies.main,
+        "hier_scaling": hier_scaling.main,
+        "mobility_handover": mobility_handover.main,
+        "kernel_micro": kernel_micro.main,
+        "lemma1_divergence": lemma1_divergence.main,
+        "theorem2_convergence": theorem2_convergence.main,
+        "schedule_solver": schedule_solver.main,
+        "roofline_report": roofline_report.main,
+        "table1_cost_to_acc": table1_cost_to_acc.main,
+        "fig4_learning_curves": fig4_learning_curves.main,
+        "fig5a_ablation": fig5a_ablation.main,
+        "fig5bc_heterogeneity":
+            lambda: (fig5bc_heterogeneity.main(kind="compute"),
+                     fig5bc_heterogeneity.main(kind="comm")),
+        "fig5d_submodels": fig5d_submodels.main,
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("section", nargs="?", default=None,
+                    help="run a single named section (default: all)")
+    ap.add_argument("--fast", action="store_true",
+                    help="force BENCH_SCALE=fast")
+    ap.add_argument("--full", action="store_true",
+                    help="force BENCH_SCALE=full")
+    args = ap.parse_args(argv)
+    if args.fast:
+        os.environ["BENCH_SCALE"] = "fast"
+    elif args.full:
+        os.environ["BENCH_SCALE"] = "full"
+    sections = _sections()
+    if args.section is not None:
+        if args.section not in sections:
+            raise SystemExit(f"unknown section {args.section!r}; "
+                             f"expected one of {sorted(sections)}")
+        if not _section(args.section, sections[args.section]):
+            raise SystemExit(1)
+        return
     ok = True
-    ok &= _section("fig1_breakdown", fig1_breakdown.main)
-    ok &= _section("async_modes", async_modes.main)
-    ok &= _section("selection_policies", selection_policies.main)
-    ok &= _section("hier_scaling", hier_scaling.main)
-    ok &= _section("kernel_micro", kernel_micro.main)
-    ok &= _section("lemma1_divergence", lemma1_divergence.main)
-    ok &= _section("theorem2_convergence", theorem2_convergence.main)
-    ok &= _section("schedule_solver", schedule_solver.main)
-    ok &= _section("roofline_report", roofline_report.main)
-    ok &= _section("table1_cost_to_acc", table1_cost_to_acc.main)
-    ok &= _section("fig4_learning_curves", fig4_learning_curves.main)
-    ok &= _section("fig5a_ablation", fig5a_ablation.main)
-    ok &= _section("fig5bc_heterogeneity",
-                   lambda: (fig5bc_heterogeneity.main(kind="compute"),
-                            fig5bc_heterogeneity.main(kind="comm")))
-    ok &= _section("fig5d_submodels", fig5d_submodels.main)
+    for name, fn in sections.items():
+        ok &= _section(name, fn)
     if not ok:
         raise SystemExit(1)
 

@@ -118,14 +118,24 @@ def channel_importance(params: PyTree, g: WidthGroup) -> jax.Array:
     return jnp.sqrt(jnp.sum(jnp.square(v.astype(jnp.float32)), axis=axes))
 
 
-def sort_channels(params: PyTree, spec: ShrinkSpec) -> PyTree:
-    """Server-side channel sorting (§III-B.1). Function-preserving."""
+def sort_channels(params: PyTree, spec: ShrinkSpec, *,
+                  return_perms: bool = False):
+    """Server-side channel sorting (§III-B.1). Function-preserving.
+
+    With ``return_perms`` the per-group permutations are handed back too
+    — they fingerprint the sorted coordinate frame, which consumers that
+    carry state *across* rounds in that frame (the backhaul codec's EF
+    residuals) need in order to notice when the frame moved."""
     out = _deepcopy_dicts(params)
+    perms = []
     for g in spec.groups:
         imp = channel_importance(out, g)
         perm = jnp.argsort(-imp)
+        perms.append(perm)
         for e in g.entries:
             _set(out, e.path, _take(_get(out, e.path), e, g.size, perm))
+    if return_perms:
+        return out, perms
     return out
 
 

@@ -170,6 +170,12 @@ class ReplayTrace(AvailabilityTrace):
     per-device interval lists is accepted too). Intervals are half-open
     ``[start, end)`` in simulated seconds; outside every interval the
     device is off.
+
+    The unified mobility scenario schema
+    (:mod:`repro.mobility.scenario`) also loads directly: device entries
+    may be dicts carrying an ``"on"`` interval list next to their
+    waypoints, and a device without one is always-on — so a single
+    ``--scenario-trace`` file can drive positions *and* availability.
     """
 
     def __init__(self, intervals: list[list[tuple[float, float]]],
@@ -195,6 +201,11 @@ class ReplayTrace(AvailabilityTrace):
         raw = json.load(open(path))
         if isinstance(raw, dict):
             raw = raw["devices"]
+        if raw and isinstance(raw[0], dict):
+            # unified scenario schema: per-device dicts with an optional
+            # "on" section (missing -> always on)
+            raw = [d.get("on") if d.get("on") is not None
+                   else [[0.0, math.inf]] for d in raw]
         return cls(raw, n_devices)
 
     def available(self, i: int, t: float) -> bool:

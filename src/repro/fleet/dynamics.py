@@ -29,6 +29,12 @@ class FleetDynamicsConfig:
     # independent stream for who-trains-when; None -> derived from the run
     # seed through a decorrelated generator (see Simulation)
     selection_seed: Optional[int] = None
+    # battery-aware deadline adaptation: when the fleet's mean state of
+    # charge drops below the threshold, the effective T_max handed to the
+    # Problem-(P4) solver shrinks by this factor (None -> never; the
+    # static-fleet no-op default)
+    soc_deadline_scale: Optional[float] = None
+    soc_deadline_threshold: float = 0.5
 
     def __post_init__(self):
         if self.selection not in SELECTIONS:
@@ -36,3 +42,8 @@ class FleetDynamicsConfig:
                              f"expected one of {SELECTIONS}")
         if not 0.0 < self.participation <= 1.0:
             raise ValueError("participation must be in (0, 1]")
+        if self.soc_deadline_scale is not None \
+                and not 0.0 < self.soc_deadline_scale <= 1.0:
+            raise ValueError("soc_deadline_scale must be in (0, 1]")
+        if not 0.0 <= self.soc_deadline_threshold <= 1.0:
+            raise ValueError("soc_deadline_threshold must be in [0, 1]")

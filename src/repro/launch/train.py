@@ -97,7 +97,10 @@ def _dynamics_config(args):
         kind=args.availability,
         seed=args.availability_seed
         if args.availability_seed is not None else args.seed,
-        trace_file=args.trace_file)
+        # one scenario file can drive positions AND availability: replay
+        # availability composes with --scenario-trace when no dedicated
+        # --trace-file is given
+        trace_file=args.trace_file or args.scenario_trace)
     battery = None
     if args.battery == "on":
         battery = BatteryConfig(capacity_j=args.battery_capacity,
@@ -106,7 +109,9 @@ def _dynamics_config(args):
     return FleetDynamicsConfig(
         availability=avail, battery=battery, selection=args.selection,
         participation=args.participation,
-        selection_seed=args.selection_seed)
+        selection_seed=args.selection_seed,
+        soc_deadline_scale=args.soc_deadline_scale,
+        soc_deadline_threshold=args.soc_deadline_threshold)
 
 
 def _topology_config(args):
@@ -115,17 +120,44 @@ def _topology_config(args):
     to the pre-topology loop."""
     if args.topology == "flat":
         return None
+    from repro.mobility import HandoverConfig
     from repro.topology import BackhaulConfig, TopologyConfig
+    handover = None
+    if args.mobility != "static" and args.handover_policy != "none":
+        handover = HandoverConfig(policy=args.handover_policy,
+                                  margin_m=args.handover_margin)
     return TopologyConfig(
         kind="hier", n_cells=args.cells,
         assignment=args.cell_assignment,
         cell_radius_scale=args.cell_radius_scale,
         cell_deadline_s=args.cell_deadline,
+        handover=handover,
+        backhaul_rate_range=(tuple(args.backhaul_rate_range)
+                             if args.backhaul_rate_range else None),
+        backhaul_het_seed=args.seed,
         backhaul=BackhaulConfig(
             rate_bps=args.backhaul_rate,
             latency_s=args.backhaul_latency,
             energy_per_bit=args.backhaul_energy,
-            codec=args.backhaul_codec))
+            codec=args.backhaul_codec,
+            error_feedback=args.backhaul_ef))
+
+
+def _mobility_config(args):
+    """Device motion from CLI flags.  ``--mobility static`` (the
+    default) returns None — the paper's per-round position re-drop,
+    bit-identical to the pre-mobility loop."""
+    if args.mobility == "static":
+        return None
+    from repro.mobility import MobilityConfig
+    speed = args.speed
+    return MobilityConfig(
+        kind=args.mobility,
+        seed=args.mobility_seed if args.mobility_seed is not None
+        else args.seed,
+        speed_range=(0.5 * speed, 1.5 * speed),
+        mean_speed=speed,
+        scenario_file=args.scenario_trace)
 
 
 def run_fl(args):
@@ -140,7 +172,8 @@ def run_fl(args):
         n_test=args.n_test, eval_every=args.eval_every)
     fleet = FleetConfig(n_devices=args.devices,
                         dynamics=_dynamics_config(args),
-                        topology=_topology_config(args))
+                        topology=_topology_config(args),
+                        mobility=_mobility_config(args))
     orch = OrchestratorConfig(
         policy=args.async_mode, max_wallclock_s=args.max_wallclock,
         deadline_s=args.deadline, buffer_size=args.buffer_size,
@@ -149,6 +182,7 @@ def run_fl(args):
         staleness_mode=args.staleness_mode,
         straggler_mode=args.straggler_mode,
         max_inflight=args.max_inflight,
+        agg_route=args.agg_route,
         use_pool=False if args.no_pool else None)
     hist = run_orchestrated(run_cfg, fleet, orch, verbose=True)
     # time-to-accuracy: simulated wall-clock at fixed accuracy milestones
@@ -159,6 +193,9 @@ def run_fl(args):
                       "selection": args.selection,
                       "topology": args.topology,
                       "cells": args.cells if args.topology == "hier" else 1,
+                      "mobility": args.mobility,
+                      "handover_policy": args.handover_policy,
+                      "n_handovers": hist.total_handovers(),
                       "best_acc": hist.best_acc,
                       "sim_wallclock_s": hist.wallclock(),
                       "backhaul_mb": float(sum(r.backhaul_bits
@@ -234,6 +271,48 @@ def main():
                          "f32 = bitwise passthrough (flat-equivalent), "
                          "bf16 = 2x smaller, int8 = 4x smaller with "
                          "per-leaf amax scaling")
+    ap.add_argument("--backhaul-ef", action="store_true",
+                    help="feed each round's bf16/int8 backhaul "
+                         "quantization error back into the next round's "
+                         "shipped partial (per-cell EF residual)")
+    ap.add_argument("--backhaul-rate-range", type=float, nargs=2,
+                    default=None, metavar=("LO", "HI"),
+                    help="heterogeneous backhaul: draw each cell's rate "
+                         "log-uniformly from [LO, HI] bit/s (seeded per "
+                         "cell id; overrides --backhaul-rate)")
+    ap.add_argument("--agg-route", default="streaming",
+                    choices=["streaming", "batched", "mesh"],
+                    help="hierarchical aggregation route: streaming "
+                         "edge fold (default), the batched (I,N) Eq.-5 "
+                         "oracle, or core/distributed.mesh_cell_aggregate"
+                         " over a 'cell' mesh axis (falls back to "
+                         "streaming on a single visible device)")
+    # ---- mobility & handover
+    ap.add_argument("--mobility", default="static",
+                    choices=["static", "random_waypoint", "gauss_markov",
+                             "replay"],
+                    help="device motion model (static = the paper's "
+                         "per-round position re-drop, bit-identical to "
+                         "the pre-mobility loop)")
+    ap.add_argument("--speed", type=float, default=5.0,
+                    help="mean device speed in m/s (random_waypoint "
+                         "draws U[0.5x, 1.5x]; gauss_markov reverts to "
+                         "this mean)")
+    ap.add_argument("--mobility-seed", type=int, default=None,
+                    help="motion-model seed (default: --seed)")
+    ap.add_argument("--handover-policy", default="nearest",
+                    choices=["none", "nearest", "load_balanced"],
+                    help="round-boundary device->cell re-assignment for "
+                         "mobile hierarchical fleets (none = stale-cell: "
+                         "devices keep their initial cell)")
+    ap.add_argument("--handover-margin", type=float, default=25.0,
+                    help="handover hysteresis margin in metres")
+    ap.add_argument("--scenario-trace", default=None,
+                    help="unified JSON scenario for --mobility replay: "
+                         "device waypoints + availability intervals + "
+                         "per-cell backhaul rates over time (also feeds "
+                         "--availability replay when no --trace-file is "
+                         "given)")
     # ---- fleet dynamics control plane
     ap.add_argument("--availability", default="always",
                     choices=["always", "markov", "diurnal", "replay"],
@@ -250,6 +329,14 @@ def main():
                     help="battery capacity in joules")
     ap.add_argument("--battery-recharge", type=float, default=0.05,
                     help="trickle recharge in joules per simulated second")
+    ap.add_argument("--soc-deadline-scale", type=float, default=None,
+                    help="battery-aware deadline adaptation: shrink the "
+                         "effective T_max handed to the P4 solver by "
+                         "this factor while fleet mean SoC is below "
+                         "--soc-deadline-threshold (no-op by default)")
+    ap.add_argument("--soc-deadline-threshold", type=float, default=0.5,
+                    help="mean-SoC fraction below which the deadline "
+                         "adaptation kicks in")
     ap.add_argument("--selection", default="uniform",
                     choices=["uniform", "energy", "gain", "oort"],
                     help="client-selection policy (oort = gain x speed "

@@ -1,0 +1,39 @@
+"""Mobility & scenario subsystem: moving devices over a cellular world.
+
+The paper's simulator pins every device to one position draw per round
+and one cell forever.  This package makes the device->cell binding
+*dynamic*:
+
+``motion``    seeded motion models (``static`` — the bitwise-compatible
+              default that builds nothing — ``random_waypoint`` with an
+              optional hotspot bias, ``gauss_markov`` AR(1) velocities,
+              and ``replay`` from a recorded trace) evolving per-device
+              2-D positions in continuous simulated time; the wireless
+              layer derives Eq.-8 path gain from the true distance to
+              the serving cell site.
+``handover``  round-boundary re-assignment of devices to cells —
+              ``nearest`` with a hysteresis margin, or
+              ``load_balanced`` across near-tie candidate sites — with
+              HANDOVER events on the orchestrator timeline and in-flight
+              updates re-homed to the cell that dispatched them.
+``scenario``  one JSON trace schema carrying positions + availability +
+              per-cell time-varying backhaul rates, composing with the
+              existing ``fleet.ReplayTrace``.
+
+The all-default config (``MobilityConfig(kind="static")``) attaches no
+motion model and consumes no randomness: runs stay bit-identical to the
+pre-mobility simulator (guarded by ``tests/test_mobility.py``).
+"""
+from repro.mobility.handover import (HANDOVER_POLICIES, HandoverConfig,
+                                     HandoverEngine, assign_nearest)
+from repro.mobility.motion import (KINDS, GaussMarkov, MobilityConfig,
+                                   MotionModel, RandomWaypoint,
+                                   ReplayMobility, make_motion)
+from repro.mobility.scenario import ScenarioTrace
+
+__all__ = [
+    "KINDS", "MobilityConfig", "MotionModel", "RandomWaypoint",
+    "GaussMarkov", "ReplayMobility", "make_motion",
+    "HANDOVER_POLICIES", "HandoverConfig", "HandoverEngine",
+    "assign_nearest", "ScenarioTrace",
+]

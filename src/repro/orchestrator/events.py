@@ -27,6 +27,8 @@ RETRY = "retry"           # infeasible budgets this draw; re-probe the channel
 CHURN = "churn"           # device left the cell mid-round; round aborted
 EDGE_MERGE = "edge_merge"  # an edge cell's partial landed at the cloud
                            # (hierarchical topologies; client = cell id)
+HANDOVER = "handover"      # a mobile device re-homed to a new cell at a
+                           # round boundary (payload = (old, new) cells)
 
 
 @dataclasses.dataclass(frozen=True, order=True)

@@ -45,6 +45,9 @@ STALE_DROP = "drop"          # discard the update; the client's automatic
 STALE_REQUEUE = "requeue"    # retrain the *same* minibatch draw against the
                              # current model version before dispatching fresh
 
+# aggregation route for hierarchical round merges
+AGG_ROUTES = ("streaming", "batched", "mesh")
+
 
 @dataclasses.dataclass
 class OrchestratorConfig:
@@ -62,6 +65,15 @@ class OrchestratorConfig:
     retry_interval_s: Optional[float] = None   # infeasible-draw backoff
     max_inflight: Optional[int] = None     # cap concurrent dispatched
                                            # clients (fedbuff throttle)
+    # --- hierarchical aggregation route
+    # streaming: host-side per-cell edge fold -> cloud monoid merge (the
+    #            default; O(N) memory, codec-aware wire numerics);
+    # batched:   the flat (I, N) Eq.-5 oracle over all accepted updates
+    #            (backhaul costs still modeled per cell);
+    # mesh:      core/distributed.mesh_cell_aggregate — cells mapped onto
+    #            a "cell" mesh axis (falls back to streaming with a
+    #            warning when only one device is visible)
+    agg_route: str = "streaming"
     # --- stopping / execution
     max_wallclock_s: Optional[float] = None    # simulated seconds
     use_pool: Optional[bool] = None        # None -> policy default
@@ -82,6 +94,9 @@ class OrchestratorConfig:
             raise ValueError("staleness_cap must be >= 0")
         if self.max_inflight is not None and self.max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
+        if self.agg_route not in AGG_ROUTES:
+            raise ValueError(f"unknown agg_route {self.agg_route!r}; "
+                             f"expected one of {AGG_ROUTES}")
 
 
 def base_weights(method: str, use_aio: bool, updates: Sequence,

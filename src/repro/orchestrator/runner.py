@@ -40,6 +40,16 @@ The cloud merges cell partials (EDGE_MERGE events) and finalizes Eq. 5
 once.  Weights are the per-update *unnormalized* coefficients
 (``policies.unnormalized_weight``) — Eq. 5's ratio cancels the cohort
 normalization, which is what makes the fold order-free.
+
+**Mobility** (``FleetConfig.mobility``): with a motion model attached,
+positions evolve along true trajectories and Eq. 8 sees the distance to
+the serving cell site; at each round boundary the handover engine
+re-homes devices to cells (HANDOVER events, ``--handover-policy``), and
+every flight carries the cell that dispatched it so edge merges never
+mis-home an in-flight update.  Per-cell backhauls can be heterogeneous
+(seeded draw) and time-varying (scenario trace), and
+``OrchestratorConfig.agg_route`` picks the numeric aggregation route
+(streaming edge fold / batched oracle / mesh-mapped cells).
 """
 from __future__ import annotations
 
@@ -59,6 +69,7 @@ from repro.core.anycost import (AnycostClient, AnycostServer, ClientUpdate,
 from repro.data.partition import partition_dirichlet, partition_iid
 from repro.data.synthetic import make_image_task
 from repro.fleet import AlwaysOn, FleetDynamicsConfig, make_selection
+from repro.mobility import HandoverEngine, ScenarioTrace
 from repro.models import cnn as cnn_mod
 from repro.models.registry import build_model
 from repro.orchestrator import events as ev_mod
@@ -69,7 +80,8 @@ from repro.orchestrator.policies import (STALE_REQUEUE, OrchestratorConfig,
                                          unnormalized_weight)
 from repro.sysmodel.population import FleetConfig, make_fleet
 from repro.topology.codec import decode_partial, encode_partial
-from repro.topology.edge import EdgeAggregator, finalize_apply, cloud_merge
+from repro.topology.edge import (CodecErrorFeedback, EdgeAggregator,
+                                 cloud_merge, finalize_apply)
 from repro.train.baselines import BaselinePolicy
 from repro.train.fl_loop import (FLRunConfig, History, RoundLog,
                                  _device_batches, _make_eval,
@@ -90,6 +102,9 @@ class PendingUpdate:
     key: jax.Array               # the round's compression key (k2)
     n_steps: int
     version: int = 0             # server version at dispatch (fedbuff)
+    cell: int = 0                # serving cell at dispatch: an in-flight
+                                 # update always merges at the edge that
+                                 # dispatched it, whatever handover does
     dispatched_at: float = 0.0
     completes_at: float = 0.0
     staleness: int = 0
@@ -179,7 +194,48 @@ class Simulation:
             else None
         self.edge_kernel = jax.default_backend() == "tpu"
 
+        # ---- mobility & handover.  A motion model makes the device->cell
+        # binding dynamic: the handover engine re-homes devices at round
+        # boundaries (HANDOVER events), per-cell backhauls may differ (and
+        # vary over time under a scenario trace), and a lossy backhaul
+        # codec can carry an EF residual per edge site across rounds.
+        self.handover = None
+        if self.topo is not None and self.fleet.mobility is not None \
+                and self.topo.handover is not None \
+                and self.fleet.n_cells > 1:
+            self.handover = HandoverEngine(self.topo.handover,
+                                           self.fleet.sites)
+        self.cell_backhauls = self.topo.cell_backhauls() \
+            if self.topo is not None else None
+        self.codec_ef = None
+        self._ef_frame = None
+        if self.topo is not None and self.topo.backhaul.error_feedback:
+            self.codec_ef = CodecErrorFeedback()
+        # the scenario was already parsed by make_fleet (replay
+        # mobility); reuse the Fleet's copy rather than re-reading it
+        self.scenario = self.fleet.scenario
+        # aggregation route for hierarchical merges (run_orchestrated
+        # overrides from OrchestratorConfig.agg_route; the mesh route
+        # needs >= 2 visible devices to map cells onto a mesh axis)
+        self.agg_route = "streaming"
+
     # ------------------------------------------------------- fleet dynamics
+
+    def effective_T_max(self, t_wall: float) -> float:
+        """Battery-aware deadline adaptation: when the fleet's mean state
+        of charge sinks below ``soc_deadline_threshold``, the round
+        deadline handed to the Problem-(P4) solver shrinks by
+        ``soc_deadline_scale`` — a drained fleet solves for shorter,
+        cheaper rounds instead of spending its reserve on long ones.
+        Identity (the fleet's ``T_max``) when unconfigured or batteryless.
+        """
+        scale = getattr(self.dyn, "soc_deadline_scale", None)
+        if scale is None or self.fleet.battery is None:
+            return self.fleet_cfg.T_max
+        if self.fleet.battery.mean_soc_frac(t_wall) \
+                < self.dyn.soc_deadline_threshold:
+            return self.fleet_cfg.T_max * scale
+        return self.fleet_cfg.T_max
 
     def gate_round(self, t_wall: float, envs: list[schedule.DeviceEnv]):
         """Availability/battery/selection gating for a round-based dispatch.
@@ -193,6 +249,10 @@ class Simulation:
         cand = [i for i in range(n) if self.fleet.available(i, t_wall)]
         envs_eff = {i: self.fleet.dynamic_env(i, envs[i], t_wall)
                     for i in cand}
+        t_max_eff = self.effective_T_max(t_wall)
+        if t_max_eff != self.fleet_cfg.T_max:
+            envs_eff = {i: dataclasses.replace(e, T_max=t_max_eff)
+                        for i, e in envs_eff.items()}
         headroom = {i: (self.fleet.battery.headroom(i, t_wall)
                         if self.fleet.battery is not None
                         else envs_eff[i].E_max) for i in cand}
@@ -221,7 +281,17 @@ class Simulation:
 
     def sort_params(self, params: PyTree) -> PyTree:
         if self.run_cfg.use_ems:
-            return self.server.sort(params)
+            if self.codec_ef is None:
+                return self.server.sort(params)
+            # EF residuals live in the sorted coordinate frame; capture
+            # the round's sort permutations so a frame move invalidates
+            # the stale residual instead of feeding it into the wrong
+            # channels (see topology.edge.CodecErrorFeedback)
+            sorted_p, perms = shrinking.sort_channels(
+                params, self.spec, return_perms=True)
+            self._ef_frame = tuple(
+                tuple(np.asarray(p).tolist()) for p in perms)
+            return sorted_p
         return shrinking._deepcopy_dicts(params)
 
     def ensure_planner(self, sorted_params: PyTree) -> None:
@@ -263,7 +333,8 @@ class Simulation:
                                   self.parts[i], rc.batch_size, rc.tau)
         n_steps = int(jax.tree_util.tree_leaves(batches)[0].shape[0])
         return PendingUpdate(client_id=i, env=env, strat=strat, alpha=alpha,
-                             batches=batches, key=k2, n_steps=n_steps)
+                             batches=batches, key=k2, n_steps=n_steps,
+                             cell=self.fleet.cell_of(i))
 
     def train_one(self, p: PendingUpdate, sorted_params: PyTree) -> PyTree:
         sub = shrinking.shrink(sorted_params, p.alpha, self.spec)
@@ -357,8 +428,95 @@ class Simulation:
         acc, loss = self.ev(params)
         return float(acc), float(loss)
 
+    # --------------------------------------------------- hierarchical glue
+
+    def cell_backhaul(self, k: int, t_wall: float):
+        """Cell k's backhaul at time t: the (possibly heterogeneous)
+        per-cell draw, overlaid with any time-varying rate the scenario
+        trace carries for this cell."""
+        bh = self.cell_backhauls[k]
+        if self.scenario is not None:
+            rate = self.scenario.backhaul_rate(k, t_wall)
+            if rate is not None:
+                bh = dataclasses.replace(bh, rate_bps=rate)
+        return bh
+
+    def encode_ship(self, k: int, part):
+        """Wire-encode cell k's partial, through the per-cell EF residual
+        when the backhaul codec runs with error feedback."""
+        codec = self.topo.backhaul.codec
+        if self.codec_ef is not None:
+            return self.codec_ef.encode_ship(k, part, codec,
+                                             frame=self._ef_frame)
+        return encode_partial(part, codec)
+
+    def resolve_agg_route(self, route: str) -> str:
+        """The mesh route shards cells over a mesh axis; with a single
+        visible device there is nothing to shard over — fall back to the
+        host-side streaming fold (satisfying the same math) loudly."""
+        if route == "mesh" and len(jax.devices()) < 2:
+            print("[topology] warning: --agg-route mesh needs >= 2 "
+                  "devices to map cells onto a mesh axis; falling back "
+                  "to the streaming edge fold")
+            route = "streaming"
+        if route != "streaming" and self.topo is not None \
+                and (self.topo.backhaul.codec != "f32"
+                     or self.codec_ef is not None):
+            # the batched/mesh routes aggregate in exact f32 — only the
+            # streaming edge fold passes numerics through the wire codec
+            # (bits are still charged at the codec's size on all routes)
+            print(f"[topology] warning: --agg-route {route} models the "
+                  f"backhaul codec's cost but not its numerics (and "
+                  f"ignores --backhaul-ef); use the streaming route to "
+                  f"study codec/EF effects")
+        return route
+
 
 # ---------------------------------------------------------------- round mode
+
+def _mesh_route_params(sim: Simulation, pairs, sorted_params) -> PyTree:
+    """Aggregate via ``core.distributed.mesh_cell_aggregate``: flatten
+    every accepted update/mask to one vector, stack, shard the client dim
+    over a "cell" mesh axis, and let the monoid psum do the cloud merge.
+    The AIO monoid is commutative, so any partitioning of clients across
+    shards (and zero-weight padding rows) yields the batched oracle's
+    aggregate up to float reordering."""
+    from jax.sharding import Mesh
+
+    from repro.core.distributed import mesh_cell_aggregate
+
+    leaves, treedef = jax.tree_util.tree_flatten(sorted_params)
+    shapes = [jnp.shape(x) for x in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+
+    def flat(tree):
+        ls = treedef.flatten_up_to(tree)
+        return jnp.concatenate([jnp.ravel(x).astype(jnp.float32)
+                                for x in ls])
+
+    u = jnp.stack([flat(p.update.values) for p, _ in pairs])
+    m = jnp.stack([flat(p.update.mask) for p, _ in pairs])
+    w = jnp.asarray([wv for _, wv in pairs], jnp.float32)
+    devs = jax.devices()
+    n_shards = min(len(devs), u.shape[0])
+    pad = (-u.shape[0]) % n_shards
+    if pad:                        # zero-weight rows are the monoid identity
+        u = jnp.concatenate([u, jnp.zeros((pad, u.shape[1]), u.dtype)])
+        m = jnp.concatenate([m, jnp.zeros((pad, m.shape[1]), m.dtype)])
+        w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])
+    mesh = Mesh(np.array(devs[:n_shards]), ("cell",))
+    num_f, den_f = mesh_cell_aggregate(u, m, w, mesh, finalize=False)
+
+    def unflat(vec):
+        out, off = [], 0
+        for shape, size in zip(shapes, sizes):
+            out.append(jnp.reshape(vec[off:off + size], shape))
+            off += size
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return finalize_apply(sorted_params, unflat(num_f), unflat(den_f),
+                          sim.server.server_lr)
+
 
 def _hier_round_merge(sim: Simulation, policy, live, aborted,
                       sorted_params, queue, t_wall: float):
@@ -369,17 +527,34 @@ def _hier_round_merge(sim: Simulation, policy, live, aborted,
     deadline semantics), folds the admitted updates into an O(N)
     streaming partial with *unnormalized* AIO coefficients, and ships the
     constant-size partial over the backhaul; the round's latency is the
-    slowest cell's barrier plus its shipping time.  Returns
-    ``(accepted, new_params|None, lat, ship_energy, backhaul_bits,
-    n_cells_reporting)``.
+    slowest cell's barrier plus its shipping time.  Membership is the
+    cell recorded on each flight *at dispatch* (``PendingUpdate.cell``)
+    — handover re-homes devices between rounds, never an update already
+    in the air.  Per-cell backhauls may be heterogeneous and
+    time-varying (``Simulation.cell_backhaul``), and the shipped partial
+    can ride a per-site EF residual (``--backhaul-ef``).
+
+    ``sim.agg_route`` selects the numeric route: ``streaming`` (the
+    default edge fold + cloud monoid merge, codec on the wire),
+    ``batched`` (the flat Eq.-5 oracle over all accepted updates), or
+    ``mesh`` (cells over a mesh axis).  The backhaul *cost* model is
+    route-independent: one constant-size partial per reporting cell.
+
+    Returns ``(accepted, new_params|None, lat, ship_energy,
+    backhaul_bits, n_cells_reporting)``.
     """
+    from repro.topology.codec import payload_bits as codec_payload_bits
+    from repro.utils.pytree import tree_size as _tree_size
+
     topo, fleet, rc = sim.topo, sim.fleet, sim.run_cfg
     cell_dl = topo.cell_deadline_s
-    accepted_all, parts, ships = [], [], []
+    route = sim.agg_route
+    accepted_all, parts, ships, route_pairs = [], [], [], []
     lat = e_ship = bh_bits = 0.0
+    n_rep = 0
     for k in range(fleet.n_cells):
-        cell_live = [p for p in live if fleet.cell_of(p.client_id) == k]
-        cell_ab = [p for p in aborted if fleet.cell_of(p.client_id) == k]
+        cell_live = [p for p in live if p.cell == k]
+        cell_ab = [p for p in aborted if p.cell == k]
         if not cell_live and not cell_ab:
             continue
         acc_k, scales_k, lat_k = policy.accept(cell_live, 0.0)
@@ -403,22 +578,33 @@ def _hier_round_merge(sim: Simulation, policy, live, aborted,
                                    max(p.completes_at - t_wall
                                        for p in cell_ab)))
         if acc_k:
-            edge = EdgeAggregator(k, sorted_params,
-                                  use_kernel=sim.edge_kernel)
-            for p, s in zip(acc_k, scales_k):
-                w_un = unnormalized_weight(rc.method, rc.use_aio, p.update,
-                                           p.fedhq_level) * s
-                edge.absorb(p.update.values, p.update.mask, w_un)
-            # encode the partial at the configured wire dtype; the exact
-            # encoded bit count (planes + int8 scale headers) is what the
-            # link serializes and what the energy tariff charges
-            enc = encode_partial(edge.ship(), topo.backhaul.codec)
-            t_ship, e_k = topo.backhaul.ship_bits(enc.bits)
-            parts.append(enc)
-            bh_bits += enc.bits
+            w_uns = [unnormalized_weight(rc.method, rc.use_aio, p.update,
+                                         p.fedhq_level) * s
+                     for p, s in zip(acc_k, scales_k)]
+            if route == "streaming":
+                edge = EdgeAggregator(k, sorted_params,
+                                      use_kernel=sim.edge_kernel)
+                for p, w_un in zip(acc_k, w_uns):
+                    edge.absorb(p.update.values, p.update.mask, w_un)
+                # encode the partial at the configured wire dtype; the
+                # exact encoded bit count (planes + int8 scale headers)
+                # is what the link serializes and the tariff charges
+                enc = sim.encode_ship(k, edge.ship())
+                parts.append(enc)
+                bits = enc.bits
+            else:
+                route_pairs.extend(zip(acc_k, w_uns))
+                bits = codec_payload_bits(
+                    _tree_size(sorted_params),
+                    len(jax.tree_util.tree_leaves(sorted_params)),
+                    topo.backhaul.codec)
+            bh = sim.cell_backhaul(k, t_wall)
+            t_ship, e_k = bh.ship_bits(bits)
+            bh_bits += bits
             e_ship += e_k
             ships.append((t_wall + lat_k + t_ship, k))
             lat = max(lat, lat_k + t_ship)
+            n_rep += 1
         else:
             lat = max(lat, lat_k)
         accepted_all.extend(acc_k)
@@ -432,7 +618,16 @@ def _hier_round_merge(sim: Simulation, policy, live, aborted,
                              use_kernel=sim.edge_kernel)
         new_params = finalize_apply(sorted_params, merged.num, merged.den,
                                     sim.server.server_lr)
-    return accepted_all, new_params, lat, e_ship, bh_bits, len(parts)
+    elif route_pairs:
+        if route == "mesh":
+            new_params = _mesh_route_params(sim, route_pairs, sorted_params)
+        else:                      # batched: the flat (I, N) Eq.-5 oracle
+            agg = aggregation.aio_aggregate(
+                [p.update.values for p, _ in route_pairs],
+                [p.update.mask for p, _ in route_pairs],
+                jnp.asarray([w for _, w in route_pairs], jnp.float32))
+            new_params = sim.server.apply_update(sorted_params, agg)
+    return accepted_all, new_params, lat, e_ship, bh_bits, n_rep
 
 
 def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
@@ -446,12 +641,29 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
     t_wall = 0.0
 
     for t in range(rc.rounds):
-        envs = sim.fleet.round_envs(sim.rng, sim.W, sim.S_bits)
+        # round-boundary handover: re-home mobile devices to their
+        # serving cell *before* dispatch, so this round's channels,
+        # selection, and edge merges all see the new binding.  One
+        # HANDOVER event per move lands on the recorded timeline.
+        n_handover = 0
+        if sim.handover is not None:
+            new_cells, moves = sim.handover.reassign(
+                sim.fleet.positions(t_wall), sim.fleet.cells)
+            for i, old, new in moves:
+                queue.push(t_wall, ev_mod.HANDOVER, i, (old, new))
+            for _ in moves:
+                queue.pop()
+            sim.fleet.cells = new_cells
+            n_handover = len(moves)
+        envs = sim.fleet.round_envs(sim.rng, sim.W, sim.S_bits, t=t_wall)
         sorted_params = sim.sort_params(params)
         sim.ensure_planner(sorted_params)
 
         selected, envs_eff, n_unavail, headroom = sim.gate_round(t_wall,
                                                                  envs)
+        t_max_eff = sim.effective_T_max(t_wall)
+        occupancy = int(np.bincount(sim.fleet.cells).max()) \
+            if sim.fleet.cells is not None else 0
         pendings = [p for p in (sim.prepare(i, envs_eff[i])
                                 for i in selected)
                     if p is not None]
@@ -515,7 +727,9 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
                 mean_gain=0.0, t_wall=t_wall, n_unavailable=n_unavail,
                 n_aborted=len(aborted),
                 mean_soc=(sim.fleet.battery.mean_soc_frac(t_wall)
-                          if sim.fleet.battery is not None else 1.0)))
+                          if sim.fleet.battery is not None else 1.0),
+                n_handovers=n_handover, max_cell_occupancy=occupancy,
+                t_max_effective=t_max_eff))
             if sim.fleet_dynamic:
                 # idle server deadline: let traces/batteries evolve so the
                 # fleet can come back (a static fleet must not drift)
@@ -565,7 +779,9 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
             n_unavailable=n_unavail, n_aborted=len(aborted),
             mean_soc=(sim.fleet.battery.mean_soc_frac(t_wall)
                       if sim.fleet.battery is not None else 1.0),
-            n_cells_reporting=n_cells_rep, backhaul_bits=bh_bits)
+            n_cells_reporting=n_cells_rep, backhaul_bits=bh_bits,
+            n_handovers=n_handover, max_cell_occupancy=occupancy,
+            t_max_effective=t_max_eff)
         if t % rc.eval_every == 0 or t == rc.rounds - 1:
             acc, loss = sim.evaluate(params)
             log.test_acc = acc
@@ -649,6 +865,9 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
                 queue.push(max(t_rdy, now + 1e-9), ev_mod.RETRY, i)
             return
         env = fleet.dynamic_env(i, env, now)
+        t_max_eff = sim.effective_T_max(now)
+        if t_max_eff != sim.fleet_cfg.T_max:
+            env = dataclasses.replace(env, T_max=t_max_eff)
         p = sim.prepare(i, env)
         if p is None:
             queue.push(now + retry_dt, ev_mod.RETRY, i)
@@ -672,7 +891,7 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
         while waiting and (cap is None or len(inflight_version) < cap):
             j = waiting.popleft()
             dispatch(j, sim.fleet.device_env(sim.rng, j, sim.W,
-                                             sim.S_bits), now)
+                                             sim.S_bits, t=now), now)
 
     def redispatch(i: int, now: float) -> None:
         """Throttle-aware re-dispatch: join the FIFO behind any earlier
@@ -839,7 +1058,8 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
             max_staleness=int(max(b.staleness for b in buffer)),
             n_stale_dropped=n_stale, n_aborted=n_aborted,
             mean_soc=(sim.fleet.battery.mean_soc_frac(now)
-                      if sim.fleet.battery is not None else 1.0))
+                      if sim.fleet.battery is not None else 1.0),
+            t_max_effective=sim.effective_T_max(now))
         done = (orch.max_wallclock_s is None and n_agg >= rc.rounds)
         if (n_agg - 1) % rc.eval_every == 0 or done:
             acc, loss = sim.evaluate(current)
@@ -880,6 +1100,7 @@ def run_orchestrated(run_cfg: FLRunConfig,
     """Run federated training under an arrival/aggregation policy."""
     orch = orch or OrchestratorConfig()
     sim = Simulation(run_cfg, fleet_cfg)
+    sim.agg_route = sim.resolve_agg_route(orch.agg_route)
     policy = make_policy(orch, fleet_T_max=sim.fleet_cfg.T_max)
     if not policy.round_based and sim.topo is not None:
         raise ValueError(

@@ -15,9 +15,11 @@ import numpy as np
 from repro.core.schedule import DeviceEnv
 from repro.fleet import (AvailabilityTrace, BatteryState,
                          FleetDynamicsConfig, make_trace)
+from repro.mobility import (MobilityConfig, MotionModel, ScenarioTrace,
+                            assign_nearest, make_motion)
 from repro.sysmodel.wireless import WirelessConfig, achievable_rate, \
     drop_positions
-from repro.topology import TopologyConfig, assign_cells
+from repro.topology import TopologyConfig, assign_cells, cell_sites
 
 
 @dataclasses.dataclass
@@ -41,6 +43,8 @@ class FleetConfig:
     dynamics: Optional[FleetDynamicsConfig] = None
     # multi-cell topology (None / flat -> the paper's single cell)
     topology: Optional[TopologyConfig] = None
+    # device motion (None / "static" -> the paper's per-round re-drop)
+    mobility: Optional[MobilityConfig] = None
 
 
 @dataclasses.dataclass
@@ -56,6 +60,14 @@ class Fleet:
     # (None -> single macro cell, the paper's geometry)
     cells: Optional[np.ndarray] = None
     cell_wireless: Optional[list] = None
+    # mobility: motion model + fixed cell-site coordinates (None ->
+    # static fleet, positions re-dropped per round as in the paper)
+    mobility: Optional[MotionModel] = None
+    sites: Optional[np.ndarray] = None     # (C, 2)
+    # the parsed scenario trace behind a replay motion model (kept so
+    # consumers — e.g. the runner's time-varying backhaul overlay —
+    # never re-read the file)
+    scenario: Optional[ScenarioTrace] = None
 
     @property
     def n_cells(self) -> int:
@@ -91,16 +103,59 @@ class Fleet:
         return np.clip(rng.normal(c.dist_mean_m, spread, n),
                        10.0, w.cell_radius_m)
 
-    def round_envs(self, rng: np.random.Generator, W: float, S_bits: float
-                   ) -> list[DeviceEnv]:
+    # ---------------------------------------------------------- mobility
+
+    def positions(self, t: float) -> np.ndarray:
+        """(I, 2) fleet positions at simulated time ``t`` (mobile only)."""
+        assert self.mobility is not None, "static fleet has no positions"
+        return self.mobility.positions_at(t)
+
+    def serving_distances(self, t: float) -> np.ndarray:
+        """(I,) true distance of every device to its *serving* cell site
+        at time ``t`` — the quantity Eq. 8 sees under mobility."""
+        pos = self.positions(t)
+        sites = self.sites if self.sites is not None else np.zeros((1, 2))
+        cells = self.cells if self.cells is not None \
+            else np.zeros(self.cfg.n_devices, np.int64)
+        return np.linalg.norm(pos - sites[cells], axis=-1)
+
+    def _mobile_envs(self, rng: np.random.Generator, W: float,
+                     S_bits: float, t: float) -> list[DeviceEnv]:
+        """Envs from true motion: distances are deterministic geometry,
+        only Rayleigh fading consumes the rng (per cell, ascending —
+        the same stream shape as the static hier path)."""
+        c = self.cfg
+        dist = self.serving_distances(t)
+        rates = np.empty(c.n_devices)
+        if self.cells is None or self.n_cells == 1:
+            w = self.cell_wireless[0] if self.cell_wireless else c.wireless
+            rates[:] = achievable_rate(dist, w, rng=rng)
+        else:
+            for k in range(self.n_cells):
+                idx = np.flatnonzero(self.cells == k)
+                if len(idx):
+                    rates[idx] = achievable_rate(
+                        dist[idx], self.cell_wireless[k], rng=rng)
+        return [self._env(i, rates[i], W, S_bits)
+                for i in range(c.n_devices)]
+
+    # ------------------------------------------------------------- envs
+
+    def round_envs(self, rng: np.random.Generator, W: float, S_bits: float,
+                   t: float = 0.0) -> list[DeviceEnv]:
         """Refresh positions/channels and build per-device envs (Eq. 6-9).
 
         Multi-cell fleets draw each cell's positions/fading against that
         cell's wireless config, in ascending cell order.  A 1-cell
         hierarchy with unit radius scale takes the identical vectorized
-        draws as the flat path — same rng stream, same envs.
+        draws as the flat path — same rng stream, same envs.  With a
+        motion model attached, positions are no longer re-dropped:
+        distances come from the trajectory at time ``t`` and only the
+        fading draws consume the rng.
         """
         c = self.cfg
+        if self.mobility is not None:
+            return self._mobile_envs(rng, W, S_bits, t)
         if self.cells is None or self.n_cells == 1:
             w = self.cell_wireless[0] if self.cell_wireless else c.wireless
             dist = self._distances(rng, c.n_devices, w)
@@ -117,12 +172,19 @@ class Fleet:
                 for i in range(c.n_devices)]
 
     def device_env(self, rng: np.random.Generator, i: int, W: float,
-                   S_bits: float) -> DeviceEnv:
-        """Fresh position/channel draw for a single device (asynchronous
-        re-dispatch: mobility refreshes the channel per dispatch, not per
-        global round)."""
+                   S_bits: float, t: float = 0.0) -> DeviceEnv:
+        """Fresh channel draw for a single device (asynchronous
+        re-dispatch).  Static fleets re-drop the position (the paper's
+        mobility proxy); mobile fleets read the true position at the
+        dispatch time ``t`` and draw only the fading."""
         w = self._wireless(i)
-        dist = self._distances(rng, 1, w)
+        if self.mobility is not None:
+            site = self.sites[self.cell_of(i)] if self.sites is not None \
+                else np.zeros(2)
+            dist = np.asarray([np.linalg.norm(
+                self.mobility.position(i, t) - site)])
+        else:
+            dist = self._distances(rng, 1, w)
         rate = achievable_rate(dist, w, rng=rng)
         return self._env(i, rate[0], W, S_bits)
 
@@ -173,12 +235,47 @@ def make_fleet(rng: np.random.Generator, cfg: FleetConfig,
         trace = make_trace(cfg.dynamics.availability, cfg.n_devices)
         if cfg.dynamics.battery is not None:
             battery = BatteryState(cfg.dynamics.battery, cfg.n_devices)
+    # motion model (seeded independently, like the dynamics above; the
+    # "static" kind builds nothing at all — bitwise-compatible default)
+    mobility = sites = scenario = None
+    if cfg.mobility is not None and cfg.mobility.kind != "static":
+        if cfg.mobility.kind == "replay":
+            scenario = ScenarioTrace.load(cfg.mobility.scenario_file)
+            mobility = scenario.mobility(cfg.n_devices)
+            sites = scenario.sites()
+        else:
+            mobility = make_motion(cfg.mobility, cfg.n_devices,
+                                   cfg.wireless.cell_radius_m)
     cells = cell_wireless = None
     if cfg.topology is not None and cfg.topology.kind == "hier":
-        # deterministic assignment — no rng, so attaching a topology never
-        # perturbs the eps/E_max/position sampling streams
-        cells = assign_cells(cfg.n_devices, cfg.topology)
         cell_wireless = cfg.topology.cell_wireless(cfg.wireless)
+        if sites is not None and len(sites) != cfg.topology.n_cells:
+            # a recorded world with a different cell count than the run:
+            # regenerating ring sites would silently re-measure every
+            # replayed trajectory against geometry the trace never
+            # described (while per-cell backhaul series still applied by
+            # index) — refuse instead of modeling a different world
+            raise ValueError(
+                f"scenario trace describes {len(sites)} cell sites but "
+                f"the topology asks for {cfg.topology.n_cells} cells; "
+                f"match n_cells to the trace (or drop its 'site' "
+                f"entries to use the generated ring geometry)")
+        if sites is None:
+            sites = cell_sites(cfg.topology.n_cells,
+                               cfg.wireless.cell_radius_m)
+        if mobility is not None:
+            # geometric initial binding: every device starts in the cell
+            # whose site is closest at t = 0 (deterministic — the motion
+            # model is seeded), so "no handover" means "the cell you
+            # started in", not an arbitrary id block
+            cells = assign_nearest(mobility.positions_at(0.0), sites)
+        else:
+            # deterministic assignment — no rng, so attaching a topology
+            # never perturbs the eps/E_max/position sampling streams
+            cells = assign_cells(cfg.n_devices, cfg.topology)
+    elif mobility is not None and sites is None:
+        sites = np.zeros((1, 2))     # flat: the macro site at the origin
     return Fleet(cfg, eps, e_max, np.asarray(data_sizes),
                  trace=trace, battery=battery,
-                 cells=cells, cell_wireless=cell_wireless)
+                 cells=cells, cell_wireless=cell_wireless,
+                 mobility=mobility, sites=sites, scenario=scenario)

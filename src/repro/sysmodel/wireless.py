@@ -2,7 +2,10 @@
 
 FDMA uplink: r = b log2(1 + |h| P / (N0 b)) with distance-dependent path
 loss (exponent 3.76, urban macro), devices placed uniformly in a 550 m cell
-and re-dropped each round (mobility, [44]).
+and re-dropped each round (the paper's i.i.d. mobility proxy, [44]).
+With a motion model attached (``repro.mobility``), the re-drop is replaced
+by the true distance to the serving cell site along each device's
+trajectory — see ``population.Fleet.serving_distances``.
 """
 from __future__ import annotations
 

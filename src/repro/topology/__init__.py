@@ -14,15 +14,18 @@ Eq. 5 once.
 single cell and stays bit-identical to the pre-topology loop; a 1-cell
 hierarchy over a zero-cost backhaul reproduces the flat trajectory.
 """
-from repro.topology.backhaul import BackhaulConfig
+from repro.topology.backhaul import BackhaulConfig, sample_cell_backhauls
 from repro.topology.cells import (ASSIGNMENTS, TOPOLOGIES, TopologyConfig,
-                                  assign_cells)
+                                  assign_cells, cell_sites)
 from repro.topology.codec import (CODECS, EncodedPartial, decode_partial,
                                   encode_partial, payload_factor)
-from repro.topology.edge import EdgeAggregator, cloud_merge
+from repro.topology.edge import (CodecErrorFeedback, EdgeAggregator,
+                                 cloud_merge)
 
 __all__ = [
     "ASSIGNMENTS", "CODECS", "TOPOLOGIES", "TopologyConfig",
-    "assign_cells", "BackhaulConfig", "EdgeAggregator", "EncodedPartial",
-    "cloud_merge", "decode_partial", "encode_partial", "payload_factor",
+    "assign_cells", "cell_sites", "BackhaulConfig",
+    "sample_cell_backhauls", "CodecErrorFeedback", "EdgeAggregator",
+    "EncodedPartial", "cloud_merge", "decode_partial", "encode_partial",
+    "payload_factor",
 ]

@@ -20,12 +20,22 @@ for the wired/microwave hop.  ``BackhaulConfig.zero_cost()`` builds the
 degenerate free link under which a 1-cell hierarchy reproduces the flat
 single-cell trajectory (the default ``f32`` codec is a bitwise
 passthrough, preserving that equivalence).
+
+Real edge deployments are *heterogeneous*: a fibre-fed site and a
+microwave-relay site do not ship at the same rate, and a measured
+scenario trace can make the provisioned rate vary over time.
+:func:`sample_cell_backhauls` draws one seeded log-uniform rate per cell
+(fleet-composition-independent — the draw hashes the cell id, not the
+roster), and the runner overlays any per-cell time series a scenario
+trace carries.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from typing import Optional
+
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +47,10 @@ class BackhaulConfig:
     # explicit override of the wire-size multiple; None -> derived from
     # the codec's encoded dtype (f32: 2.0, bf16: 1.0, int8: 0.5)
     payload_factor: Optional[float] = None
+    # feed each round's bf16/int8 quantization error back into the next
+    # round's shipped partial (per-cell residual held at the edge; free
+    # for f32 — the passthrough has no error to feed back)
+    error_feedback: bool = False
 
     def __post_init__(self):
         from repro.topology.codec import CODECS
@@ -79,3 +93,24 @@ class BackhaulConfig:
     def ship_cost(self, s_bits: float) -> tuple[float, float]:
         """(latency_s, energy_j) of shipping one partial over the hop."""
         return self.ship_bits(self.payload_bits(s_bits))
+
+
+def sample_cell_backhauls(base: BackhaulConfig, n_cells: int,
+                          rate_range: tuple, *,
+                          seed: int = 0) -> list[BackhaulConfig]:
+    """Heterogeneous per-cell backhaul draw: one config per cell with the
+    rate sampled log-uniformly over ``rate_range`` (fibre vs microwave
+    sites span orders of magnitude, so the log scale is the natural
+    prior).  Each cell hashes ``[seed, 0xBAC0, k]`` into its own stream:
+    cell k's link is a pure function of the seed and the cell id —
+    stable under fleet growth, roster changes, and handover.
+    """
+    lo, hi = float(rate_range[0]), float(rate_range[1])
+    if not 0 < lo <= hi:
+        raise ValueError("rate_range must satisfy 0 < lo <= hi")
+    out = []
+    for k in range(n_cells):
+        u = np.random.default_rng([seed, 0xBAC0, k]).uniform()
+        rate = math.exp(math.log(lo) + u * (math.log(hi) - math.log(lo)))
+        out.append(dataclasses.replace(base, rate_bps=rate))
+    return out

@@ -9,7 +9,11 @@ keeps the paper's 550 m geometry exactly (flat-equivalence).
 
 Assignment is deterministic (no rng): ``contiguous`` gives each cell a
 block of device ids (matches Dirichlet-partitioned data locality),
-``round_robin`` stripes them (maximally mixed).
+``round_robin`` stripes them (maximally mixed).  With a motion model
+attached the binding becomes *geometric and per-round*: devices start in
+their nearest cell (``mobility.assign_nearest`` over the fixed
+:func:`cell_sites` coordinates) and the handover engine re-homes them at
+round boundaries (``TopologyConfig.handover``).
 """
 from __future__ import annotations
 
@@ -19,11 +23,28 @@ from typing import Optional
 
 import numpy as np
 
+from repro.mobility.handover import HandoverConfig
 from repro.sysmodel.wireless import WirelessConfig
-from repro.topology.backhaul import BackhaulConfig
+from repro.topology.backhaul import BackhaulConfig, sample_cell_backhauls
 
 TOPOLOGIES = ("flat", "hier")
 ASSIGNMENTS = ("contiguous", "round_robin")
+
+
+def cell_sites(n_cells: int, macro_radius_m: float) -> np.ndarray:
+    """(C, 2) fixed site coordinates inside the macro cell.
+
+    Deterministic geometry (no rng): one cell keeps its site at the
+    macro centre — the paper's single base station — and ``C > 1`` cells
+    sit evenly on a ring at half the macro radius, which together with
+    the ``1/sqrt(C)`` radius scale tiles the macro area without leaving
+    the centre uncovered.
+    """
+    if n_cells == 1:
+        return np.zeros((1, 2))
+    ang = 2.0 * math.pi * np.arange(n_cells) / n_cells
+    ring = macro_radius_m / 2.0
+    return np.stack([ring * np.cos(ang), ring * np.sin(ang)], -1)
 
 
 @dataclasses.dataclass
@@ -38,6 +59,13 @@ class TopologyConfig:
     # per-cell edge deadline (semisync at the edge); None -> the arrival
     # policy's own barrier semantics apply within each cell
     cell_deadline_s: Optional[float] = None
+    # round-boundary device->cell re-assignment (mobile fleets only);
+    # None -> the binding never changes (static, or stale-cell mobile)
+    handover: Optional[HandoverConfig] = None
+    # heterogeneous backhaul: seeded per-cell rate draw (log-uniform over
+    # the range); None -> every cell gets `backhaul` verbatim
+    backhaul_rate_range: Optional[tuple] = None
+    backhaul_het_seed: int = 0
 
     def __post_init__(self):
         if self.kind not in TOPOLOGIES:
@@ -50,6 +78,11 @@ class TopologyConfig:
             raise ValueError("n_cells must be >= 1")
         if self.kind == "flat" and self.n_cells != 1:
             raise ValueError("flat topology has exactly one cell")
+        if self.backhaul_rate_range is not None:
+            lo, hi = self.backhaul_rate_range
+            if not 0 < lo <= hi:
+                raise ValueError("backhaul_rate_range must satisfy "
+                                 "0 < lo <= hi")
 
     @property
     def radius_scale(self) -> float:
@@ -67,6 +100,17 @@ class TopologyConfig:
         return [dataclasses.replace(
             base, cell_radius_m=base.cell_radius_m * scale)
             for _ in range(self.n_cells)]
+
+    def cell_backhauls(self) -> list[BackhaulConfig]:
+        """One backhaul config per cell.  Homogeneous by default (the
+        shared ``backhaul`` object C times — bitwise-identical costs to
+        the pre-heterogeneity runner); with ``backhaul_rate_range`` set,
+        a seeded log-uniform rate draw per cell."""
+        if self.backhaul_rate_range is None:
+            return [self.backhaul] * self.n_cells
+        return sample_cell_backhauls(self.backhaul, self.n_cells,
+                                     self.backhaul_rate_range,
+                                     seed=self.backhaul_het_seed)
 
 
 def assign_cells(n_devices: int, topo: TopologyConfig) -> np.ndarray:

@@ -82,6 +82,64 @@ class EdgeAggregator:
         return part
 
 
+class CodecErrorFeedback:
+    """Per-cell residuals for the lossy backhaul codec, across rounds.
+
+    A bf16/int8 codec rounds each shipped ``(num, den)`` partial onto its
+    wire grid; without correction that rounding error is simply lost
+    every round.  This keeps the classic EF-SGD residual *per edge
+    site*: round t ships ``encode(partial_t + residual_t)`` and stores
+    ``residual_{t+1} = (partial_t + residual_t) - decode(shipped)`` — the
+    exact mass the wire dropped, fed back into round t+1's partial.  The
+    sent stream then telescopes: after T rounds the cloud's cumulative
+    decoded planes equal the cumulative f32 planes minus one final
+    residual (bounded by a single quantization step), however long the
+    run (the ``tests/test_topology.py`` EF test pins this).
+
+    Residuals belong to the edge *site*, not to any device roster — cell
+    composition may churn under handover and the correction stays valid,
+    because the error being corrected was introduced on this site's
+    wire, not by its clients.
+
+    Residuals ARE frame-bound, though: under EMS the server re-sorts
+    channels every round, so a partial's coordinates live in that
+    round's sorted frame.  Callers pass a ``frame`` token (the sort
+    permutations — see ``shrinking.sort_channels(return_perms=True)``);
+    when the frame moved since the residual was stored, the stale
+    residual is dropped rather than added into the wrong channels — EF
+    telescopes within stable-frame stretches and degrades gracefully
+    (to the raw codec) across re-orderings, instead of injecting
+    misaligned mass.
+    """
+
+    def __init__(self):
+        # cell_id -> (frame, num_res, den_res)
+        self._res: dict[int, tuple] = {}
+
+    def encode_ship(self, cell_id: int, part: aggregation.PartialAgg,
+                    codec: str, frame=None):
+        """Residual-corrected :func:`~repro.topology.codec.encode_partial`."""
+        from repro.topology.codec import decode_partial, encode_partial
+        if codec == "f32":
+            return encode_partial(part, codec)   # exact wire: no residual
+        stored = self._res.get(cell_id)
+        res = None
+        if stored is not None and stored[0] == frame:
+            res = stored[1:]
+        if res is not None:
+            part = aggregation.PartialAgg(
+                num=jax.tree.map(jnp.add, part.num, res[0]),
+                den=jax.tree.map(jnp.add, part.den, res[1]),
+                count=part.count)
+        enc = encode_partial(part, codec)
+        dec = decode_partial(enc)
+        self._res[cell_id] = (
+            frame,
+            jax.tree.map(jnp.subtract, part.num, dec.num),
+            jax.tree.map(jnp.subtract, part.den, dec.den))
+        return enc
+
+
 def cloud_merge(partials: list[aggregation.PartialAgg], *,
                 use_kernel: bool = False) -> Optional[aggregation.PartialAgg]:
     """Fuse the per-cell partials the backhaul delivered (any order).

@@ -83,6 +83,11 @@ class RoundLog:
     # hierarchical-topology extensions (zero under the flat single cell)
     n_cells_reporting: int = 0    # edge partials merged at the cloud
     backhaul_bits: float = 0.0    # edge->cloud traffic this round
+    # mobility extensions (zero under a static fleet)
+    n_handovers: int = 0          # devices re-homed at this round boundary
+    max_cell_occupancy: int = 0   # most devices bound to any one cell
+    # battery-aware deadline adaptation (equals fleet T_max when inactive)
+    t_max_effective: float = 0.0  # T_max handed to the P4 solver this round
 
 
 @dataclasses.dataclass
@@ -100,6 +105,10 @@ class History:
 
     def cumulative(self, field: str) -> np.ndarray:
         return np.cumsum([getattr(r, field) for r in self.rounds])
+
+    def total_handovers(self) -> int:
+        """Devices re-homed across the whole run (mobility + handover)."""
+        return int(sum(r.n_handovers for r in self.rounds))
 
     def wallclock(self) -> float:
         """Simulated seconds at the end of the run."""

@@ -20,6 +20,18 @@ def test_quickstart_runs():
 
 
 @pytest.mark.slow
+def test_mobile_fleet_example_runs():
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "examples/mobile_fleet.py"],
+                         cwd=ROOT, env=env, capture_output=True, text=True,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "nearest handover" in out.stdout
+    assert "peak occupancy" in out.stdout
+    assert "replayed scenario" in out.stdout
+
+
+@pytest.mark.slow
 def test_serve_driver_runs():
     env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
     out = subprocess.run(

@@ -254,6 +254,38 @@ def test_static_defaults_bit_identical_to_no_dynamics():
                 b.test_acc, b.test_loss)
 
 
+def test_soc_deadline_adaptation_shrinks_t_max():
+    """Battery-aware deadline adaptation: with the fleet's mean SoC
+    under the threshold, the effective T_max handed to the P4 solver
+    shrinks by --soc-deadline-scale and is logged on RoundLog."""
+    dyn = FleetDynamicsConfig(
+        battery=BatteryConfig(capacity_j=30.0, init_frac=(0.3, 0.5),
+                              recharge_w=0.0, seed=5),
+        soc_deadline_scale=0.5, soc_deadline_threshold=0.9)
+    h = _run(dynamics=dyn)
+    # mean SoC starts ~0.4 < 0.9: every round runs the shrunken deadline
+    assert all(r.t_max_effective == pytest.approx(0.5 * 10.0)
+               for r in h.rounds)
+    # no-op default logs the full fleet T_max
+    h0 = _run(dynamics=FleetDynamicsConfig(
+        battery=BatteryConfig(capacity_j=30.0, init_frac=(0.3, 0.5),
+                              recharge_w=0.0, seed=5)))
+    assert all(r.t_max_effective == pytest.approx(10.0)
+               for r in h0.rounds)
+    # the solver really sees the shrunken budget: same seed and channel
+    # draws, strictly shorter planned rounds (realized latency may
+    # overshoot either plan when realized bits exceed the reservation,
+    # so compare scaled vs unscaled rather than against the constant)
+    assert all(a.latency_s <= b.latency_s + 1e-6
+               for a, b in zip(h.rounds, h0.rounds))
+    assert sum(a.latency_s for a in h.rounds) \
+        < 0.8 * sum(b.latency_s for b in h0.rounds)
+    with pytest.raises(ValueError):
+        FleetDynamicsConfig(soc_deadline_scale=1.5)
+    with pytest.raises(ValueError):
+        FleetDynamicsConfig(soc_deadline_threshold=-0.1)
+
+
 def test_dynamic_fleet_run_is_seeded_deterministic():
     dyn = FleetDynamicsConfig(
         availability=AvailabilityConfig(kind="markov", seed=11,

@@ -1,5 +1,7 @@
 """Hierarchical multi-cell topology: cell assignment, backhaul model,
 edge-tier streaming aggregation, and the flat-equivalence guarantees."""
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -245,3 +247,134 @@ def test_hier_rejects_stream_policies():
     with pytest.raises(ValueError):
         _run(topology=TopologyConfig(kind="hier", n_cells=2),
              policy="fedbuff", max_wallclock_s=5.0)
+
+
+# ------------------------------------------------- mobility flat-equivalence
+
+def test_static_mobility_one_cell_bitwise_identical_to_hier():
+    """Acceptance guard: ``--mobility static`` attaches nothing — a
+    1-cell hierarchy with the static mobility config is *bitwise*
+    identical to the same hierarchy with no mobility field at all."""
+    from repro.mobility import MobilityConfig
+    topo = TopologyConfig(kind="hier", n_cells=1,
+                          backhaul=BackhaulConfig.zero_cost())
+    cfg = FLRunConfig(method="anycostfl", **TINY)
+    base = run_orchestrated(
+        cfg, FleetConfig(n_devices=4, topology=topo),
+        OrchestratorConfig(policy="sync", use_pool=False))
+    static = run_orchestrated(
+        cfg, FleetConfig(n_devices=4, topology=topo,
+                         mobility=MobilityConfig(kind="static")),
+        OrchestratorConfig(policy="sync", use_pool=False))
+    assert base.trace == static.trace
+    for a, b in zip(base.rounds, static.rounds):
+        assert (a.latency_s, a.energy_j, a.comm_bits, a.mean_alpha,
+                a.mean_beta, a.test_acc, a.test_loss) == \
+            (b.latency_s, b.energy_j, b.comm_bits, b.mean_alpha,
+             b.mean_beta, b.test_acc, b.test_loss)
+    assert base.best_acc == static.best_acc
+
+
+# -------------------------------------------------- backhaul error feedback
+
+def test_codec_error_feedback_stream_tracks_f32():
+    """Satellite acceptance: with the per-cell EF residual, the lossy
+    shipped stream telescopes — after T rounds the cumulative decoded
+    planes equal the cumulative f32 planes up to ONE quantization step
+    (the final residual), instead of T accumulated rounding errors."""
+    from repro.topology import CodecErrorFeedback
+
+    key = jax.random.PRNGKey(0)
+    ef = CodecErrorFeedback()
+    cum_f32 = cum_ef = cum_raw = 0.0
+    worst_step = 0.0
+    for t in range(12):
+        key, k = jax.random.split(key)
+        part = _partial(k, n=2048, count=2)
+        cum_f32 = cum_f32 + np.asarray(part.num["w"], np.float64)
+        enc_ef = ef.encode_ship(0, part, "int8")
+        cum_ef = cum_ef + np.asarray(
+            decode_partial(enc_ef).num["w"], np.float64)
+        cum_raw = cum_raw + np.asarray(
+            decode_partial(encode_partial(part, "int8")).num["w"],
+            np.float64)
+        worst_step = max(worst_step,
+                         float(np.abs(np.asarray(part.num["w"])).max())
+                         / 127.0)
+    err_ef = np.abs(cum_ef - cum_f32).max()
+    err_raw = np.abs(cum_raw - cum_f32).max()
+    # EF: bounded by a single step (+ float slack); raw drifts well past
+    assert err_ef <= 2.0 * worst_step + 1e-4, (err_ef, worst_step)
+    assert err_ef < 0.5 * err_raw, (err_ef, err_raw)
+
+
+def test_codec_error_feedback_frame_change_drops_residual():
+    """A residual stored under one EMS sort frame must never be added
+    into a differently-permuted frame — it is dropped instead (the
+    encode then equals the raw codec's)."""
+    from repro.topology import CodecErrorFeedback
+    part = _partial(jax.random.PRNGKey(4))
+    ef = CodecErrorFeedback()
+    ef.encode_ship(0, part, "int8", frame=("a",))
+    enc_moved = ef.encode_ship(0, part, "int8", frame=("b",))
+    raw = encode_partial(part, "int8")
+    np.testing.assert_array_equal(np.asarray(enc_moved.num["w"]),
+                                  np.asarray(raw.num["w"]))
+    # same frame: the residual IS applied (differs from raw)
+    enc_same = ef.encode_ship(0, part, "int8", frame=("b",))
+    assert not np.array_equal(np.asarray(enc_same.num["w"]),
+                              np.asarray(raw.num["w"]))
+
+
+def test_codec_error_feedback_f32_is_free():
+    """The exact f32 passthrough keeps no residual (flat-equivalence is
+    preserved when EF is enabled with the default codec)."""
+    from repro.topology import CodecErrorFeedback
+    ef = CodecErrorFeedback()
+    part = _partial(jax.random.PRNGKey(1))
+    enc = ef.encode_ship(0, part, "f32")
+    assert enc.num["w"] is part.num["w"]       # zero-copy passthrough
+    assert ef._res == {}
+
+
+def test_hier_backhaul_ef_runs_and_keeps_costs():
+    bh = BackhaulConfig(rate_bps=1e9, latency_s=0.01, codec="int8",
+                        error_feedback=True)
+    h = _run(topology=TopologyConfig(kind="hier", n_cells=2,
+                                     backhaul=bh), n=4)
+    h_raw = _run(topology=TopologyConfig(kind="hier", n_cells=2,
+                                         backhaul=dataclasses.replace(
+                                             bh, error_feedback=False)),
+                 n=4)
+    # EF changes wire numerics, never the bit accounting
+    assert h.rounds[0].backhaul_bits == h_raw.rounds[0].backhaul_bits
+    assert h.best_acc == pytest.approx(h_raw.best_acc, abs=0.15)
+
+
+# ------------------------------------------------------ aggregation routes
+
+def test_agg_route_validation():
+    with pytest.raises(ValueError):
+        OrchestratorConfig(agg_route="edge")
+
+
+def test_agg_route_batched_matches_streaming():
+    topo = TopologyConfig(kind="hier", n_cells=2)
+    hs = _run(topology=topo, n=4)
+    hb = _run(topology=topo, n=4, agg_route="batched")
+    # same wire accounting, same learning trajectory to float tolerance
+    for a, b in zip(hs.rounds, hb.rounds):
+        assert a.backhaul_bits == b.backhaul_bits
+        assert a.test_loss == pytest.approx(b.test_loss, rel=1e-5)
+        assert a.n_cells_reporting == b.n_cells_reporting
+
+
+def test_agg_route_mesh_falls_back_on_one_device(capsys):
+    topo = TopologyConfig(kind="hier", n_cells=2)
+    hs = _run(topology=topo, n=4)
+    if len(jax.devices()) >= 2:
+        pytest.skip("multi-device host: no fallback to observe")
+    hm = _run(topology=topo, n=4, agg_route="mesh")
+    out = capsys.readouterr().out
+    assert "falling back" in out
+    assert hm.best_acc == hs.best_acc          # identical streaming math
