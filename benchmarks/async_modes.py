@@ -23,7 +23,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np  # noqa: E402
 
-from benchmarks.common import CACHE_DIR  # noqa: E402
+from benchmarks.common import (CACHE_DIR, load_artifact,  # noqa: E402
+                               write_artifact)
 from repro.orchestrator import OrchestratorConfig, run_orchestrated  # noqa: E402
 from repro.sysmodel.population import FleetConfig  # noqa: E402
 from repro.train.fl_loop import FLRunConfig  # noqa: E402
@@ -58,8 +59,9 @@ def main(method: str = "anycostfl", seed: int = 0) -> list[dict]:
     scale_tag = os.environ.get("BENCH_SCALE", "fast")
     os.makedirs(CACHE_DIR, exist_ok=True)
     path = os.path.join(CACHE_DIR, f"async_modes_{method}_{scale_tag}.json")
-    if os.path.exists(path):
-        rows = json.load(open(path))
+    art = load_artifact(path)
+    if art is not None:
+        rows = art["rows"]
     else:
         run_cfg = FLRunConfig(method=method, seed=seed, lr=0.1,
                               rounds=sc["rounds"], n_train=sc["n_train"],
@@ -80,8 +82,9 @@ def main(method: str = "anycostfl", seed: int = 0) -> list[dict]:
                                buffer_size=sc["buffer_size"],
                                max_wallclock_s=h_sync.wallclock()))
         rows.append(_row("fedbuff", h_buf))
-        with open(path, "w") as f:
-            json.dump(rows, f, indent=1)
+        write_artifact(path, rows, trace_signature=h_sync.trace,
+                       extra={"benchmark": "async_modes",
+                              "method": method, "scale": scale_tag})
     for row in rows:
         print(json.dumps(row))
     return rows

@@ -18,6 +18,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np  # noqa: E402
 
 from repro.sysmodel.population import FleetConfig  # noqa: E402
+from repro.telemetry import build_manifest, validate_manifest  # noqa: E402
 from repro.train.fl_loop import run_fl, FLRunConfig  # noqa: E402
 
 CACHE_DIR = "experiments/fl"
@@ -34,6 +35,43 @@ def scale() -> dict:
     return SCALES[os.environ.get("BENCH_SCALE", "fast")]
 
 
+def write_artifact(path: str, result, *, trace_signature=None,
+                   extra: dict | None = None) -> dict:
+    """Stamp a provenance manifest into ``result`` and write it.
+
+    Dict-shaped results gain a ``manifest`` key; list-shaped results
+    (one row per configuration) are wrapped as
+    ``{"manifest": ..., "rows": [...]}``.  Every artifact under
+    ``experiments/fl/`` goes through here so CI can require the stamp.
+    """
+    manifest = build_manifest(trace_signature=trace_signature, extra=extra)
+    if isinstance(result, list):
+        result = {"manifest": manifest, "rows": result}
+    else:
+        result = dict(result)
+        result["manifest"] = manifest
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def load_artifact(path: str) -> dict | None:
+    """Cached artifact, or None when absent, unreadable, or carrying no
+    valid manifest (a pre-telemetry artifact: regenerate rather than
+    serve unprovenanced numbers)."""
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if not isinstance(data, dict) \
+            or validate_manifest(data.get("manifest")):
+        return None
+    return data
+
+
 def run_cached(method: str, *, seed: int = 0, iid: bool = True,
                fleet_kw: dict | None = None, run_kw: dict | None = None,
                tag: str = "") -> dict:
@@ -45,9 +83,9 @@ def run_cached(method: str, *, seed: int = 0, iid: bool = True,
             f"{('_' + tag) if tag else ''}")
     os.makedirs(CACHE_DIR, exist_ok=True)
     path = os.path.join(CACHE_DIR, name + ".json")
-    if os.path.exists(path):
-        with open(path) as f:
-            return json.load(f)
+    cached = load_artifact(path)
+    if cached is not None:
+        return cached
     run_cfg = FLRunConfig(method=method, seed=seed, iid=iid,
                           rounds=sc["rounds"], n_train=sc["n_train"],
                           n_test=sc["n_test"], eval_every=sc["eval_every"],
@@ -58,12 +96,12 @@ def run_cached(method: str, *, seed: int = 0, iid: bool = True,
         "method": method, "tag": tag, "iid": iid, "seed": seed,
         "best_acc": hist.best_acc,
         "rows": hist.to_rows(),
+        "phase_totals": hist.phase_totals(),
         "mean_alpha": float(np.mean([r.mean_alpha for r in hist.rounds])),
         "mean_beta": float(np.mean([r.mean_beta for r in hist.rounds])),
     }
-    with open(path, "w") as f:
-        json.dump(result, f)
-    return result
+    return write_artifact(path, result, trace_signature=hist.trace,
+                          extra={"benchmark": "run_cached", "name": name})
 
 
 def cost_to_accuracy(result: dict, target: float):

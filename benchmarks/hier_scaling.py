@@ -48,7 +48,8 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from benchmarks.common import CACHE_DIR  # noqa: E402
+from benchmarks.common import (CACHE_DIR, load_artifact,  # noqa: E402
+                               write_artifact)
 from repro.core import aggregation as A  # noqa: E402
 from repro.orchestrator import (OrchestratorConfig,  # noqa: E402
                                 run_orchestrated)
@@ -145,6 +146,57 @@ def measure_memory(n_clients: int, n: int, seed: int = 0) -> dict:
             "batched_s": t_batched, "streaming_s": t_donated,
             "streaming_undonated_s": t_undonated,
             "max_abs_err": err}
+
+
+# ------------------------------------- 1b) disabled-telemetry overhead
+
+def measure_telemetry_overhead(n_absorbs: int = 64, n: int = 16384,
+                               seed: int = 0) -> dict:
+    """Python allocations attributable to the telemetry module while the
+    streaming absorb loop runs with telemetry *disabled*.
+
+    The runner's hot loops guard every emission with ``if tel.enabled:``
+    against the NULL session; this measures that the guard really is
+    free — tracemalloc must attribute zero bytes to ``repro/telemetry``
+    source files across the whole loop (the CI memory guard asserts it).
+    """
+    import tracemalloc
+
+    from repro.telemetry import NULL_TELEMETRY
+    tel = NULL_TELEMETRY
+    keys = jax.random.split(jax.random.PRNGKey(seed + 5), 8)
+    ups = [_device_update(k, n) for k in keys]
+
+    def loop():
+        num = jnp.zeros((n,), jnp.float32)
+        den = jnp.zeros((n,), jnp.float32)
+        i = 0
+        while i < n_absorbs:
+            for u, m in ups:
+                if tel.enabled:      # the runner's guard, verbatim
+                    tel.counter("cost.energy_j", 1.0, phase="train")
+                    tel.span("device/0", "train", 0.0, 1.0)
+                num, den = A.absorb_trees(num, den, u, m, 0.5)
+                i += 1
+                if i >= n_absorbs:
+                    break
+        A.finalize_trees(num, den).block_until_ready()
+
+    loop()                           # warm compiles / caches
+    tracemalloc.start(10)
+    before = tracemalloc.take_snapshot()
+    loop()
+    after = tracemalloc.take_snapshot()
+    tracemalloc.stop()
+    tel_bytes = 0
+    for st in after.compare_to(before, "traceback"):
+        if st.size_diff <= 0:
+            continue
+        if any(os.sep + "telemetry" + os.sep in fr.filename
+               for fr in st.traceback):
+            tel_bytes += st.size_diff
+    return {"n_absorbs": n_absorbs, "n_elems": n,
+            "telemetry_alloc_bytes": int(tel_bytes)}
 
 
 # ----------------------------------------------------- 2) backhaul codec
@@ -246,12 +298,13 @@ def main(seed: int = 0) -> dict:
     os.makedirs(CACHE_DIR, exist_ok=True)
     path = os.path.join(CACHE_DIR, f"hier_scaling_{scale_tag}.json")
     result = None
-    if os.path.exists(path):
-        cached = json.load(open(path))
-        # a pre-codec/pre-donation artifact (older schema) must not be
-        # served as if it carried the new measurements — regenerate
-        if "codec" in cached and "donated_in_place" in cached:
-            result = cached
+    cached = load_artifact(path)
+    # a pre-codec/pre-donation/pre-telemetry artifact (older schema)
+    # must not be served as if it carried the new measurements
+    if cached is not None and "codec" in cached \
+            and "donated_in_place" in cached \
+            and "telemetry_overhead" in cached:
+        result = cached
     if result is None:
         mem = [measure_memory(i, sc["mem_n"], seed)
                for i in sc["mem_clients"]]
@@ -259,6 +312,7 @@ def main(seed: int = 0) -> dict:
         result = {
             "scale": scale_tag,
             "memory": mem,
+            "telemetry_overhead": measure_telemetry_overhead(),
             # the acceptance claims: the streaming path's peak is flat in
             # client count while the batched stack grows linearly, and the
             # donated absorb demonstrably reuses its buffers (in place)
@@ -272,8 +326,9 @@ def main(seed: int = 0) -> dict:
             "codec": measure_codec(sc["mem_n"], seed),
             "tta": run_tta(sc, seed),
         }
-        with open(path, "w") as f:
-            json.dump(result, f, indent=1)
+        result = write_artifact(path, result,
+                                extra={"benchmark": "hier_scaling",
+                                       "scale": scale_tag})
     for row in result["memory"]:
         print(json.dumps(row))
     print(json.dumps({"streaming_peak_constant":
@@ -297,6 +352,9 @@ def main(seed: int = 0) -> dict:
         "int8 backhaul payload must be ~4x smaller than f32"
     assert codec["int8"]["within_grid"], \
         "int8 finalize must stay within the amax/127 quantization grid"
+    print(json.dumps(result["telemetry_overhead"]))
+    assert result["telemetry_overhead"]["telemetry_alloc_bytes"] == 0, \
+        "disabled telemetry must allocate nothing on the streaming path"
     return result
 
 

@@ -40,7 +40,8 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from benchmarks.common import CACHE_DIR  # noqa: E402
+from benchmarks.common import (CACHE_DIR, load_artifact,  # noqa: E402
+                               write_artifact)
 from repro.core import aggregation as A  # noqa: E402
 from repro.mobility import HandoverConfig, MobilityConfig  # noqa: E402
 from repro.orchestrator import (OrchestratorConfig,  # noqa: E402
@@ -182,11 +183,10 @@ def main(seed: int = 0) -> dict:
     os.makedirs(CACHE_DIR, exist_ok=True)
     path = os.path.join(CACHE_DIR, f"mobility_handover_{scale_tag}.json")
     result = None
-    if os.path.exists(path):
-        cached = json.load(open(path))
-        if "handover" in cached and "balance" in cached \
-                and "memory" in cached:
-            result = cached
+    cached = load_artifact(path)
+    if cached is not None and "handover" in cached \
+            and "balance" in cached and "memory" in cached:
+        result = cached
     if result is None:
         t0 = time.time()
         result = {
@@ -198,8 +198,9 @@ def main(seed: int = 0) -> dict:
                 sc["mem_rounds"], seed),
             "elapsed_s": time.time() - t0,
         }
-        with open(path, "w") as f:
-            json.dump(result, f, indent=1)
+        result = write_artifact(path, result,
+                                extra={"benchmark": "mobility_handover",
+                                       "scale": scale_tag})
     for row in result["handover"] + result["balance"]:
         print(json.dumps(row))
     print(json.dumps({k: result["memory"][k]

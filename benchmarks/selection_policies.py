@@ -25,7 +25,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np  # noqa: E402
 
-from benchmarks.common import CACHE_DIR  # noqa: E402
+from benchmarks.common import (CACHE_DIR, load_artifact,  # noqa: E402
+                               write_artifact)
 from repro.fleet import (AvailabilityConfig, BatteryConfig,  # noqa: E402
                          FleetDynamicsConfig)
 from repro.orchestrator import OrchestratorConfig, run_orchestrated  # noqa: E402
@@ -76,8 +77,9 @@ def main(method: str = "anycostfl", seed: int = 0) -> list[dict]:
     path = os.path.join(
         CACHE_DIR,
         f"selection_policies_{method}_{scale_tag}{seed_tag}.json")
-    if os.path.exists(path):
-        rows = json.load(open(path))
+    art = load_artifact(path)
+    if art is not None:
+        rows = art["rows"]
     else:
         run_cfg = FLRunConfig(method=method, seed=seed, lr=0.1,
                               rounds=sc["rounds"], n_train=sc["n_train"],
@@ -93,8 +95,9 @@ def main(method: str = "anycostfl", seed: int = 0) -> list[dict]:
             fleet = FleetConfig(n_devices=sc["n_devices"],
                                 dynamics=_dynamics(sel, sc, seed))
             rows.append(_row(sel, run_orchestrated(run_cfg, fleet, orch)))
-        with open(path, "w") as f:
-            json.dump(rows, f, indent=1)
+        write_artifact(path, rows, trace_signature=h_ref.trace,
+                       extra={"benchmark": "selection_policies",
+                              "method": method, "scale": scale_tag})
     for row in rows:
         print(json.dumps(row))
     return rows

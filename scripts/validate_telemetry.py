@@ -1,0 +1,163 @@
+#!/usr/bin/env python
+"""Validate telemetry bundles and artifact manifests (the CI gate).
+
+Three checks, each independently selectable:
+
+* ``--run``       drive a tiny telemetry-enabled hierarchical run and
+                  flush a bundle into a temp dir (then validate it);
+* ``--dir D``     validate an existing bundle directory: the Perfetto
+                  JSON must parse and type-check (metadata declares
+                  every (pid, tid); X spans carry numeric ts/dur >= 0;
+                  instants carry s:"t"), the JSONL twin must line-parse
+                  with the span/instant schema, metrics.jsonl must
+                  line-parse, and manifest.json must pass
+                  ``validate_manifest``;
+* ``--artifacts G``  glob of benchmark artifacts (default
+                  ``experiments/fl/*.json``): every one must embed a
+                  manifest with all required keys.
+
+Exit code 0 = everything valid.  Used by CI after the fast suite; run
+locally as ``PYTHONPATH=src python scripts/validate_telemetry.py --run``.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.telemetry import validate_manifest  # noqa: E402
+
+SPAN_KEYS = {"name", "cat", "ph", "ts", "dur", "pid", "tid"}
+INSTANT_KEYS = {"name", "cat", "ph", "s", "ts", "pid", "tid"}
+JSONL_KEYS = {"type", "track", "name", "t0", "t1", "args"}
+
+
+def fail(msg: str) -> None:
+    print(f"FAIL: {msg}")
+    raise SystemExit(1)
+
+
+def validate_perfetto(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: traceEvents missing or empty")
+    declared = set()
+    counts = {"M": 0, "X": 0, "i": 0}
+    for ev in events:
+        ph = ev.get("ph")
+        if ph not in counts:
+            fail(f"{path}: unknown phase {ph!r} in {ev}")
+        counts[ph] += 1
+        if ph == "M":
+            declared.add((ev["pid"], ev["tid"]))
+            continue
+        missing = (SPAN_KEYS if ph == "X" else INSTANT_KEYS) - set(ev)
+        if missing:
+            fail(f"{path}: {ph} event missing {sorted(missing)}: {ev}")
+        if (ev["pid"], ev["tid"]) not in declared:
+            fail(f"{path}: event on undeclared track {ev}")
+        if not isinstance(ev["ts"], (int, float)) or ev["ts"] < 0:
+            fail(f"{path}: bad ts in {ev}")
+        if ph == "X" and (not isinstance(ev["dur"], (int, float))
+                          or ev["dur"] < 0):
+            fail(f"{path}: bad dur in {ev}")
+        if ph == "i" and ev["s"] not in ("t", "p", "g"):
+            fail(f"{path}: bad instant scope in {ev}")
+    if counts["X"] == 0:
+        fail(f"{path}: no spans at all — empty timeline")
+    return counts
+
+
+def validate_bundle(out_dir: str) -> None:
+    perfetto = os.path.join(out_dir, "trace.perfetto.json")
+    counts = validate_perfetto(perfetto)
+    n_jsonl = 0
+    with open(os.path.join(out_dir, "trace.jsonl")) as f:
+        for line in f:
+            row = json.loads(line)
+            if set(row) != JSONL_KEYS:
+                fail(f"trace.jsonl row keys {sorted(row)} != schema")
+            if row["type"] not in ("span", "instant"):
+                fail(f"trace.jsonl bad type in {row}")
+            n_jsonl += 1
+    if n_jsonl != counts["X"] + counts["i"]:
+        fail(f"trace.jsonl has {n_jsonl} rows; perfetto has "
+             f"{counts['X'] + counts['i']} events")
+    with open(os.path.join(out_dir, "metrics.jsonl")) as f:
+        n_metrics = sum(1 for line in f if json.loads(line))
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            missing = validate_manifest(json.load(f))
+        if missing:
+            fail(f"{manifest_path} missing keys {missing}")
+    print(f"OK bundle {out_dir}: {counts['X']} spans, {counts['i']} "
+          f"instants, {n_metrics} metric records")
+
+
+def validate_artifacts(pattern: str) -> None:
+    paths = sorted(glob.glob(pattern))
+    if not paths:
+        fail(f"no artifacts match {pattern!r}")
+    for path in paths:
+        with open(path) as f:
+            art = json.load(f)
+        if not isinstance(art, dict) or "manifest" not in art:
+            fail(f"{path}: no embedded manifest")
+        missing = validate_manifest(art["manifest"])
+        if missing:
+            fail(f"{path}: manifest missing keys {missing}")
+        print(f"OK artifact {path} "
+              f"(sha={str(art['manifest']['git_sha'])[:8]})")
+
+
+def tiny_run(out_dir: str) -> None:
+    from repro.orchestrator import OrchestratorConfig, run_orchestrated
+    from repro.sysmodel.population import FleetConfig
+    from repro.telemetry import Telemetry, build_manifest
+    from repro.topology import TopologyConfig
+    from repro.train.fl_loop import FLRunConfig
+
+    run_cfg = FLRunConfig(method="anycostfl", rounds=2, n_train=128,
+                          n_test=64, eval_every=1, lr=0.1, seed=0,
+                          use_planner=False)
+    fleet = FleetConfig(n_devices=6,
+                        topology=TopologyConfig(kind="hier", n_cells=2))
+    orch = OrchestratorConfig(policy="sync")
+    tel = Telemetry(out_dir)
+    hist = run_orchestrated(run_cfg, fleet, orch, telemetry=tel)
+    tel.flush(manifest=build_manifest(run_cfg, fleet, orch,
+                                      trace_signature=hist.trace))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--run", action="store_true",
+                    help="generate a tiny bundle and validate it")
+    ap.add_argument("--dir", default=None,
+                    help="existing telemetry bundle directory to validate")
+    ap.add_argument("--artifacts", default=None, nargs="?",
+                    const="experiments/fl/*.json",
+                    help="glob of benchmark artifacts to manifest-check")
+    args = ap.parse_args()
+    if not (args.run or args.dir or args.artifacts):
+        ap.error("nothing to do: pass --run, --dir, and/or --artifacts")
+    if args.run:
+        with tempfile.TemporaryDirectory() as d:
+            tiny_run(d)
+            validate_bundle(d)
+    if args.dir:
+        validate_bundle(args.dir)
+    if args.artifacts:
+        validate_artifacts(args.artifacts)
+
+
+if __name__ == "__main__":
+    main()

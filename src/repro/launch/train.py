@@ -163,7 +163,8 @@ def _mobility_config(args):
 def run_fl(args):
     from repro.orchestrator import OrchestratorConfig, run_orchestrated
     from repro.sysmodel.population import FleetConfig
-    from repro.train.fl_loop import FLRunConfig
+    from repro.telemetry import NULL_TELEMETRY, Telemetry, build_manifest
+    from repro.train.fl_loop import FLRunConfig, PHASES
     run_cfg = FLRunConfig(
         arch=args.arch if args.arch.endswith(("cnn", "cifar"))
         else "fmnist-cnn",
@@ -183,8 +184,12 @@ def run_fl(args):
         straggler_mode=args.straggler_mode,
         max_inflight=args.max_inflight,
         agg_route=args.agg_route,
-        use_pool=False if args.no_pool else None)
-    hist = run_orchestrated(run_cfg, fleet, orch, verbose=True)
+        use_pool=False if args.no_pool else None,
+        event_trace_limit=args.event_trace_limit)
+    tel = Telemetry(args.telemetry_dir, jax_profile=args.jax_profile) \
+        if args.telemetry_dir else NULL_TELEMETRY
+    hist = run_orchestrated(run_cfg, fleet, orch, verbose=True,
+                            telemetry=tel)
     # time-to-accuracy: simulated wall-clock at fixed accuracy milestones
     tta = {f"acc>={th:.2f}": hist.time_to_acc(th)
            for th in (0.3, 0.5, 0.7, 0.9) if hist.best_acc >= th}
@@ -202,6 +207,24 @@ def run_fl(args):
                                                for r in hist.rounds) / 8e6),
                       "time_to_acc_s": tta,
                       "rows": hist.to_rows()[-1]}, indent=1))
+    # per-phase cost attribution (always available: the registry backs
+    # every RoundLog whether or not a telemetry dir was given)
+    totals = hist.phase_totals()
+    print("[cost attribution]")
+    print(f"  {'phase':>9s} {'energy_j':>12s} {'latency_s':>12s} "
+          f"{'comm_mb':>12s}")
+    for phase in PHASES:
+        print(f"  {phase:>9s} {totals['energy_j'][phase]:12.3f} "
+              f"{totals['latency_s'][phase]:12.3f} "
+              f"{totals['comm_bits'][phase] / 8e6:12.3f}")
+    if tel.enabled:
+        manifest = build_manifest(run_cfg, fleet, orch,
+                                  trace_signature=hist.trace,
+                                  extra={"phase_totals": totals,
+                                         "best_acc": hist.best_acc})
+        paths = tel.flush(manifest=manifest)
+        for kind, path in sorted(paths.items()):
+            print(f"[telemetry] {kind}: {path}")
     return hist
 
 
@@ -348,6 +371,22 @@ def main():
                          "derived from --seed via a decorrelated stream, "
                          "so selection ablations never perturb model-init "
                          "or data draws)")
+    # ---- telemetry / observability
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="write the observability bundle here: "
+                         "trace.perfetto.json (load in ui.perfetto.dev), "
+                         "trace.jsonl, metrics.jsonl, manifest.json. "
+                         "Off by default — disabled telemetry is "
+                         "bitwise-invisible to the seeded run")
+    ap.add_argument("--jax-profile", action="store_true",
+                    help="additionally wrap the run in jax.profiler "
+                         "(kernel-level host trace under "
+                         "<telemetry-dir>/jax_profile)")
+    ap.add_argument("--event-trace-limit", type=int, default=None,
+                    help="bound the in-memory event pop trace to the "
+                         "newest N records (evicted records fold into a "
+                         "rolling hash; the replay signature stays "
+                         "deterministic). Default: retain everything")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=128)

@@ -77,6 +77,12 @@ class OrchestratorConfig:
     # --- stopping / execution
     max_wallclock_s: Optional[float] = None    # simulated seconds
     use_pool: Optional[bool] = None        # None -> policy default
+    # --- telemetry / event-trace retention
+    # None (default) retains the full pop trace — the pre-telemetry
+    # behaviour; N bounds the in-memory trace to the newest N records on
+    # long (million-event) runs, with evicted records folded into a
+    # rolling hash so History.trace stays a usable replay signature
+    event_trace_limit: Optional[int] = None
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -94,6 +100,10 @@ class OrchestratorConfig:
             raise ValueError("staleness_cap must be >= 0")
         if self.max_inflight is not None and self.max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
+        if self.event_trace_limit is not None \
+                and self.event_trace_limit < 1:
+            raise ValueError("event_trace_limit must be >= 1 (or None "
+                             "for unbounded retention)")
         if self.agg_route not in AGG_ROUTES:
             raise ValueError(f"unknown agg_route {self.agg_route!r}; "
                              f"expected one of {AGG_ROUTES}")

@@ -79,6 +79,7 @@ from repro.orchestrator.policies import (STALE_REQUEUE, OrchestratorConfig,
                                          make_policy, staleness_scales,
                                          unnormalized_weight)
 from repro.sysmodel.population import FleetConfig, make_fleet
+from repro.telemetry import NULL_TELEMETRY, MetricsRegistry, profile_trace
 from repro.topology.codec import decode_partial, encode_partial
 from repro.topology.edge import (CodecErrorFeedback, EdgeAggregator,
                                  cloud_merge, finalize_apply)
@@ -114,6 +115,11 @@ class PendingUpdate:
     t_cmp: float = 0.0
     t_com: float = 0.0
     energy: float = 0.0
+    # per-phase split of ``energy`` for cost attribution: compute (train)
+    # vs radio (uplink).  e_cmp + e_com == energy on every path, including
+    # the pro-rated churn charge.
+    e_cmp: float = 0.0
+    e_com: float = 0.0
 
     @property
     def duration(self) -> float:
@@ -124,10 +130,19 @@ class Simulation:
     """Shared state + the per-device round body of the old fl_loop."""
 
     def __init__(self, run_cfg: FLRunConfig,
-                 fleet_cfg: Optional[FleetConfig] = None):
+                 fleet_cfg: Optional[FleetConfig] = None,
+                 telemetry=None):
         # setup order mirrors the pre-orchestrator run_fl exactly — the rng
         # stream position after setup must match for bit-equivalence.
         self.run_cfg = run_cfg
+        # telemetry: the registry is ALWAYS live (it is RoundLog's backing
+        # store — pure-Python dicts, no RNG/JAX contact, bitwise-invisible
+        # by construction); the trace sink + per-device emission only run
+        # behind ``if self.tel.enabled`` guards.
+        self.tel = telemetry if telemetry is not None \
+            and telemetry.enabled else NULL_TELEMETRY
+        self.registry = self.tel.registry if self.tel.enabled \
+            else MetricsRegistry()
         rng = self.rng = np.random.default_rng(run_cfg.seed)
         arch_cfg = self.arch_cfg = get_config(run_cfg.arch)
         self.model = build_model(arch_cfg)
@@ -392,6 +407,7 @@ class Simulation:
         e_cmp = env.eps_hw * strat.freq ** 2 * upd.alpha \
             * env.tau * env.D * env.W
         p.t_com, p.t_cmp = t_com, t_cmp
+        p.e_cmp, p.e_com = e_cmp, e_com
         p.energy = e_cmp + e_com
         return p
 
@@ -519,7 +535,8 @@ def _mesh_route_params(sim: Simulation, pairs, sorted_params) -> PyTree:
 
 
 def _hier_round_merge(sim: Simulation, policy, live, aborted,
-                      sorted_params, queue, t_wall: float):
+                      sorted_params, queue, t_wall: float,
+                      round_idx: int = 0):
     """One hierarchical round tail: per-cell accept -> edge absorb ->
     backhaul ship -> cloud merge.
 
@@ -541,17 +558,23 @@ def _hier_round_merge(sim: Simulation, policy, live, aborted,
     route-independent: one constant-size partial per reporting cell.
 
     Returns ``(accepted, new_params|None, lat, ship_energy,
-    backhaul_bits, n_cells_reporting)``.
+    backhaul_bits, n_cells_reporting, lat_parts)`` where ``lat_parts``
+    is the ``(train, uplink, backhaul)`` decomposition of ``lat`` along
+    the critical cell's path (the cell maximizing barrier + shipping).
     """
     from repro.topology.codec import payload_bits as codec_payload_bits
     from repro.utils.pytree import tree_size as _tree_size
 
     topo, fleet, rc = sim.topo, sim.fleet, sim.run_cfg
+    tel = sim.tel
     cell_dl = topo.cell_deadline_s
     route = sim.agg_route
     accepted_all, parts, ships, route_pairs = [], [], [], []
     lat = e_ship = bh_bits = 0.0
     n_rep = 0
+    # (total, barrier, ship, max accepted t_cmp) per reporting cell — the
+    # critical path for the round's latency attribution
+    crit: list[tuple[float, float, float, float]] = []
     for k in range(fleet.n_cells):
         cell_live = [p for p in live if p.cell == k]
         cell_ab = [p for p in aborted if p.cell == k]
@@ -605,11 +628,29 @@ def _hier_round_merge(sim: Simulation, policy, live, aborted,
             ships.append((t_wall + lat_k + t_ship, k))
             lat = max(lat, lat_k + t_ship)
             n_rep += 1
+            crit.append((lat_k + t_ship, lat_k, t_ship,
+                         max(p.t_cmp for p in acc_k)))
+            if tel.enabled:
+                tel.span(f"cell/{k}", "backhaul_ship", t_wall + lat_k,
+                         t_wall + lat_k + t_ship, round=round_idx,
+                         bits=float(bits), codec=topo.backhaul.codec,
+                         energy_j=e_k, n_updates=len(acc_k))
+                tel.counter("cost.energy_j", e_k, cell=k,
+                            phase="backhaul", round=round_idx)
+                tel.counter("cost.comm_bits", float(bits), cell=k,
+                            phase="backhaul", round=round_idx)
+                tel.counter("backhaul.ships", 1.0, cell=k,
+                            codec=topo.backhaul.codec, round=round_idx)
         else:
             lat = max(lat, lat_k)
+            crit.append((lat_k, lat_k, 0.0,
+                         max((p.t_cmp for p in acc_k), default=0.0)))
         accepted_all.extend(acc_k)
     for t_arr, k in ships:      # record cloud arrival order
         queue.push(t_arr, ev_mod.EDGE_MERGE, k)
+        if tel.enabled:
+            tel.instant("server", "EDGE_MERGE", t_arr, cell=k,
+                        round=round_idx)
     for _ in ships:
         queue.pop()
     new_params = None
@@ -627,7 +668,17 @@ def _hier_round_merge(sim: Simulation, policy, live, aborted,
                 [p.update.mask for p, _ in route_pairs],
                 jnp.asarray([w for _, w in route_pairs], jnp.float32))
             new_params = sim.server.apply_update(sorted_params, agg)
-    return accepted_all, new_params, lat, e_ship, bh_bits, n_rep
+    # latency attribution along the critical cell: its barrier splits
+    # into compute (until the slowest accepted T_cmp elapses) and uplink
+    # (the rest — wire time plus any deadline/dropout wait); shipping is
+    # the backhaul share.  The three sum to ``lat`` exactly.
+    lat_parts = (0.0, 0.0, 0.0)
+    if crit:
+        _, bar, t_ship_c, max_tcmp = max(crit, key=lambda c: c[0])
+        lt = min(bar, max_tcmp)
+        lat_parts = (lt, bar - lt, t_ship_c)
+    return (accepted_all, new_params, lat, e_ship, bh_bits, n_rep,
+            lat_parts)
 
 
 def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
@@ -635,8 +686,9 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
     rc = sim.run_cfg
     use_pool = orch.use_pool if orch.use_pool is not None \
         else policy.pool_default
-    queue = ev_mod.EventQueue()
-    hist = History(rc, [])
+    tel = sim.tel
+    queue = ev_mod.EventQueue(trace_limit=orch.event_trace_limit)
+    hist = History(rc, [], registry=sim.registry)
     params = sim.params
     t_wall = 0.0
 
@@ -651,6 +703,11 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
                 sim.fleet.positions(t_wall), sim.fleet.cells)
             for i, old, new in moves:
                 queue.push(t_wall, ev_mod.HANDOVER, i, (old, new))
+                if tel.enabled:
+                    tel.instant(f"device/{i}", "HANDOVER", t_wall,
+                                round=t, src_cell=old, dst_cell=new)
+                    tel.counter("mobility.handovers", 1.0, device=i,
+                                round=t)
             for _ in moves:
                 queue.pop()
             sim.fleet.cells = new_cells
@@ -670,6 +727,11 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
         for p in pendings:
             sim.dispatch_log.append((t_wall, p.client_id,
                                      headroom[p.client_id]))
+        if tel.enabled:
+            tel.counter("fleet.unavailable", float(n_unavail), round=t)
+            tel.counter("fleet.selected", float(len(selected)), round=t)
+            tel.counter("fleet.infeasible",
+                        float(len(selected) - len(pendings)), round=t)
 
         # mid-round churn: a device that leaves the cell before its
         # *planned* T_cmp + T_com elapses aborts — its update never
@@ -685,6 +747,8 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
                 frac = min(1.0, (t_off - t_wall) / planned) \
                     if planned > 0 else 1.0
                 p.energy = frac * (p.strat.E_cmp + p.strat.E_com)
+                p.e_cmp = frac * p.strat.E_cmp
+                p.e_com = frac * p.strat.E_com
                 aborted.append(p)
             else:
                 live.append(p)
@@ -703,6 +767,7 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
             trained = [sim.train_one(p, sorted_params) for p in live]
 
         en, fl, cb = 0.0, 0.0, 0.0
+        en_cmp = en_com = 0.0
         for p, tr in zip(live, trained):
             sim.materialize(p, tr, sorted_params, fast=use_pool,
                             sub=subs.get(p.alpha))
@@ -710,37 +775,70 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
             p.completes_at = t_wall + p.duration
             queue.push(p.completes_at, ev_mod.COMPLETE, p.client_id, p)
             en += p.energy
+            en_cmp += p.e_cmp
+            en_com += p.e_com
             fl += p.update.flops
             cb += p.update.bits
+            if tel.enabled:
+                tel.span(f"device/{p.client_id}", "train", t_wall,
+                         t_wall + p.t_cmp, round=t, cell=p.cell,
+                         alpha=p.update.alpha, energy_j=p.e_cmp,
+                         flops=p.update.flops)
+                tel.span(f"device/{p.client_id}", "uplink",
+                         t_wall + p.t_cmp, t_wall + p.duration, round=t,
+                         cell=p.cell, bits=p.update.bits,
+                         beta=p.update.beta_realized, energy_j=p.e_com)
+                tel.counter("cost.energy_j", p.e_cmp,
+                            device=p.client_id, cell=p.cell,
+                            phase="train", round=t)
+                tel.counter("cost.energy_j", p.e_com,
+                            device=p.client_id, cell=p.cell,
+                            phase="uplink", round=t)
+                tel.counter("cost.comm_bits", p.update.bits,
+                            device=p.client_id, cell=p.cell,
+                            phase="uplink", round=t)
         for p in aborted:
             queue.push(p.completes_at, ev_mod.CHURN, p.client_id, p)
             en += p.energy
+            en_cmp += p.e_cmp
+            en_com += p.e_com
+            if tel.enabled:
+                tel.instant(f"device/{p.client_id}", "CHURN",
+                            p.completes_at, round=t, cell=p.cell)
+                tel.counter("cost.energy_j", p.e_cmp,
+                            device=p.client_id, cell=p.cell,
+                            phase="train", round=t)
+                tel.counter("cost.energy_j", p.e_com,
+                            device=p.client_id, cell=p.cell,
+                            phase="uplink", round=t)
         for _ in range(len(live) + len(aborted)):  # record arrival order
             queue.pop()
 
         if not live:               # every device faded out this round
             for p in aborted:
                 sim.fleet.debit(p.client_id, p.energy, p.completes_at)
-            hist.rounds.append(RoundLog(
-                round=t, latency_s=0.0, energy_j=en, flops=0.0,
+            hist.log_round(
+                t, latency_s=0.0, energy_j=en, flops=0.0,
                 comm_bits=0.0, mean_alpha=0.0, mean_beta=0.0,
                 mean_gain=0.0, t_wall=t_wall, n_unavailable=n_unavail,
                 n_aborted=len(aborted),
                 mean_soc=(sim.fleet.battery.mean_soc_frac(t_wall)
                           if sim.fleet.battery is not None else 1.0),
                 n_handovers=n_handover, max_cell_occupancy=occupancy,
-                t_max_effective=t_max_eff))
+                t_max_effective=t_max_eff,
+                energy_train_j=en_cmp, energy_uplink_j=en_com)
             if sim.fleet_dynamic:
                 # idle server deadline: let traces/batteries evolve so the
                 # fleet can come back (a static fleet must not drift)
                 t_wall += sim.fleet_cfg.T_max
             continue
 
-        bh_bits, n_cells_rep = 0.0, 0
+        bh_bits, n_cells_rep, e_ship = 0.0, 0, 0.0
         if sim.topo is not None:
-            (accepted, new_params, lat, e_ship, bh_bits,
-             n_cells_rep) = _hier_round_merge(sim, policy, live, aborted,
-                                              sorted_params, queue, t_wall)
+            (accepted, new_params, lat, e_ship, bh_bits, n_cells_rep,
+             lat_parts) = _hier_round_merge(sim, policy, live, aborted,
+                                            sorted_params, queue, t_wall,
+                                            round_idx=t)
             en += e_ship
             t_wall += lat
             for p in live + aborted:
@@ -756,6 +854,10 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
                 lat = max(lat, min(barrier,
                                    max(p.completes_at - t_wall
                                        for p in aborted)))
+            # critical-path split: compute until the slowest accepted
+            # client's T_cmp elapses, uplink/barrier wait for the rest
+            lt = min(lat, max((p.t_cmp for p in accepted), default=0.0))
+            lat_parts = (lt, lat - lt, 0.0)
             t_wall += lat
             for p in live + aborted:
                 sim.fleet.debit(p.client_id, p.energy, t_wall)
@@ -768,8 +870,8 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
                 params = sim.aggregate(sorted_params, accepted, w,
                                        fast=use_pool)
 
-        log = RoundLog(
-            round=t, latency_s=lat, energy_j=en, flops=fl, comm_bits=cb,
+        log = hist.log_round(
+            t, latency_s=lat, energy_j=en, flops=fl, comm_bits=cb,
             mean_alpha=float(np.mean([p.update.alpha for p in live])),
             mean_beta=float(np.mean([p.update.beta_realized
                                      for p in live])),
@@ -781,19 +883,25 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
                       if sim.fleet.battery is not None else 1.0),
             n_cells_reporting=n_cells_rep, backhaul_bits=bh_bits,
             n_handovers=n_handover, max_cell_occupancy=occupancy,
-            t_max_effective=t_max_eff)
+            t_max_effective=t_max_eff,
+            energy_train_j=en_cmp, energy_uplink_j=en_com,
+            energy_backhaul_j=e_ship,
+            latency_train_s=lat_parts[0],
+            latency_uplink_s=lat_parts[1],
+            latency_backhaul_s=lat_parts[2])
+        if tel.enabled:
+            tel.span("server", "round", t_wall - lat, t_wall, round=t,
+                     n_clients=len(accepted), n_cells=n_cells_rep,
+                     energy_j=en)
         if t % rc.eval_every == 0 or t == rc.rounds - 1:
             acc, loss = sim.evaluate(params)
-            log.test_acc = acc
-            log.test_loss = loss
-            hist.best_acc = max(hist.best_acc, acc)
+            hist.log_eval(log, acc, loss)
             if verbose:
                 print(f"[{rc.method}/{policy.name}] round {t:3d} "
                       f"acc={acc:.3f} loss={loss:.3f} lat={lat:.2f}s "
                       f"E={en:.2f}J t={t_wall:.1f}s "
                       f"alpha={log.mean_alpha:.2f} "
                       f"beta={log.mean_beta:.4f}")
-        hist.rounds.append(log)
         if orch.max_wallclock_s is not None \
                 and t_wall >= orch.max_wallclock_s:
             break
@@ -815,8 +923,9 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
         print("[fedbuff] warning: selection policies and participation "
               "caps are round-based controls; fedbuff devices free-run "
               "(availability/battery gating still applies)")
-    queue = ev_mod.EventQueue()
-    hist = History(rc, [])
+    tel = sim.tel
+    queue = ev_mod.EventQueue(trace_limit=orch.event_trace_limit)
+    hist = History(rc, [], registry=sim.registry)
 
     # frozen sorted coordinate frame (cross-version merges need one frame)
     current = sim.sort_params(sim.params)
@@ -828,6 +937,7 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
     n_agg = 0
     last_agg_t = 0.0
     en, fl, cb = 0.0, 0.0, 0.0
+    en_cmp = en_com = 0.0
     # --max-inflight participation throttle: clients beyond the cap of
     # concurrent dispatched flights wait in FIFO order for a free slot
     cap = orch.max_inflight
@@ -953,6 +1063,9 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
             break
         now = ev.time
         if ev.kind == ev_mod.RETRY:
+            if tel.enabled:
+                tel.instant(f"device/{ev.client}", "RETRY", now)
+                tel.counter("fedbuff.retries", 1.0, device=ev.client)
             redispatch(ev.client, now)
             continue
         if ev.kind == ev_mod.CHURN:
@@ -964,6 +1077,15 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
                 if planned > 0 else 1.0
             waste = frac * (p.strat.E_cmp + p.strat.E_com)
             en += waste
+            en_cmp += frac * p.strat.E_cmp
+            en_com += frac * p.strat.E_com
+            if tel.enabled:
+                tel.instant(f"device/{p.client_id}", "CHURN", now,
+                            version=p.version)
+                tel.counter("cost.energy_j", frac * p.strat.E_cmp,
+                            device=p.client_id, phase="train")
+                tel.counter("cost.energy_j", frac * p.strat.E_com,
+                            device=p.client_id, phase="uplink")
             sim.fleet.debit(p.client_id, waste, now)
             n_aborted += 1
             inflight_version.pop(p.client_id, None)
@@ -983,6 +1105,15 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
         if not policy.admit(p.staleness):
             n_stale += 1
             en += p.strat.E_cmp + p.strat.E_com   # spent, never aggregated
+            en_cmp += p.strat.E_cmp
+            en_com += p.strat.E_com
+            if tel.enabled:
+                tel.instant(f"device/{p.client_id}", "STALE_REJECT",
+                            now, staleness=p.staleness)
+                tel.counter("cost.energy_j", p.strat.E_cmp,
+                            device=p.client_id, phase="train")
+                tel.counter("cost.energy_j", p.strat.E_com,
+                            device=p.client_id, phase="uplink")
             if orch.staleness_mode == STALE_REQUEUE:
                 requeue(p, now)
             else:
@@ -1025,8 +1156,26 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
             sim.materialize(b, tr, version_params[b.version],
                             fast=use_pool, sub=j.sub_params)
             en += b.energy
+            en_cmp += b.e_cmp
+            en_com += b.e_com
             fl += b.update.flops
             cb += b.update.bits
+            if tel.enabled:
+                tel.span(f"device/{b.client_id}", "train",
+                         b.dispatched_at, b.dispatched_at + b.t_cmp,
+                         version=b.version, staleness=b.staleness,
+                         alpha=b.update.alpha, energy_j=b.e_cmp)
+                tel.span(f"device/{b.client_id}", "uplink",
+                         b.dispatched_at + b.t_cmp,
+                         b.dispatched_at + b.duration,
+                         version=b.version, bits=b.update.bits,
+                         energy_j=b.e_com)
+                tel.counter("cost.energy_j", b.e_cmp,
+                            device=b.client_id, phase="train")
+                tel.counter("cost.energy_j", b.e_com,
+                            device=b.client_id, phase="uplink")
+                tel.counter("cost.comm_bits", b.update.bits,
+                            device=b.client_id, phase="uplink")
             w_b = unnormalized_weight(rc.method, rc.use_aio, b.update,
                                       b.fedhq_level) \
                 * staleness_scales([b.staleness], gamma)[0]
@@ -1045,9 +1194,14 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
         for v in [v for v in version_params if v not in keep]:
             del version_params[v]
         n_agg += 1
+        if tel.enabled:
+            tel.instant("server", "BUFFER_MERGE", now, version=version,
+                        n_updates=len(buffer))
 
-        log = RoundLog(
-            round=n_agg - 1, latency_s=now - last_agg_t, energy_j=en,
+        # fedbuff latency components log as zeros: the inter-merge
+        # interval is an arrival-process statistic, not a critical path
+        log = hist.log_round(
+            n_agg - 1, latency_s=now - last_agg_t, energy_j=en,
             flops=fl, comm_bits=cb,
             mean_alpha=float(np.mean([b.update.alpha for b in buffer])),
             mean_beta=float(np.mean([b.update.beta_realized
@@ -1059,21 +1213,20 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
             n_stale_dropped=n_stale, n_aborted=n_aborted,
             mean_soc=(sim.fleet.battery.mean_soc_frac(now)
                       if sim.fleet.battery is not None else 1.0),
-            t_max_effective=sim.effective_T_max(now))
+            t_max_effective=sim.effective_T_max(now),
+            energy_train_j=en_cmp, energy_uplink_j=en_com)
         done = (orch.max_wallclock_s is None and n_agg >= rc.rounds)
         if (n_agg - 1) % rc.eval_every == 0 or done:
             acc, loss = sim.evaluate(current)
-            log.test_acc = acc
-            log.test_loss = loss
-            hist.best_acc = max(hist.best_acc, acc)
+            hist.log_eval(log, acc, loss)
             if verbose:
                 print(f"[{rc.method}/fedbuff] merge {n_agg:3d} "
                       f"t={now:7.1f}s acc={acc:.3f} loss={loss:.3f} "
                       f"stale={log.mean_staleness:.1f} "
                       f"alpha={log.mean_alpha:.2f}")
-        hist.rounds.append(log)
         buffer = []
         en, fl, cb = 0.0, 0.0, 0.0
+        en_cmp = en_com = 0.0
         n_stale = n_aborted = 0
         last_agg_t = now
         if done:
@@ -1082,9 +1235,7 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
     # final eval so best_acc reflects the last merged model
     if hist.rounds and hist.rounds[-1].test_acc is None:
         acc_, loss = sim.evaluate(current)
-        hist.rounds[-1].test_acc = acc_
-        hist.rounds[-1].test_loss = loss
-        hist.best_acc = max(hist.best_acc, acc_)
+        hist.log_eval(hist.rounds[-1], acc_, loss)
     hist.trace = queue.trace_signature()
     hist.dispatch_log = sim.dispatch_log
     hist.peak_inflight = peak_inflight
@@ -1096,10 +1247,16 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
 def run_orchestrated(run_cfg: FLRunConfig,
                      fleet_cfg: Optional[FleetConfig] = None,
                      orch: Optional[OrchestratorConfig] = None,
-                     verbose: bool = False) -> History:
-    """Run federated training under an arrival/aggregation policy."""
+                     verbose: bool = False,
+                     telemetry=None) -> History:
+    """Run federated training under an arrival/aggregation policy.
+
+    ``telemetry`` is an optional :class:`repro.telemetry.Telemetry`
+    session; when absent (or NULL) the run is bitwise-identical to the
+    uninstrumented runner and allocates nothing on the event path.
+    """
     orch = orch or OrchestratorConfig()
-    sim = Simulation(run_cfg, fleet_cfg)
+    sim = Simulation(run_cfg, fleet_cfg, telemetry=telemetry)
     sim.agg_route = sim.resolve_agg_route(orch.agg_route)
     policy = make_policy(orch, fleet_T_max=sim.fleet_cfg.T_max)
     if not policy.round_based and sim.topo is not None:
@@ -1107,6 +1264,8 @@ def run_orchestrated(run_cfg: FLRunConfig,
             "hierarchical topology needs a round-based policy "
             "(sync/semisync): fedbuff's cross-version stream has no "
             "per-cell round barrier to ship partials at")
-    if policy.round_based:
-        return _run_round_based(sim, policy, orch, verbose)
-    return _run_fedbuff(sim, policy, orch, verbose)
+    runner = _run_round_based if policy.round_based else _run_fedbuff
+    if sim.tel.enabled and sim.tel.jax_profile and sim.tel.out_dir:
+        with profile_trace(sim.tel.out_dir):
+            return runner(sim, policy, orch, verbose)
+    return runner(sim, policy, orch, verbose)

@@ -1,0 +1,33 @@
+"""Observability layer: metrics registry, structured tracing, manifests.
+
+The sensors of the AnycostFL pipeline.  One :class:`Telemetry` session
+per run collects (1) a label-keyed :class:`MetricsRegistry` — counters/
+gauges/histograms over ``device`` / ``cell`` / ``phase`` / ``round``
+dimensions, also the backing store of every ``RoundLog`` — and (2) a
+:class:`TraceSink` turning the simulated discrete-event timeline into
+spans and instants exportable as Perfetto/Chrome-trace JSON and JSONL.
+:mod:`~repro.telemetry.manifest` stamps artifacts with full provenance
+(config, seeds, versions, git sha, trace-signature hash);
+:mod:`~repro.telemetry.profiler` optionally wraps a run in
+``jax.profiler`` for kernel-level host timing.
+
+Disabled (the default) telemetry is :data:`NULL_TELEMETRY`: zero-cost
+no-ops, bitwise-invisible to the seeded simulation.
+"""
+from repro.telemetry.manifest import (REQUIRED_KEYS, build_manifest,
+                                      to_jsonable, trace_signature_hash,
+                                      validate_manifest, write_manifest)
+from repro.telemetry.profiler import profile_trace
+from repro.telemetry.registry import (COUNTER, GAUGE, HISTOGRAM,
+                                      MetricsRegistry)
+from repro.telemetry.session import NULL_TELEMETRY, Telemetry
+from repro.telemetry.trace import Instant, Span, TraceSink
+
+__all__ = [
+    "COUNTER", "GAUGE", "HISTOGRAM", "MetricsRegistry",
+    "TraceSink", "Span", "Instant",
+    "Telemetry", "NULL_TELEMETRY",
+    "build_manifest", "write_manifest", "validate_manifest",
+    "to_jsonable", "trace_signature_hash", "REQUIRED_KEYS",
+    "profile_trace",
+]

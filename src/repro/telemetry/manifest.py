@@ -1,0 +1,173 @@
+"""Run manifests: make every artifact a comparable data point.
+
+A perf JSON without its provenance is a snapshot; with a manifest next
+to it (or embedded in it) it becomes one point on a trajectory that a
+regression harness can diff: *what* ran (full config dataclasses,
+seeds), *on what* (jax/jaxlib/numpy versions, backend, device count,
+platform), *from which code* (git sha, dirty flag), and *what timeline
+it produced* (a stable hash of the event-trace signature, so two
+"identical" runs can be checked for bitwise replay without shipping the
+full trace).
+
+``build_manifest`` never raises on missing context (no git, no jax
+version attribute): absent facts record as ``None`` rather than failing
+a benchmark run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import platform
+import subprocess
+import sys
+import time
+from typing import Any, Optional
+
+MANIFEST_SCHEMA = 1
+
+# keys every manifest carries (CI validates artifacts against this)
+REQUIRED_KEYS = ("schema", "created_at", "jax", "jaxlib", "numpy",
+                 "python", "backend", "git_sha", "config",
+                 "trace_signature_hash")
+
+
+def _git_sha() -> Optional[str]:
+    here = os.path.dirname(os.path.abspath(__file__))
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=here,
+                             capture_output=True, text=True, timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except Exception:
+        pass
+    return None
+
+
+def _git_dirty() -> Optional[bool]:
+    here = os.path.dirname(os.path.abspath(__file__))
+    try:
+        out = subprocess.run(["git", "status", "--porcelain"], cwd=here,
+                             capture_output=True, text=True, timeout=10)
+        if out.returncode == 0:
+            return bool(out.stdout.strip())
+    except Exception:
+        pass
+    return None
+
+
+def to_jsonable(obj: Any):
+    """Recursively reduce configs to JSON-safe structures.
+
+    Dataclasses become dicts, tuples become lists, numpy scalars become
+    python scalars, and anything else falls back to ``repr`` — a
+    manifest must never fail to serialize because a config grew a field.
+    """
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {f.name: to_jsonable(getattr(obj, f.name))
+                for f in dataclasses.fields(obj)}
+    if isinstance(obj, dict):
+        return {str(k): to_jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [to_jsonable(v) for v in obj]
+    if isinstance(obj, (str, int, float, bool, type(None))):
+        return obj
+    item = getattr(obj, "item", None)
+    if callable(item):
+        try:
+            return item()
+        except Exception:
+            pass
+    return repr(obj)
+
+
+def trace_signature_hash(signature) -> Optional[str]:
+    """Stable 128-bit hex digest of an event-trace signature (the tuple
+    from ``EventQueue.trace_signature`` — full or rolling form)."""
+    if signature is None:
+        return None
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr(signature).encode())
+    return h.hexdigest()
+
+
+def build_manifest(run_cfg=None, fleet_cfg=None, orch=None, *,
+                   trace_signature=None, extra: Optional[dict] = None
+                   ) -> dict:
+    """Assemble the provenance record for one run/artifact."""
+    try:
+        import jax
+        jax_version = jax.__version__
+        backend = jax.default_backend()
+        n_devices = len(jax.devices())
+    except Exception:                       # pragma: no cover
+        jax_version = backend = None
+        n_devices = None
+    try:
+        import jaxlib
+        jaxlib_version = getattr(jaxlib, "__version__", None)
+    except Exception:                       # pragma: no cover
+        jaxlib_version = None
+    try:
+        import numpy
+        numpy_version = numpy.__version__
+    except Exception:                       # pragma: no cover
+        numpy_version = None
+    manifest = {
+        "schema": MANIFEST_SCHEMA,
+        "created_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "argv": list(sys.argv),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "jax": jax_version,
+        "jaxlib": jaxlib_version,
+        "numpy": numpy_version,
+        "backend": backend,
+        "n_devices": n_devices,
+        "git_sha": _git_sha(),
+        "git_dirty": _git_dirty(),
+        "config": {
+            "run": to_jsonable(run_cfg) if run_cfg is not None else None,
+            "fleet": to_jsonable(fleet_cfg)
+            if fleet_cfg is not None else None,
+            "orchestrator": to_jsonable(orch) if orch is not None else None,
+        },
+        "seeds": _collect_seeds(run_cfg, fleet_cfg),
+        "trace_signature_hash": trace_signature_hash(trace_signature),
+    }
+    if extra:
+        manifest["extra"] = to_jsonable(extra)
+    return manifest
+
+
+def _collect_seeds(run_cfg, fleet_cfg) -> dict:
+    seeds = {}
+    if run_cfg is not None and hasattr(run_cfg, "seed"):
+        seeds["run"] = run_cfg.seed
+    dyn = getattr(fleet_cfg, "dynamics", None)
+    if dyn is not None:
+        seeds["selection"] = getattr(dyn, "selection_seed", None)
+        avail = getattr(dyn, "availability", None)
+        if avail is not None:
+            seeds["availability"] = getattr(avail, "seed", None)
+    mob = getattr(fleet_cfg, "mobility", None)
+    if mob is not None:
+        seeds["mobility"] = getattr(mob, "seed", None)
+    return seeds
+
+
+def validate_manifest(manifest: dict) -> list[str]:
+    """Missing required keys (empty list = valid)."""
+    if not isinstance(manifest, dict):
+        return list(REQUIRED_KEYS)
+    return [k for k in REQUIRED_KEYS if k not in manifest]
+
+
+def write_manifest(path: str, manifest: dict) -> str:
+    """Write to ``path`` (a ``manifest.json`` inside it if a directory)."""
+    if os.path.isdir(path):
+        path = os.path.join(path, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, default=repr)
+    return path

@@ -1,0 +1,162 @@
+"""Label-keyed metrics registry: counters, gauges, histograms.
+
+One registry instance is the structured backing store of a run's
+realized telemetry.  Every metric is a ``(name, labels)`` pair — labels
+are free-form ``key=value`` dimensions (``device``, ``cell``, ``phase``,
+``round``) — with one of three accumulation semantics:
+
+* **counter** — monotonically accumulating sum (``+=``); energy joules,
+  bits on a wire, handover counts;
+* **gauge** — last-write-wins sample (``=``); per-round means, state of
+  charge, the ``round.*`` fields backing :class:`~repro.train.fl_loop.
+  RoundLog` views;
+* **histogram** — append-only observation list; per-dispatch latencies
+  and anything needing percentiles.
+
+Values are stored verbatim (no float coercion), so a gauge read back via
+:meth:`MetricsRegistry.value` is the exact object that was emitted —
+which is what lets ``RoundLog.from_registry`` materialize a bitwise-
+identical view of the round record.  The registry is pure host-side
+Python over plain dicts: it never touches an RNG stream or a JAX array,
+so emitting into it cannot perturb a seeded simulation.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Iterator, Optional
+
+COUNTER = "counter"
+GAUGE = "gauge"
+HISTOGRAM = "histogram"
+
+_KINDS = (COUNTER, GAUGE, HISTOGRAM)
+
+
+def _label_key(labels: dict) -> tuple:
+    """Canonical hashable identity of a label set (order-insensitive)."""
+    return tuple(sorted(labels.items()))
+
+
+class MetricsRegistry:
+    """In-memory metric store keyed by ``(name, sorted(labels))``."""
+
+    def __init__(self):
+        # name -> {label_key -> value | list}
+        self._metrics: dict[str, dict[tuple, Any]] = {}
+        self._kinds: dict[str, str] = {}
+
+    def __len__(self) -> int:
+        return sum(len(series) for series in self._metrics.values())
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    # ------------------------------------------------------------ emission
+
+    def _series(self, name: str, kind: str) -> dict:
+        have = self._kinds.get(name)
+        if have is None:
+            self._kinds[name] = kind
+            self._metrics[name] = {}
+        elif have != kind:
+            raise ValueError(
+                f"metric {name!r} already registered as {have}; "
+                f"cannot re-emit as {kind}")
+        return self._metrics[name]
+
+    def counter(self, name: str, value: float = 1.0, **labels) -> None:
+        """Accumulate ``value`` into the counter at ``(name, labels)``."""
+        series = self._series(name, COUNTER)
+        key = _label_key(labels)
+        series[key] = series.get(key, 0.0) + value
+
+    def gauge(self, name: str, value, **labels) -> None:
+        """Set the gauge at ``(name, labels)`` (last write wins)."""
+        self._series(name, GAUGE)[_label_key(labels)] = value
+
+    def observe(self, name: str, value, **labels) -> None:
+        """Append one observation to the histogram at ``(name, labels)``."""
+        series = self._series(name, HISTOGRAM)
+        series.setdefault(_label_key(labels), []).append(value)
+
+    # ------------------------------------------------------------- queries
+
+    def kind(self, name: str) -> Optional[str]:
+        return self._kinds.get(name)
+
+    def value(self, name: str, **labels):
+        """The stored value at exactly ``(name, labels)`` (None if absent).
+
+        Gauges/counters return the scalar; histograms the observation
+        list."""
+        series = self._metrics.get(name)
+        if series is None:
+            return None
+        return series.get(_label_key(labels))
+
+    def total(self, name: str, **labels) -> float:
+        """Sum over every entry of ``name`` whose labels are a superset of
+        the given filter (counters/gauges sum values; histograms sum
+        observations)."""
+        out = 0.0
+        for key, value in self._metrics.get(name, {}).items():
+            have = dict(key)
+            if all(have.get(k) == v for k, v in labels.items()):
+                out += sum(value) if isinstance(value, list) else value
+        return out
+
+    def series(self, name: str, over: str, **labels) -> list[tuple]:
+        """``[(label_value, value), ...]`` of ``name`` swept over the
+        ``over`` label, filtered to entries matching ``labels`` exactly on
+        the filter keys; sorted by the swept label value."""
+        rows = []
+        for key, value in self._metrics.get(name, {}).items():
+            have = dict(key)
+            if over not in have:
+                continue
+            if all(have.get(k) == v for k, v in labels.items()):
+                rows.append((have[over], value))
+        return sorted(rows, key=lambda kv: kv[0])
+
+    def label_values(self, name: str, label: str) -> list:
+        """Sorted distinct values the ``label`` dimension takes on
+        ``name``."""
+        vals = {dict(key)[label] for key in self._metrics.get(name, {})
+                if label in dict(key)}
+        return sorted(vals)
+
+    def names(self) -> list[str]:
+        return sorted(self._metrics)
+
+    # -------------------------------------------------------------- export
+
+    def records(self) -> Iterator[dict]:
+        """One flat dict per stored entry (JSONL-ready, sorted by name
+        then labels — deterministic across runs)."""
+        for name in sorted(self._metrics):
+            kind = self._kinds[name]
+            for key in sorted(self._metrics[name],
+                              key=lambda k: repr(k)):
+                yield {"name": name, "kind": kind,
+                       "labels": dict(key),
+                       "value": self._metrics[name][key]}
+
+    def to_jsonl(self, path: str) -> int:
+        """Write every record as one JSON line; returns the line count."""
+        n = 0
+        with open(path, "w") as f:
+            for rec in self.records():
+                f.write(json.dumps(rec, default=_jsonable) + "\n")
+                n += 1
+        return n
+
+
+def _jsonable(obj):
+    """Fallback serializer: numpy scalars -> python, else repr."""
+    item = getattr(obj, "item", None)
+    if callable(item):
+        try:
+            return item()
+        except Exception:
+            pass
+    return repr(obj)

@@ -57,6 +57,21 @@ class FLRunConfig:
     use_planner: bool = True
 
 
+# the registry namespace backing RoundLog views: every field of a round
+# record is gauged as ``round.<field>`` with a ``round=<idx>`` label, and
+# RoundLog.from_registry materializes the dataclass by reading those
+# exact stored objects back (bitwise-identical round trip)
+ROUND_METRIC_PREFIX = "round."
+
+# the cost-attribution phases of the AnycostFL pipeline.  ``shrink``
+# (EMS sub-model extraction) and ``compress`` (FGC encode) are explicit
+# zeros under the paper's Eq. 6-9 cost model — their compute rides
+# inside the train term and is not charged separately — but the phase
+# axis carries them so a finer cost model can populate them without a
+# schema change.
+PHASES = ("shrink", "train", "compress", "uplink", "backhaul")
+
+
 @dataclasses.dataclass
 class RoundLog:
     round: int
@@ -88,6 +103,57 @@ class RoundLog:
     max_cell_occupancy: int = 0   # most devices bound to any one cell
     # battery-aware deadline adaptation (equals fleet T_max when inactive)
     t_max_effective: float = 0.0  # T_max handed to the P4 solver this round
+    # ---- per-phase cost attribution (telemetry subsystem).  Energy
+    # components sum to energy_j; latency components sum to latency_s
+    # (round-based policies; fedbuff's inter-merge interval has no
+    # critical-path decomposition and logs zeros); comm_bits is entirely
+    # uplink (backhaul traffic is the separate backhaul_bits field).
+    energy_train_j: float = 0.0    # sum of client E_cmp (+ churn pro-rata)
+    energy_uplink_j: float = 0.0   # sum of client E_com (+ churn pro-rata)
+    energy_backhaul_j: float = 0.0  # edge->cloud shipping tariff
+    latency_train_s: float = 0.0   # critical path: slowest cell's T_cmp
+    latency_uplink_s: float = 0.0  # critical path: uplink + barrier wait
+    latency_backhaul_s: float = 0.0  # critical path: partial shipping
+
+    @classmethod
+    def from_registry(cls, registry, round_idx: int) -> "RoundLog":
+        """Materialize the round record as a view over the registry.
+
+        Reads back the exact objects gauged under
+        ``round.<field>{round=round_idx}`` — the dataclass API is
+        preserved and the values are bitwise-identical to what the
+        runner emitted; absent fields keep their defaults.
+        """
+        kw = {}
+        for f in dataclasses.fields(cls):
+            if f.name == "round":
+                continue
+            v = registry.value(ROUND_METRIC_PREFIX + f.name,
+                               round=round_idx)
+            if v is not None:
+                kw[f.name] = v
+        return cls(round=round_idx, **kw)
+
+    def phase_energy(self) -> dict:
+        """``{phase: joules}`` over the full phase axis (sums to
+        energy_j)."""
+        return {"shrink": 0.0, "train": self.energy_train_j,
+                "compress": 0.0, "uplink": self.energy_uplink_j,
+                "backhaul": self.energy_backhaul_j}
+
+    def phase_latency(self) -> dict:
+        """``{phase: seconds}`` of the round's critical path (sums to
+        latency_s for round-based policies)."""
+        return {"shrink": 0.0, "train": self.latency_train_s,
+                "compress": 0.0, "uplink": self.latency_uplink_s,
+                "backhaul": self.latency_backhaul_s}
+
+    def phase_comm(self) -> dict:
+        """``{phase: bits}``: comm_bits is all uplink; backhaul traffic
+        is accounted separately (backhaul_bits rides the edge->cloud
+        link, not the wireless uplink the paper's comm budget binds)."""
+        return {"shrink": 0.0, "train": 0.0, "compress": 0.0,
+                "uplink": self.comm_bits, "backhaul": 0.0}
 
 
 @dataclasses.dataclass
@@ -102,6 +168,29 @@ class History:
     # fedbuff: most concurrent in-flight clients observed (audits the
     # --max-inflight participation throttle)
     peak_inflight: int = 0
+    # the MetricsRegistry backing every RoundLog in ``rounds`` (each row
+    # is a from_registry view over it); always present after a run
+    registry: Optional[Any] = None
+
+    def log_round(self, round_idx: int, **fields) -> "RoundLog":
+        """Gauge every field into the registry, then append + return the
+        materialized :meth:`RoundLog.from_registry` view."""
+        for name, value in fields.items():
+            self.registry.gauge(ROUND_METRIC_PREFIX + name, value,
+                                round=round_idx)
+        log = RoundLog.from_registry(self.registry, round_idx)
+        self.rounds.append(log)
+        return log
+
+    def log_eval(self, log: "RoundLog", acc: float, loss: float) -> None:
+        """Attach an eval to a round record (registry + view + best)."""
+        self.registry.gauge(ROUND_METRIC_PREFIX + "test_acc", acc,
+                            round=log.round)
+        self.registry.gauge(ROUND_METRIC_PREFIX + "test_loss", loss,
+                            round=log.round)
+        log.test_acc = acc
+        log.test_loss = loss
+        self.best_acc = max(self.best_acc, acc)
 
     def cumulative(self, field: str) -> np.ndarray:
         return np.cumsum([getattr(r, field) for r in self.rounds])
@@ -122,17 +211,40 @@ class History:
         return None
 
     def to_rows(self) -> list[dict]:
+        """Full per-round records for benchmark artifacts.
+
+        Every ``RoundLog`` field is emitted (the pre-telemetry version
+        silently dropped the orchestrator/fleet/topology/mobility
+        extensions), plus the cumulative cost columns the paper's
+        cost-to-accuracy tables read.
+        """
         out = []
         for r, (ct, ce, cf, cb) in zip(
                 self.rounds, zip(self.cumulative("latency_s"),
                                  self.cumulative("energy_j"),
                                  self.cumulative("flops"),
                                  self.cumulative("comm_bits"))):
-            out.append(dict(round=r.round, cum_latency_s=float(ct),
-                            cum_energy_j=float(ce), cum_flops=float(cf),
-                            cum_comm_bits=float(cb), test_acc=r.test_acc,
-                            test_loss=r.test_loss))
+            row = dataclasses.asdict(r)
+            row.update(cum_latency_s=float(ct), cum_energy_j=float(ce),
+                       cum_flops=float(cf), cum_comm_bits=float(cb))
+            out.append(row)
         return out
+
+    def phase_totals(self) -> dict:
+        """Whole-run per-phase attribution: ``{metric: {phase: total}}``
+        over energy (J), latency (s, round-based critical path), and
+        comm (bits)."""
+        totals = {"energy_j": dict.fromkeys(PHASES, 0.0),
+                  "latency_s": dict.fromkeys(PHASES, 0.0),
+                  "comm_bits": dict.fromkeys(PHASES, 0.0)}
+        for r in self.rounds:
+            for phase, v in r.phase_energy().items():
+                totals["energy_j"][phase] += v
+            for phase, v in r.phase_latency().items():
+                totals["latency_s"][phase] += v
+            for phase, v in r.phase_comm().items():
+                totals["comm_bits"][phase] += v
+        return totals
 
 
 def flops_per_sample(arch_cfg) -> float:
@@ -176,10 +288,10 @@ def _device_batches(rng, x, y, idx, batch_size: int, tau: float):
 
 
 def run_fl(run_cfg: FLRunConfig, fleet_cfg: Optional[FleetConfig] = None,
-           verbose: bool = False) -> History:
+           verbose: bool = False, telemetry=None) -> History:
     """Synchronous federated training (the paper's lock-step rounds)."""
     from repro.orchestrator.policies import OrchestratorConfig
     from repro.orchestrator.runner import run_orchestrated
     return run_orchestrated(run_cfg, fleet_cfg,
                             OrchestratorConfig(policy="sync"),
-                            verbose=verbose)
+                            verbose=verbose, telemetry=telemetry)
