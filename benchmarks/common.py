@@ -23,6 +23,108 @@ from repro.train.fl_loop import run_fl, FLRunConfig  # noqa: E402
 
 CACHE_DIR = "experiments/fl"
 
+# manifest-keyed benchmark trajectory files (BENCH_<section>.json) live
+# at the repo root so the perf history is a tracked, diffable file set;
+# BENCH_TRAJECTORY_ROOT redirects them (tests, scratch runs)
+TRAJECTORY_SCHEMA = 1
+TRAJECTORY_KEEP = 20
+
+
+def trajectory_root() -> str:
+    return os.environ.get(
+        "BENCH_TRAJECTORY_ROOT",
+        os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+
+def trajectory_path(section: str, root: str | None = None) -> str:
+    return os.path.join(root or trajectory_root(),
+                        f"BENCH_{section}.json")
+
+
+def load_trajectory(section: str, root: str | None = None) -> dict | None:
+    """The section's trajectory file, or None when absent/unreadable."""
+    path = trajectory_path(section, root)
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if not isinstance(data, dict) or data.get("schema") \
+            != TRAJECTORY_SCHEMA:
+        return None
+    return data
+
+
+def _write_trajectory(section: str, traj: dict, root: str | None) -> None:
+    path = trajectory_path(section, root)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(traj, f, indent=1, sort_keys=False)
+        f.write("\n")
+
+
+def compact_trajectory(traj: dict, keep: int = TRAJECTORY_KEEP) -> dict:
+    """Bound the per-scale record history to the newest ``keep`` entries
+    (pinned baselines live outside ``records`` and are never dropped)."""
+    by_scale: dict[str, list] = {}
+    kept = []
+    for rec in reversed(traj.get("records", [])):
+        bucket = by_scale.setdefault(rec.get("scale", "fast"), [])
+        if len(bucket) < keep:
+            bucket.append(rec)
+            kept.append(rec)
+    traj["records"] = list(reversed(kept))
+    return traj
+
+
+def append_trajectory(section: str, metrics: dict, *, scale: str,
+                      wall_s: float, manifest: dict | None = None,
+                      root: str | None = None,
+                      keep: int = TRAJECTORY_KEEP) -> dict:
+    """Append one manifest-keyed record to ``BENCH_<section>.json``.
+
+    Every ``benchmarks.run`` invocation lands exactly one record per
+    executed section: the provenance manifest, the scalar metrics the
+    section's spec extracted from its artifact, the scale, and the wall
+    time.  Returns the appended record.
+    """
+    if manifest is None:
+        manifest = build_manifest(extra={"section": section})
+    record = {"scale": scale, "wall_s": round(float(wall_s), 3),
+              "metrics": metrics, "manifest": manifest}
+    traj = load_trajectory(section, root) or {
+        "schema": TRAJECTORY_SCHEMA, "section": section,
+        "baseline": {}, "records": []}
+    traj["records"].append(record)
+    compact_trajectory(traj, keep)
+    _write_trajectory(section, traj, root)
+    return record
+
+
+def latest_record(traj: dict, scale: str | None = None) -> dict | None:
+    """Newest record (of the given scale, when one is named)."""
+    for rec in reversed(traj.get("records", [])):
+        if scale is None or rec.get("scale") == scale:
+            return rec
+    return None
+
+
+def pin_baseline(section: str, scale: str,
+                 root: str | None = None) -> dict | None:
+    """Re-pin the scale's baseline to its newest record (the
+    ``gate --update-baseline`` path).  Returns the pinned record."""
+    traj = load_trajectory(section, root)
+    if traj is None:
+        return None
+    rec = latest_record(traj, scale)
+    if rec is None:
+        return None
+    traj.setdefault("baseline", {})[scale] = rec
+    _write_trajectory(section, traj, root)
+    return rec
+
 SCALES = {
     "fast": dict(n_devices=8, rounds=15, n_train=768, n_test=256,
                  eval_every=3),

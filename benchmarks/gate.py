@@ -1,0 +1,219 @@
+"""Benchmark regression gate: newest trajectory record vs baseline.
+
+``PYTHONPATH=src python -m benchmarks.gate [sections...]`` loads each
+section's ``BENCH_<section>.json`` trajectory (written by
+``benchmarks.run``), takes the newest record at ``--scale``, and checks
+it against the committed baseline record and the declared references in
+``benchmarks.specs`` — printing a per-metric verdict table (value,
+baseline, delta, tolerance, PASS/FAIL/SKIP) and exiting nonzero on any
+regression.
+
+A record whose provenance manifest is missing or invalid is a **FAIL**,
+not a silent skip (the artifact-manifest check that used to live only in
+``scripts/validate_telemetry.py`` is part of the gate path); pass
+``--artifacts [GLOB]`` to additionally manifest-check the benchmark
+artifacts under ``experiments/fl/``.
+
+``--update-baseline`` re-pins each gated section's baseline to its
+newest record — the intentional-change workflow: run the benchmark,
+eyeball the table, re-pin, commit the BENCH file.
+"""
+from __future__ import annotations
+
+import argparse
+import glob as glob_mod
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import common  # noqa: E402
+from benchmarks.specs import SPECS, spec_for  # noqa: E402
+from repro.telemetry import validate_manifest  # noqa: E402
+from repro.telemetry.references import (FAIL, PASS, SKIP,  # noqa: E402
+                                        Reference, Verdict, check_record)
+
+EXIT_OK = 0
+EXIT_REGRESSION = 1
+EXIT_USAGE = 2
+
+
+def artifact_manifest_errors(pattern: str) -> list:
+    """``[(path, problem), ...]`` over every artifact matching the glob
+    (empty list = all carry complete manifests; a non-matching glob is
+    itself a problem — benchmarks that never ran can't be validated)."""
+    paths = sorted(glob_mod.glob(pattern))
+    if not paths:
+        return [(pattern, "no artifacts match")]
+    problems = []
+    for path in paths:
+        try:
+            with open(path) as f:
+                art = json.load(f)
+        except (OSError, ValueError) as e:
+            problems.append((path, f"unreadable: {e}"))
+            continue
+        if not isinstance(art, dict) or "manifest" not in art:
+            problems.append((path, "no embedded manifest"))
+            continue
+        missing = validate_manifest(art["manifest"])
+        if missing:
+            problems.append((path, f"manifest missing keys {missing}"))
+    return problems
+
+
+def _tolerance_str(ref: Reference) -> str:
+    parts = [ref.direction.replace("_is_better", "")]
+    if ref.rel_tol:
+        parts.append(f"rel {ref.rel_tol:g}")
+    if ref.abs_tol:
+        parts.append(f"abs {ref.abs_tol:g}")
+    if ref.baseline is not None:
+        parts.append(f"pin {ref.baseline:g}")
+    return " ".join(parts)
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float) and (abs(v) >= 1e5 or
+                                 (v != 0 and abs(v) < 1e-3)):
+        return f"{v:.4g}"
+    return f"{v:.4f}" if isinstance(v, float) else str(v)
+
+
+def gate_section(section: str, *, scale: str, root=None,
+                 update_baseline: bool = False) -> list:
+    """Check one section's newest record; returns its verdicts (printed
+    as a table on the way)."""
+    spec = spec_for(section)
+    traj = common.load_trajectory(section, root)
+    print(f"\n===== gate: {section} ({scale}) =====")
+    if traj is None:
+        print(f"SKIP: no trajectory file "
+              f"{common.trajectory_path(section, root)} "
+              f"(run `python -m benchmarks.run {section}` first)")
+        return [Verdict("trajectory", SKIP, note="no trajectory file")]
+    record = common.latest_record(traj, scale)
+    if record is None:
+        print(f"SKIP: no {scale!r}-scale records in trajectory")
+        return [Verdict("trajectory", SKIP,
+                        note=f"no {scale} records")]
+
+    verdicts = []
+    # manifest validation is part of the gate: an unprovenanced record
+    # is not a comparable data point and fails outright
+    missing = validate_manifest(record.get("manifest"))
+    if missing:
+        verdicts.append(Verdict("manifest", FAIL,
+                                note=f"missing keys {missing}"))
+        print(f"  FAIL    manifest: record manifest missing keys "
+              f"{missing}")
+    sha = str((record.get("manifest") or {}).get("git_sha"))[:10]
+    created = (record.get("manifest") or {}).get("created_at")
+    print(f"record: created={created} sha={sha} "
+          f"wall={record.get('wall_s')}s "
+          f"metrics={len(record.get('metrics', {}))}")
+
+    if update_baseline:
+        pinned = common.pin_baseline(section, scale, root)
+        print(f"baseline re-pinned to newest record "
+              f"(created={(pinned.get('manifest') or {}).get('created_at')})")
+        record = pinned
+        baseline = pinned          # the traj dict in memory is now stale
+    else:
+        baseline = (traj.get("baseline") or {}).get(scale)
+    baseline_metrics = None if baseline is None \
+        else baseline.get("metrics", {})
+    verdicts += check_record(record.get("metrics", {}), baseline_metrics,
+                             list(spec.references))
+
+    if not spec.references:
+        print("no declared references for this section "
+              "(record appended for history only)")
+    else:
+        print(f"  {'VERDICT':7s} {'metric':42s} {'value':>12s} "
+              f"{'baseline':>12s} {'delta':>10s}  tolerance")
+        refs_by_path = {r.path: r for r in spec.references}
+        for v in verdicts:
+            if v.path == "manifest":
+                continue           # already printed above the table
+            ref = refs_by_path.get(v.path)
+            tol = _tolerance_str(ref) if ref is not None else "-"
+            delta = _fmt(v.delta) if v.delta is not None else "-"
+            line = (f"  {v.status:7s} {v.path:42s} {_fmt(v.value):>12s} "
+                    f"{_fmt(v.baseline):>12s} {delta:>10s}  {tol}")
+            if v.note:
+                line += f"  [{v.note}]"
+            print(line)
+    return verdicts
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.gate", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("sections", nargs="*",
+                    help="sections to gate (default: every section with "
+                         "a trajectory file and declared references)")
+    ap.add_argument("--scale", default=None, choices=["fast", "full"],
+                    help="record scale to compare (default: BENCH_SCALE "
+                         "env or fast)")
+    ap.add_argument("--root", default=None,
+                    help="directory holding BENCH_*.json (default: repo "
+                         "root / BENCH_TRAJECTORY_ROOT)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="re-pin each gated section's baseline to its "
+                         "newest record")
+    ap.add_argument("--artifacts", nargs="?", const="experiments/fl/*.json",
+                    default=None, metavar="GLOB",
+                    help="also manifest-check benchmark artifacts "
+                         "(default glob: experiments/fl/*.json)")
+    args = ap.parse_args(argv)
+    scale = args.scale or os.environ.get("BENCH_SCALE", "fast")
+
+    sections = args.sections
+    if not sections:
+        sections = [s for s in SPECS
+                    if SPECS[s].references
+                    and common.load_trajectory(s, args.root) is not None]
+        if not sections:
+            print("nothing to gate: no BENCH_*.json trajectories found "
+                  f"under {args.root or common.trajectory_root()}")
+            return EXIT_USAGE
+    unknown = [s for s in sections if s not in SPECS]
+    if unknown:
+        print(f"unknown sections {unknown}; expected one of "
+              f"{sorted(SPECS)}")
+        return EXIT_USAGE
+
+    all_verdicts = []
+    for section in sections:
+        all_verdicts += gate_section(
+            section, scale=scale, root=args.root,
+            update_baseline=args.update_baseline)
+
+    artifact_problems = []
+    if args.artifacts:
+        artifact_problems = artifact_manifest_errors(args.artifacts)
+        print(f"\n===== gate: artifact manifests ({args.artifacts}) =====")
+        if artifact_problems:
+            for path, problem in artifact_problems:
+                print(f"  FAIL    {path}: {problem}")
+        else:
+            print("  PASS    every artifact embeds a complete manifest")
+
+    n = {s: sum(1 for v in all_verdicts if v.status == s)
+         for s in (PASS, FAIL, SKIP)}
+    print(f"\ngate: {n[PASS]} pass, {n[FAIL]} fail, {n[SKIP]} skip"
+          + (f", {len(artifact_problems)} artifact problems"
+             if args.artifacts else ""))
+    if n[FAIL] or artifact_problems:
+        return EXIT_REGRESSION
+    return EXIT_OK
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -42,6 +42,7 @@ import numpy as np  # noqa: E402
 
 from benchmarks.common import (CACHE_DIR, load_artifact,  # noqa: E402
                                write_artifact)
+from benchmarks.hier_scaling import first_tta_s  # noqa: E402
 from repro.core import aggregation as A  # noqa: E402
 from repro.mobility import HandoverConfig, MobilityConfig  # noqa: E402
 from repro.orchestrator import (OrchestratorConfig,  # noqa: E402
@@ -78,6 +79,7 @@ def _row(name: str, hist) -> dict:
         "n_handovers": hist.total_handovers(),
         "max_cell_occupancy": int(max(r.max_cell_occupancy
                                       for r in rounds)),
+        "first_tta_s": first_tta_s(hist, ACC_TARGETS),
         "time_to_acc_s": {f"{t:.2f}": hist.time_to_acc(t)
                           for t in ACC_TARGETS},
     }
@@ -185,7 +187,8 @@ def main(seed: int = 0) -> dict:
     result = None
     cached = load_artifact(path)
     if cached is not None and "handover" in cached \
-            and "balance" in cached and "memory" in cached:
+            and "balance" in cached and "memory" in cached \
+            and "first_tta_s" in cached["handover"][0]:
         result = cached
     if result is None:
         t0 = time.time()

@@ -87,7 +87,7 @@ def main():
               f"bottlenecks: "
               f"{ {b: sum(1 for r in rows if r['roofline']['bottleneck'] == b) for b in ('compute', 'memory', 'collective')} }")
     print(markdown_table("single"))
-    return 0
+    return {mesh: summary(mesh) for mesh in ("single", "multi")}
 
 
 if __name__ == "__main__":

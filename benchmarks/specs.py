@@ -1,0 +1,158 @@
+"""Declarative perf specs: the scalar metrics each benchmark section
+emits, with typed regression references.
+
+One :class:`SectionSpec` per ``benchmarks.run`` section.  The spec's
+references name dotted paths into the **artifact dict the section's
+``main()`` returns** (never parsed from stdout); ``extract`` pulls those
+scalars out, ``benchmarks.run`` appends them to the section's
+``BENCH_<section>.json`` trajectory, and ``benchmarks.gate`` checks the
+newest record against the pinned baseline under each reference's
+``{direction, rel_tol, abs_tol}`` band.
+
+Two kinds of reference coexist:
+
+* **trajectory references** (``baseline=None``) — compared against the
+  committed baseline record; tolerances absorb cross-platform jitter
+  (simulated metrics are deterministic per seed, so their bands are
+  tight; host timings get wide ones);
+* **absolute contracts** (``baseline=<value>``) — machine-checked
+  invariants that hold regardless of history: telemetry-overhead bytes
+  == 0, int8 payload ratio > 3.9, streaming peak flat in client count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.telemetry.references import (EXACT, HIGHER, LOWER,  # noqa: E402
+                                        Reference, as_scalar,
+                                        extract_path)
+
+
+@dataclasses.dataclass(frozen=True)
+class SectionSpec:
+    """The gateable surface of one benchmark section."""
+
+    section: str
+    references: tuple = ()
+
+    def extract(self, result) -> dict:
+        """``{path: scalar}`` for every declared reference found in the
+        section's returned artifact (missing paths are simply absent —
+        the gate reports them as SKIP, never a crash)."""
+        metrics = {}
+        for ref in self.references:
+            v = as_scalar(extract_path(result, ref.path))
+            if v is not None:
+                metrics[ref.path] = v
+        return metrics
+
+
+# host-side timing jitter band for micro-benchmarks on shared CI runners
+_TIMING = dict(direction=LOWER, rel_tol=1.0)
+# simulated quantities are deterministic per seed; the band only needs
+# to absorb numerics drift across jax/jaxlib versions
+_SIM_COST = dict(direction=LOWER, rel_tol=0.25)
+_SIM_ACC = dict(direction=HIGHER, abs_tol=0.05)
+
+
+SPECS: dict[str, SectionSpec] = {}
+
+
+def _spec(section: str, *references: Reference) -> None:
+    SPECS[section] = SectionSpec(section, tuple(references))
+
+
+_spec(
+    "hier_scaling",
+    # the O(1)-memory claims, as absolute contracts
+    Reference("streaming_peak_constant", direction=EXACT, baseline=1.0,
+              note="streaming peak must stay flat in client count"),
+    Reference("donated_in_place", direction=EXACT, baseline=1.0,
+              note="donated absorb must reuse its buffers"),
+    Reference("telemetry_overhead.telemetry_alloc_bytes",
+              direction=EXACT, baseline=0.0, unit="B",
+              note="disabled telemetry allocates nothing"),
+    Reference("codec.int8.ratio_vs_f32", direction=HIGHER, baseline=3.9,
+              note="int8 backhaul payload ~4x smaller than f32"),
+    Reference("codec.int8.within_grid", direction=EXACT, baseline=1.0),
+    # trajectory references against the pinned baseline record
+    Reference("memory.-1.streaming_peak_bytes", direction=LOWER,
+              rel_tol=0.05, unit="B",
+              note="largest-fleet streaming aggregation peak"),
+    Reference("batched_growth_x", direction=HIGHER, rel_tol=0.2),
+    Reference("tta.1.best_acc", **_SIM_ACC),
+    Reference("tta.2.backhaul_mb", direction=LOWER, rel_tol=0.1,
+              unit="MB", note="int8 hierarchy backhaul traffic"),
+    Reference("tta.1.first_tta_s", **_SIM_COST, unit="s"),
+    Reference("dispatch_p95_s", **_SIM_COST, unit="s",
+              note="p95 dispatch->arrival flight time (hier run)"),
+    Reference("phase_energy_j.train", **_SIM_COST, unit="J"),
+    Reference("phase_energy_j.uplink", **_SIM_COST, unit="J"),
+    Reference("phase_energy_j.backhaul", **_SIM_COST, unit="J"),
+)
+
+_spec(
+    "mobility_handover",
+    Reference("memory.peak_constant", direction=EXACT, baseline=1.0,
+              note="edge streaming peak flat under handover churn"),
+    Reference("memory.absorb_in_place", direction=EXACT, baseline=1.0),
+    Reference("handover.2.n_handovers", direction=HIGHER, baseline=1.0,
+              note="nearest policy must actually re-home devices"),
+    Reference("handover.2.best_acc", **_SIM_ACC),
+    Reference("handover.2.mean_round_energy_j", **_SIM_COST, unit="J"),
+    Reference("handover.2.first_tta_s", **_SIM_COST, unit="s",
+              note="mobile-nearest time to first accuracy milestone"),
+    Reference("balance.1.max_cell_occupancy", direction=LOWER,
+              abs_tol=1.0, note="load-balanced peak cell occupancy"),
+)
+
+_spec(
+    "kernel_micro",
+    Reference("aio_aggregate_us", **_TIMING, unit="us"),
+    Reference("aio_absorb_us", **_TIMING, unit="us",
+              note="donated streaming absorb, per call"),
+    Reference("kernel_l2_us", **_TIMING, unit="us"),
+    Reference("quantize_us", **_TIMING, unit="us"),
+)
+
+_spec(
+    "async_modes",
+    Reference("0.best_acc", **_SIM_ACC, note="sync policy"),
+    Reference("0.energy_j", **_SIM_COST, unit="J"),
+    Reference("2.mean_staleness", direction=LOWER, rel_tol=0.5,
+              note="fedbuff mean admitted version lag"),
+)
+
+_spec(
+    "selection_policies",
+    Reference("3.best_acc", **_SIM_ACC, note="gain-aware selection"),
+    Reference("3.energy_j", **_SIM_COST, unit="J"),
+)
+
+_spec(
+    "schedule_solver",
+    Reference("max_rel_gap", direction=LOWER, baseline=0.08,
+              note="closed form vs grid optimum"),
+    Reference("mean_solver_us", **_TIMING, unit="us"),
+)
+
+_spec(
+    "table1_cost_to_acc",
+    Reference("0.best_acc", **_SIM_ACC, note="anycostfl row"),
+)
+
+# sections with no gateable scalars yet still land trajectory records
+# (manifest + wall time) so their history is tracked from day one
+for _section in ("fig1_breakdown", "lemma1_divergence",
+                 "theorem2_convergence", "roofline_report",
+                 "fig4_learning_curves", "fig5a_ablation",
+                 "fig5bc_heterogeneity", "fig5d_submodels"):
+    _spec(_section)
+
+
+def spec_for(section: str) -> SectionSpec:
+    return SPECS.get(section, SectionSpec(section))

@@ -75,15 +75,18 @@ def run(alpha: float, beta: float, rounds=40, seed=0):
 def main():
     print("alpha,beta,gain,empirical_Z,bound_Z,holds")
     ok = True
+    rows = []
     for alpha, beta in ((1.0, 1.0), (1.0, 0.0666), (0.7, 0.05),
                         (0.5, 0.03)):
         emp, bound, final = run(alpha, beta)
         holds = emp <= bound + 0.02
         ok &= holds
+        rows.append({"alpha": alpha, "beta": beta, "empirical_Z": emp,
+                     "bound_Z": bound, "holds": holds})
         print(f"{alpha},{beta},{alpha ** 4 * beta:.4f},{emp:.4f},"
               f"{bound:.4f},{holds}")
     assert ok, "empirical contraction exceeded the Theorem-2 bound"
-    return 0
+    return rows
 
 
 if __name__ == "__main__":

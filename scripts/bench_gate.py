@@ -1,0 +1,16 @@
+#!/usr/bin/env python
+"""Thin wrapper: ``scripts/bench_gate.py`` == ``python -m benchmarks.gate``.
+
+Keeps the gate invokable from a bare checkout (no PYTHONPATH juggling):
+``python scripts/bench_gate.py --scale fast --artifacts``.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.gate import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -28,6 +28,7 @@ import os
 import sys
 import tempfile
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.telemetry import validate_manifest  # noqa: E402
@@ -103,19 +104,17 @@ def validate_bundle(out_dir: str) -> None:
 
 
 def validate_artifacts(pattern: str) -> None:
-    paths = sorted(glob.glob(pattern))
-    if not paths:
-        fail(f"no artifacts match {pattern!r}")
-    for path in paths:
-        with open(path) as f:
-            art = json.load(f)
-        if not isinstance(art, dict) or "manifest" not in art:
-            fail(f"{path}: no embedded manifest")
-        missing = validate_manifest(art["manifest"])
-        if missing:
-            fail(f"{path}: manifest missing keys {missing}")
-        print(f"OK artifact {path} "
-              f"(sha={str(art['manifest']['git_sha'])[:8]})")
+    """Artifact manifest check — the single implementation lives in the
+    gate path (``benchmarks.gate.artifact_manifest_errors``), so a bad
+    manifest fails CI through *both* entry points identically."""
+    from benchmarks.gate import artifact_manifest_errors
+    problems = artifact_manifest_errors(pattern)
+    if problems:
+        for path, problem in problems:
+            print(f"FAIL: {path}: {problem}")
+        raise SystemExit(1)
+    for path in sorted(glob.glob(pattern)):
+        print(f"OK artifact {path}")
 
 
 def tiny_run(out_dir: str) -> None:

@@ -773,6 +773,11 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
                             sub=subs.get(p.alpha))
             p.dispatched_at = t_wall
             p.completes_at = t_wall + p.duration
+            # dispatch->arrival flight time goes to the always-live
+            # registry (like the round.* gauges), so p95 dispatch
+            # latency is queryable/gateable without a telemetry session
+            sim.registry.observe("dispatch.latency_s", p.duration,
+                                 round=t)
             queue.push(p.completes_at, ev_mod.COMPLETE, p.client_id, p)
             en += p.energy
             en_cmp += p.e_cmp
@@ -951,6 +956,8 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
         i = p.client_id
         inflight_version[i] = p.version
         peak_inflight = max(peak_inflight, len(inflight_version))
+        sim.registry.observe("dispatch.latency_s", p.completes_at - now,
+                             version=p.version)
         t_off = sim.fleet.next_departure(i, now)
         if t_off < p.completes_at:
             queue.push(t_off, ev_mod.CHURN, i, p)

@@ -18,6 +18,10 @@ from repro.telemetry.manifest import (REQUIRED_KEYS, build_manifest,
                                       to_jsonable, trace_signature_hash,
                                       validate_manifest, write_manifest)
 from repro.telemetry.profiler import profile_trace
+from repro.telemetry.references import (DIRECTIONS, EXACT, FAIL, HIGHER,
+                                        LOWER, PASS, SKIP, Reference,
+                                        Verdict, check_record,
+                                        check_reference, extract_path)
 from repro.telemetry.registry import (COUNTER, GAUGE, HISTOGRAM,
                                       MetricsRegistry)
 from repro.telemetry.session import NULL_TELEMETRY, Telemetry
@@ -30,4 +34,7 @@ __all__ = [
     "build_manifest", "write_manifest", "validate_manifest",
     "to_jsonable", "trace_signature_hash", "REQUIRED_KEYS",
     "profile_trace",
+    "Reference", "Verdict", "check_reference", "check_record",
+    "extract_path", "DIRECTIONS", "LOWER", "HIGHER", "EXACT",
+    "PASS", "FAIL", "SKIP",
 ]

@@ -1,0 +1,207 @@
+"""Offline telemetry query CLI: slice a flushed bundle, no live run.
+
+``PYTHONPATH=src python -m repro.telemetry.query <cmd> --telemetry-dir D``
+operates purely on the JSONL bundle a :class:`~repro.telemetry.session.
+Telemetry` session flushed — so a regression the bench gate flags can be
+localized to a device/cell/phase **without re-running the simulation**:
+
+* ``summary``  — the per-phase cost-attribution table, rebuilt from the
+  ``round.*`` gauges in ``metrics.jsonl``.  The reconstruction replays
+  ``History.phase_totals``'s exact summation (rounds ascending, starting
+  from 0.0), so the totals are **bitwise identical** to what the live
+  run printed under ``[cost attribution]`` (pinned by
+  ``tests/test_references.py``).  ``--json`` dumps full precision.
+* ``metric NAME [--labels cell=0] [--over round]`` — one metric swept
+  over a label dimension as CSV (histogram points print their stats).
+* ``spans [--top 10]`` — the slowest spans in ``trace.jsonl``, i.e.
+  where the simulated timeline actually went.
+
+The phase axis and its RoundLog field mapping live here as the offline
+single source; ``repro.train.fl_loop`` keeps the live (identical)
+definitions and the tests assert they agree.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Optional
+
+from repro.telemetry.registry import MetricsRegistry
+
+ROUND_PREFIX = "round."
+
+# canonical cost-attribution axis (== repro.train.fl_loop.PHASES) and
+# the RoundLog field carrying each (metric, phase) cell; absent phases
+# are explicit zeros in the live attribution and stay zeros here
+PHASES = ("shrink", "train", "compress", "uplink", "backhaul")
+PHASE_FIELDS = {
+    "energy_j": {"train": "energy_train_j", "uplink": "energy_uplink_j",
+                 "backhaul": "energy_backhaul_j"},
+    "latency_s": {"train": "latency_train_s",
+                  "uplink": "latency_uplink_s",
+                  "backhaul": "latency_backhaul_s"},
+    "comm_bits": {"uplink": "comm_bits"},
+}
+
+
+def load_registry(telemetry_dir: str) -> MetricsRegistry:
+    """Rebuild the run's registry from ``<dir>/metrics.jsonl``."""
+    path = os.path.join(telemetry_dir, "metrics.jsonl")
+    with open(path) as f:
+        return MetricsRegistry.from_records(
+            json.loads(line) for line in f if line.strip())
+
+
+def round_indices(reg: MetricsRegistry) -> list:
+    """Every round index any ``round.*`` gauge was emitted for."""
+    rounds: set = set()
+    for name in reg.names():
+        if name.startswith(ROUND_PREFIX):
+            rounds.update(reg.label_values(name, "round"))
+    return sorted(rounds)
+
+
+def phase_totals(reg: MetricsRegistry) -> dict:
+    """``History.phase_totals`` recomputed from the registry alone.
+
+    Same accumulation order as the live method — per metric/phase,
+    start at 0.0 and add each round's value in ascending round order
+    (absent gauges contribute the RoundLog default 0.0) — which makes
+    the result bitwise-equal to the live totals.
+    """
+    totals = {metric: dict.fromkeys(PHASES, 0.0) for metric in PHASE_FIELDS}
+    rounds = round_indices(reg)
+    for metric, fields in PHASE_FIELDS.items():
+        for r in rounds:
+            for phase in PHASES:
+                field = fields.get(phase)
+                v = reg.value(ROUND_PREFIX + field, round=r) \
+                    if field is not None else 0.0
+                totals[metric][phase] += v if v is not None else 0.0
+    return totals
+
+
+def format_cost_table(totals: dict) -> str:
+    """The exact ``[cost attribution]`` table the live runner prints."""
+    lines = ["[cost attribution]",
+             f"  {'phase':>9s} {'energy_j':>12s} {'latency_s':>12s} "
+             f"{'comm_mb':>12s}"]
+    for phase in PHASES:
+        lines.append(f"  {phase:>9s} {totals['energy_j'][phase]:12.3f} "
+                     f"{totals['latency_s'][phase]:12.3f} "
+                     f"{totals['comm_bits'][phase] / 8e6:12.3f}")
+    return "\n".join(lines)
+
+
+def _parse_labels(spec: Optional[str]) -> dict:
+    """``cell=0,phase=train`` -> {"cell": 0, "phase": "train"} (ints and
+    floats coerced so filters match the emitted label types)."""
+    labels: dict = {}
+    for part in (spec or "").split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" not in part:
+            raise SystemExit(f"bad label filter {part!r} (want key=value)")
+        k, v = part.split("=", 1)
+        try:
+            labels[k] = int(v)
+        except ValueError:
+            try:
+                labels[k] = float(v)
+            except ValueError:
+                labels[k] = v
+        continue
+    return labels
+
+
+def cmd_summary(args) -> int:
+    reg = load_registry(args.telemetry_dir)
+    totals = phase_totals(reg)
+    if args.json:
+        print(json.dumps(totals, indent=1))
+    else:
+        print(format_cost_table(totals))
+        hist = reg.summary("dispatch.latency_s")
+        if hist is not None:
+            print(f"[dispatch latency] n={hist['count']} "
+                  f"p50={hist['p50']:.3f}s p95={hist['p95']:.3f}s "
+                  f"p99={hist['p99']:.3f}s max={hist['max']:.3f}s")
+    return 0
+
+
+def cmd_metric(args) -> int:
+    reg = load_registry(args.telemetry_dir)
+    if args.name not in reg:
+        known = ", ".join(reg.names())
+        raise SystemExit(f"metric {args.name!r} not in bundle "
+                         f"(have: {known})")
+    labels = _parse_labels(args.labels)
+    rows = reg.series(args.name, args.over, **labels)
+    print(f"{args.over},value")
+    for over_value, value in rows:
+        if isinstance(value, list):           # histogram cell
+            stats = {"count": len(value), "sum": sum(value)}
+            print(f"{over_value},{json.dumps(stats)}")
+        else:
+            print(f"{over_value},{value}")
+    if not rows:
+        print(f"# no {args.name!r} entries carry an "
+              f"{args.over!r} label matching {labels}")
+    return 0
+
+
+def cmd_spans(args) -> int:
+    path = os.path.join(args.telemetry_dir, "trace.jsonl")
+    spans = []
+    with open(path) as f:
+        for line in f:
+            row = json.loads(line)
+            if row.get("type") == "span":
+                spans.append((row["t1"] - row["t0"], row))
+    spans.sort(key=lambda s: (-s[0], s[1]["track"], s[1]["name"]))
+    print(f"{'dur_s':>10s} {'t0':>10s} {'track':>12s} name")
+    for dur, row in spans[:args.top]:
+        extra = {k: v for k, v in (row.get("args") or {}).items()
+                 if k in ("round", "cell", "bits", "energy_j")}
+        print(f"{dur:10.4f} {row['t0']:10.2f} {row['track']:>12s} "
+              f"{row['name']}"
+              + (f"  {json.dumps(extra)}" if extra else ""))
+    if not spans:
+        print("# no spans in bundle")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.telemetry.query",
+        description="Slice a flushed telemetry bundle offline.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("summary", help="per-phase cost attribution table")
+    p.add_argument("--telemetry-dir", required=True)
+    p.add_argument("--json", action="store_true",
+                   help="full-precision JSON instead of the table")
+    p.set_defaults(fn=cmd_summary)
+
+    p = sub.add_parser("metric", help="one metric swept over a label")
+    p.add_argument("name")
+    p.add_argument("--telemetry-dir", required=True)
+    p.add_argument("--labels", default=None,
+                   help="filter, e.g. cell=0,phase=train")
+    p.add_argument("--over", default="round",
+                   help="label dimension to sweep (default: round)")
+    p.set_defaults(fn=cmd_metric)
+
+    p = sub.add_parser("spans", help="slowest spans in the timeline")
+    p.add_argument("--telemetry-dir", required=True)
+    p.add_argument("--top", type=int, default=10)
+    p.set_defaults(fn=cmd_spans)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -48,6 +48,20 @@ class MetricsRegistry:
     def __len__(self) -> int:
         return sum(len(series) for series in self._metrics.values())
 
+    @classmethod
+    def from_records(cls, records) -> "MetricsRegistry":
+        """Rebuild a registry from :meth:`records`-shaped dicts (e.g. a
+        parsed ``metrics.jsonl``).  Stored values are installed verbatim
+        — counters arrive already accumulated — so a JSONL round trip is
+        bitwise-faithful for every JSON-representable value."""
+        reg = cls()
+        for rec in records:
+            series = reg._series(rec["name"], rec["kind"])
+            key = _label_key(rec.get("labels", {}))
+            value = rec["value"]
+            series[key] = list(value) if isinstance(value, list) else value
+        return reg
+
     def __contains__(self, name: str) -> bool:
         return name in self._metrics
 
@@ -103,6 +117,43 @@ class MetricsRegistry:
             have = dict(key)
             if all(have.get(k) == v for k, v in labels.items()):
                 out += sum(value) if isinstance(value, list) else value
+        return out
+
+    def summary(self, name: str, labels: Optional[dict] = None,
+                quantiles: tuple = (0.5, 0.95, 0.99)) -> Optional[dict]:
+        """Order statistics over a histogram's pooled observations.
+
+        Pools every observation list of ``name`` whose labels are a
+        superset of the ``labels`` filter (same matching rule as
+        :meth:`total`), then returns ``{count, sum, min, max, mean,
+        p<q>...}`` — quantiles via linear interpolation between closest
+        ranks (numpy's default method, reimplemented so the registry
+        stays dependency-free).  ``None`` when nothing matched or the
+        metric is not a histogram.
+        """
+        if self._kinds.get(name) != HISTOGRAM:
+            return None
+        labels = labels or {}
+        obs: list[float] = []
+        for key, values in self._metrics.get(name, {}).items():
+            have = dict(key)
+            if all(have.get(k) == v for k, v in labels.items()):
+                obs.extend(float(v) for v in values)
+        if not obs:
+            return None
+        obs.sort()
+        n = len(obs)
+        out = {"count": n, "sum": sum(obs), "min": obs[0],
+               "max": obs[-1], "mean": sum(obs) / n}
+        for q in quantiles:
+            if not 0.0 <= q <= 1.0:
+                raise ValueError(f"quantile {q} outside [0, 1]")
+            rank = q * (n - 1)
+            lo = int(rank)
+            hi = min(lo + 1, n - 1)
+            frac = rank - lo
+            key = f"p{q * 100:g}"
+            out[key] = obs[lo] * (1.0 - frac) + obs[hi] * frac
         return out
 
     def series(self, name: str, over: str, **labels) -> list[tuple]:

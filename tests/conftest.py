@@ -1,8 +1,9 @@
 import os
 import sys
 
-# src layout import without install
+# src layout import without install; repo root for the benchmarks package
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 # Keep CPU smoke tests single-device (the dry-run forces 512 devices in its
 # own process only — per the assignment, never globally).

@@ -1,0 +1,354 @@
+"""Benchmark regression harness: reference/tolerance semantics, the
+manifest-keyed trajectory store, gate exit codes, and the offline
+telemetry query CLI (which must rebuild the live ``[cost attribution]``
+totals bitwise from the JSONL bundle alone)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from benchmarks import common, gate
+from benchmarks.specs import SPECS, SectionSpec, spec_for
+from repro.telemetry import (MetricsRegistry, Telemetry, build_manifest,
+                             validate_manifest)
+from repro.telemetry import query as Q
+from repro.telemetry.references import (EXACT, FAIL, HIGHER, LOWER, PASS,
+                                        SKIP, Reference, check_record,
+                                        check_reference, extract_path)
+from repro.train import fl_loop
+from repro.train.fl_loop import FLRunConfig, run_fl
+
+TINY = dict(rounds=2, n_train=128, n_test=64, eval_every=1, lr=0.1,
+            seed=0)
+
+
+# ---------------------------------------------------- reference checks
+
+def test_lower_is_better_is_one_sided():
+    ref = Reference("t", direction=LOWER, rel_tol=0.1)
+    assert check_reference(1.05, 1.0, ref).status == PASS   # inside band
+    assert check_reference(1.11, 1.0, ref).status == FAIL   # regression
+    # improvements are unbounded
+    assert check_reference(0.01, 1.0, ref).status == PASS
+
+
+def test_higher_is_better_is_the_mirror():
+    ref = Reference("acc", direction=HIGHER, abs_tol=0.05)
+    assert check_reference(0.96, 1.0, ref).status == PASS
+    assert check_reference(0.94, 1.0, ref).status == FAIL
+    assert check_reference(2.0, 1.0, ref).status == PASS
+
+
+def test_exact_fails_both_directions():
+    ref = Reference("flag", direction=EXACT)
+    assert check_reference(1.0, 1.0, ref).status == PASS
+    assert check_reference(1.0 + 1e-9, 1.0, ref).status == FAIL
+    assert check_reference(1.0 - 1e-9, 1.0, ref).status == FAIL
+    # ... unless given an explicit band
+    band = Reference("flag", direction=EXACT, abs_tol=1e-6)
+    assert check_reference(1.0 + 1e-9, 1.0, band).status == PASS
+
+
+def test_band_is_abs_plus_rel():
+    ref = Reference("t", direction=LOWER, rel_tol=0.1, abs_tol=1.0)
+    assert check_reference(11.0, 10.0, ref).status == PASS  # 10+1+1 = 12
+    assert check_reference(12.0, 10.0, ref).status == PASS
+    assert check_reference(12.1, 10.0, ref).status == FAIL
+
+
+def test_pinned_baseline_beats_trajectory_baseline():
+    ref = Reference("x", direction=LOWER, baseline=5.0)
+    v = check_reference(4.0, 100.0, ref)      # trajectory value ignored
+    assert v.status == PASS and v.baseline == 5.0
+    assert check_reference(5.5, 100.0, ref).status == FAIL
+
+
+def test_missing_value_and_missing_baseline_skip():
+    ref = Reference("x", direction=LOWER)
+    assert check_reference(None, 1.0, ref).status == SKIP
+    assert check_reference("str", 1.0, ref).status == SKIP
+    assert check_reference(float("nan"), 1.0, ref).status == SKIP
+    v = check_reference(1.0, None, ref)
+    assert v.status == SKIP and "baseline" in v.note
+
+
+def test_bool_metrics_coerce():
+    ref = Reference("ok", direction=EXACT, baseline=1.0)
+    assert check_reference(True, None, ref).status == PASS
+    assert check_reference(False, None, ref).status == FAIL
+
+
+def test_invalid_reference_rejected():
+    with pytest.raises(ValueError):
+        Reference("x", direction="sideways")
+    with pytest.raises(ValueError):
+        Reference("x", rel_tol=-0.1)
+
+
+def test_check_record_pairs_by_path():
+    refs = [Reference("a", direction=LOWER, rel_tol=0.5),
+            Reference("b", direction=HIGHER, rel_tol=0.5)]
+    verdicts = check_record({"a": 1.0, "b": 0.1}, {"a": 1.0, "b": 1.0},
+                            refs)
+    assert [v.status for v in verdicts] == [PASS, FAIL]
+    # no baseline dict at all -> every verdict SKIPs
+    assert {v.status for v in check_record({"a": 1.0, "b": 1.0}, None,
+                                           refs)} == {SKIP}
+
+
+def test_extract_path_walks_dicts_and_lists():
+    obj = {"tta": [{"acc": 0.5}, {"acc": 0.7}],
+           "memory": {"-1": "never", 3: "int-key"},
+           "codec": {"int8": {"ratio": 3.9}}}
+    assert extract_path(obj, "tta.1.acc") == 0.7
+    assert extract_path(obj, "tta.-1.acc") == 0.7
+    assert extract_path(obj, "codec.int8.ratio") == 3.9
+    assert extract_path(obj, "memory.3") == "int-key"
+    assert extract_path(obj, "tta.7.acc") is None
+    assert extract_path(obj, "codec.fp8.ratio") is None
+    assert extract_path(obj, "tta.1.acc.deeper") is None
+
+
+def test_spec_extract_flattens_found_paths_only():
+    spec = SectionSpec("s", (Reference("rows.0.acc", direction=HIGHER),
+                             Reference("missing", direction=LOWER)))
+    assert spec.extract({"rows": [{"acc": 0.5}]}) == {"rows.0.acc": 0.5}
+    assert spec_for("not-a-section").references == ()
+
+
+# ------------------------------------------------------ registry summary
+
+def test_registry_summary_matches_numpy_percentiles():
+    rng = np.random.default_rng(0)
+    xs = rng.uniform(0, 10, 37)
+    reg = MetricsRegistry()
+    for i, x in enumerate(xs):
+        reg.observe("lat", float(x), cell=i % 3)
+    s = reg.summary("lat")
+    assert s["count"] == 37
+    for q, key in ((50, "p50"), (95, "p95"), (99, "p99")):
+        assert s[key] == pytest.approx(np.percentile(xs, q), rel=1e-12)
+    # label filter pools only matching cells
+    cell0 = [float(x) for i, x in enumerate(xs) if i % 3 == 0]
+    assert reg.summary("lat", {"cell": 0})["count"] == len(cell0)
+    assert reg.summary("lat", {"cell": 0})["max"] == max(cell0)
+    # non-histograms and empty matches yield None, not garbage
+    reg.gauge("g", 1.0)
+    assert reg.summary("g") is None
+    assert reg.summary("lat", {"cell": 99}) is None
+
+
+def test_registry_jsonl_round_trip_is_bitwise(tmp_path):
+    reg = MetricsRegistry()
+    reg.gauge("round.energy_j", 0.1 + 0.2, round=0)   # repr-noisy float
+    reg.counter("bits", 3.0, cell=1)
+    reg.observe("lat", 1.5, cell=1)
+    path = tmp_path / "metrics.jsonl"
+    reg.to_jsonl(str(path))
+    with open(path) as f:
+        back = MetricsRegistry.from_records(
+            json.loads(line) for line in f)
+    assert back.value("round.energy_j", round=0) == (0.1 + 0.2)
+    assert back.value("bits", cell=1) == 3.0
+    assert back.value("lat", cell=1) == [1.5]
+    assert back.kind("lat") == "histogram"
+
+
+# ------------------------------------------------------ trajectory store
+
+def _fake_metrics(**overrides):
+    m = {"max_rel_gap": 0.05, "mean_solver_us": 50.0}
+    m.update(overrides)
+    return m
+
+
+def test_trajectory_append_load_round_trip(tmp_path):
+    root = str(tmp_path)
+    rec = common.append_trajectory("schedule_solver", _fake_metrics(),
+                                   scale="fast", wall_s=1.23, root=root)
+    traj = common.load_trajectory("schedule_solver", root)
+    assert traj["schema"] == common.TRAJECTORY_SCHEMA
+    assert traj["records"][-1] == rec
+    assert rec["metrics"]["max_rel_gap"] == 0.05
+    # the record is manifest-keyed and the manifest is complete
+    assert validate_manifest(rec["manifest"]) == []
+    assert rec["manifest"]["extra"]["section"] == "schedule_solver"
+    assert common.latest_record(traj, "fast") == rec
+    assert common.latest_record(traj, "full") is None
+
+
+def test_trajectory_compaction_keeps_newest_per_scale(tmp_path):
+    root = str(tmp_path)
+    for i in range(5):
+        common.append_trajectory("s", {"i": float(i)}, scale="fast",
+                                 wall_s=0.0, root=root, keep=3)
+    common.append_trajectory("s", {"i": 99.0}, scale="full",
+                             wall_s=0.0, root=root, keep=3)
+    traj = common.load_trajectory("s", root)
+    fast = [r for r in traj["records"] if r["scale"] == "fast"]
+    assert [r["metrics"]["i"] for r in fast] == [2.0, 3.0, 4.0]
+    assert len([r for r in traj["records"] if r["scale"] == "full"]) == 1
+
+
+def test_load_trajectory_rejects_garbage(tmp_path):
+    root = str(tmp_path)
+    assert common.load_trajectory("nope", root) is None
+    p = common.trajectory_path("bad", root)
+    with open(p, "w") as f:
+        f.write("not json {")
+    assert common.load_trajectory("bad", root) is None
+    with open(p, "w") as f:
+        json.dump({"schema": 999, "records": []}, f)
+    assert common.load_trajectory("bad", root) is None
+
+
+def test_pin_baseline_selects_newest_of_scale(tmp_path):
+    root = str(tmp_path)
+    common.append_trajectory("s", {"x": 1.0}, scale="fast", wall_s=0,
+                             root=root)
+    common.append_trajectory("s", {"x": 2.0}, scale="fast", wall_s=0,
+                             root=root)
+    pinned = common.pin_baseline("s", "fast", root)
+    assert pinned["metrics"]["x"] == 2.0
+    traj = common.load_trajectory("s", root)
+    assert traj["baseline"]["fast"]["metrics"]["x"] == 2.0
+
+
+# --------------------------------------------------------------- gate
+
+def test_gate_pass_then_injected_regression(tmp_path, capsys):
+    root = str(tmp_path)
+    common.append_trajectory("schedule_solver", _fake_metrics(),
+                             scale="fast", wall_s=1.0, root=root)
+    # no baseline yet: everything SKIPs, exit 0
+    assert gate.main(["schedule_solver", "--root", root,
+                      "--scale", "fast"]) == gate.EXIT_OK
+    # pin, re-gate: PASS, exit 0
+    assert gate.main(["schedule_solver", "--root", root, "--scale",
+                      "fast", "--update-baseline"]) == gate.EXIT_OK
+    assert gate.main(["schedule_solver", "--root", root,
+                      "--scale", "fast"]) == gate.EXIT_OK
+    # inject a fake regression: mean_solver_us has rel_tol=1.0, so 5x
+    # the pinned 50us is far outside the band -> FAIL, exit 1
+    common.append_trajectory("schedule_solver",
+                             _fake_metrics(mean_solver_us=250.0),
+                             scale="fast", wall_s=1.0, root=root)
+    assert gate.main(["schedule_solver", "--root", root,
+                      "--scale", "fast"]) == gate.EXIT_REGRESSION
+    out = capsys.readouterr().out
+    assert "FAIL" in out and "mean_solver_us" in out
+
+
+def test_gate_improvement_still_passes(tmp_path):
+    root = str(tmp_path)
+    common.append_trajectory("schedule_solver", _fake_metrics(),
+                             scale="fast", wall_s=1.0, root=root)
+    gate.main(["schedule_solver", "--root", root, "--scale", "fast",
+               "--update-baseline"])
+    common.append_trajectory("schedule_solver",
+                             _fake_metrics(mean_solver_us=1.0),
+                             scale="fast", wall_s=1.0, root=root)
+    assert gate.main(["schedule_solver", "--root", root,
+                      "--scale", "fast"]) == gate.EXIT_OK
+
+
+def test_gate_fails_on_invalid_record_manifest(tmp_path):
+    root = str(tmp_path)
+    rec = common.append_trajectory("schedule_solver", _fake_metrics(),
+                                   scale="fast", wall_s=1.0, root=root)
+    traj = common.load_trajectory("schedule_solver", root)
+    del traj["records"][-1]["manifest"]["git_sha"]
+    common._write_trajectory("schedule_solver", traj, root)
+    assert "git_sha" in rec["manifest"]      # it was valid before the edit
+    assert gate.main(["schedule_solver", "--root", root,
+                      "--scale", "fast"]) == gate.EXIT_REGRESSION
+
+
+def test_gate_usage_errors(tmp_path):
+    root = str(tmp_path)
+    assert gate.main(["not_a_section", "--root", root]) == gate.EXIT_USAGE
+    # empty root: nothing to gate
+    assert gate.main(["--root", root]) == gate.EXIT_USAGE
+
+
+def test_gate_artifact_manifest_check(tmp_path):
+    root = str(tmp_path)
+    good = {"manifest": build_manifest(), "rows": []}
+    with open(tmp_path / "good.json", "w") as f:
+        json.dump(good, f)
+    assert gate.artifact_manifest_errors(str(tmp_path / "*.json")) == []
+    with open(tmp_path / "bad.json", "w") as f:
+        json.dump({"rows": []}, f)
+    problems = gate.artifact_manifest_errors(str(tmp_path / "*.json"))
+    assert len(problems) == 1 and "no embedded manifest" in problems[0][1]
+    # a glob matching nothing is itself a problem, not a silent pass
+    assert gate.artifact_manifest_errors(str(tmp_path / "nope" / "*")) \
+        == [(str(tmp_path / "nope" / "*"), "no artifacts match")]
+
+
+def test_every_spec_path_is_wellformed():
+    for section, spec in SPECS.items():
+        assert spec.section == section
+        paths = [r.path for r in spec.references]
+        assert len(paths) == len(set(paths)), f"dup path in {section}"
+
+
+# ----------------------------------------------------------- query CLI
+
+def test_query_phase_axis_agrees_with_live_loop():
+    assert Q.PHASES == fl_loop.PHASES
+    # every mapped field is a real RoundLog field
+    fields = {f.name for f in
+              __import__("dataclasses").fields(fl_loop.RoundLog)}
+    for mapping in Q.PHASE_FIELDS.values():
+        for field in mapping.values():
+            assert field in fields, field
+
+
+def test_query_summary_on_synthetic_bundle(tmp_path, capsys):
+    reg = MetricsRegistry()
+    for r, (e, l, b) in enumerate([(1.5, 2.0, 8e6), (2.5, 1.0, 4e6)]):
+        reg.gauge("round.energy_train_j", e, round=r)
+        reg.gauge("round.latency_train_s", l, round=r)
+        reg.gauge("round.comm_bits", b, round=r)
+    reg.observe("dispatch.latency_s", 1.0, round=0)
+    reg.observe("dispatch.latency_s", 3.0, round=1)
+    reg.to_jsonl(str(tmp_path / "metrics.jsonl"))
+    assert Q.main(["summary", "--telemetry-dir", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "[cost attribution]" in out
+    assert f"{'train':>9s} {4.0:12.3f}" in out
+    assert "[dispatch latency]" in out and "n=2" in out
+    # the CSV slice reads the same bundle
+    assert Q.main(["metric", "round.energy_train_j", "--telemetry-dir",
+                   str(tmp_path)]) == 0
+    assert "0,1.5" in capsys.readouterr().out
+
+
+@pytest.mark.slow
+def test_query_summary_is_bitwise_vs_live_run(tmp_path):
+    """The acceptance contract: ``query summary`` reproduces the live
+    ``[cost attribution]`` totals bitwise from the JSONL bundle alone."""
+    tel = Telemetry(out_dir=str(tmp_path))
+    from repro.sysmodel.population import FleetConfig
+    hist = run_fl(FLRunConfig(method="anycostfl", **TINY),
+                  FleetConfig(n_devices=4), telemetry=tel)
+    tel.flush()
+    live = hist.phase_totals()
+    reg = Q.load_registry(str(tmp_path))
+    offline = Q.phase_totals(reg)
+    for metric in live:
+        for phase in live[metric]:
+            assert offline[metric][phase] == live[metric][phase], \
+                (metric, phase)
+    # the printed table is exactly the live format
+    table = Q.format_cost_table(offline)
+    assert table.splitlines()[0] == "[cost attribution]"
+    # dispatch latency is in the bundle and summarizable (the p95 the
+    # hier_scaling spec gates)
+    s = reg.summary("dispatch.latency_s")
+    assert s is not None and s["count"] > 0 and s["p95"] >= s["p50"]
+    # spans subcommand parses the same bundle
+    assert Q.main(["spans", "--top", "3",
+                   "--telemetry-dir", str(tmp_path)]) == 0
