@@ -31,6 +31,11 @@ Four measurements, one artifact (experiments/fl/hier_scaling_<scale>.json):
    modeled backhaul), plus the same hierarchy on an int8 backhaul —
    ~4x less backhaul traffic at matching accuracy.
 
+5. **Learning-dynamics diagnostics (PR 8).**  A tiny instrumented run
+   with a health engine attached: the worst per-device stage-energy
+   decomposition defect (gate-pinned at 0 within an ulp band) and
+   whether the alert pipeline produced schema-valid records.
+
 ``PYTHONPATH=src python benchmarks/hier_scaling.py``
 (BENCH_SCALE=fast|full; full is the ~1k-client fleet)
 """
@@ -199,6 +204,59 @@ def measure_telemetry_overhead(n_absorbs: int = 64, n: int = 16384,
             "telemetry_alloc_bytes": int(tel_bytes)}
 
 
+# ------------------------------------- 1c) learning-dynamics diagnostics
+
+def measure_learning(seed: int = 0) -> dict:
+    """Instrumented tiny hierarchical run: the PR 8 ``learning.*``
+    diagnostics and the health/alerting path, reduced to two gateable
+    scalars.
+
+    * ``decomp_residual_rel`` — worst relative defect of the per-device
+      stage-energy decomposition (shrink + sparsify + quantize vs. the
+      single-reduction ``||u - u_hat||^2``) across every (device, round)
+      the registry recorded.  The identity is coordinate-exact; the f32
+      realization only carries accumulation noise, so the gate pins this
+      at 0 within an ulp-scaled band.
+    * ``alerts_valid`` — the zero-threshold saturation rule fired and
+      every alert record round-trips the exact ``ALERT_KEYS`` schema.
+    """
+    from repro.telemetry import (ALERT_KEYS, HealthEngine, HealthRule,
+                                 Telemetry)
+
+    run_cfg = FLRunConfig(method="anycostfl", seed=seed, lr=0.1,
+                          rounds=3, n_train=256, n_test=64, eval_every=3,
+                          use_planner=False)
+    tel = Telemetry()
+    tel.health = HealthEngine((
+        HealthRule("any-backhaul", "backhaul_saturation",
+                   params={"threshold": 0.0}),))
+    run_orchestrated(
+        run_cfg,
+        FleetConfig(n_devices=8,
+                    topology=TopologyConfig(kind="hier", n_cells=2)),
+        OrchestratorConfig(policy="sync", use_pool=True),
+        telemetry=tel)
+    reg = tel.registry
+    worst = 0.0
+    n_checked = 0
+    for r in reg.label_values("learning.error_total", "round"):
+        for d in reg.label_values("learning.error_total", "device"):
+            total = reg.value("learning.error_total", device=d, round=r)
+            if total is None:
+                continue
+            parts = sum(
+                reg.value("learning.error_energy", device=d, round=r,
+                          phase=ph) or 0.0
+                for ph in ("shrink", "sparsify", "quantize"))
+            worst = max(worst, abs(parts - total) / max(total, 1e-12))
+            n_checked += 1
+    alerts = tel.health.alerts()
+    alerts_valid = bool(alerts) and all(
+        set(a) == set(ALERT_KEYS) for a in alerts)
+    return {"decomp_residual_rel": worst, "n_decomp_checked": n_checked,
+            "n_alerts": len(alerts), "alerts_valid": alerts_valid}
+
+
 # ----------------------------------------------------- 2) backhaul codec
 
 def measure_codec(n: int, seed: int = 0, n_absorbed: int = 8) -> dict:
@@ -321,7 +379,8 @@ def main(seed: int = 0) -> dict:
     if cached is not None and "codec" in cached \
             and "donated_in_place" in cached \
             and "telemetry_overhead" in cached \
-            and "dispatch_p95_s" in cached:
+            and "dispatch_p95_s" in cached \
+            and "learning" in cached:
         result = cached
     if result is None:
         mem = [measure_memory(i, sc["mem_n"], seed)
@@ -343,6 +402,7 @@ def main(seed: int = 0) -> dict:
             "batched_growth_x": mem[-1]["batched_peak_bytes"]
             / mem[0]["batched_peak_bytes"],
             "codec": measure_codec(sc["mem_n"], seed),
+            "learning": measure_learning(seed),
             "tta": tta["rows"],
             "dispatch_p95_s": tta["dispatch_p95_s"],
             "phase_energy_j": tta["phase_energy_j"],
@@ -378,6 +438,11 @@ def main(seed: int = 0) -> dict:
                       "phase_energy_j": result["phase_energy_j"]}))
     assert result["telemetry_overhead"]["telemetry_alloc_bytes"] == 0, \
         "disabled telemetry must allocate nothing on the streaming path"
+    print(json.dumps({"learning": result["learning"]}))
+    assert result["learning"]["decomp_residual_rel"] <= 1e-5, \
+        "stage-energy decomposition must match the fused total"
+    assert result["learning"]["alerts_valid"], \
+        "the instrumented run must produce schema-valid health alerts"
     return result
 
 

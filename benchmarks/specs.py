@@ -79,6 +79,12 @@ _spec(
     Reference("codec.int8.ratio_vs_f32", direction=HIGHER, baseline=3.9,
               note="int8 backhaul payload ~4x smaller than f32"),
     Reference("codec.int8.within_grid", direction=EXACT, baseline=1.0),
+    Reference("learning.decomp_residual_rel", direction=EXACT,
+              baseline=0.0, abs_tol=1e-5,
+              note="stage energies partition ||u - u_hat||^2 exactly "
+                   "(band absorbs f32 accumulation ulps)"),
+    Reference("learning.alerts_valid", direction=EXACT, baseline=1.0,
+              note="health engine fires and alerts.jsonl schema-checks"),
     # trajectory references against the pinned baseline record
     Reference("memory.-1.streaming_peak_bytes", direction=LOWER,
               rel_tol=0.05, unit="B",

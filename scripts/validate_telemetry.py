@@ -3,15 +3,19 @@
 
 Three checks, each independently selectable:
 
-* ``--run``       drive a tiny telemetry-enabled hierarchical run and
-                  flush a bundle into a temp dir (then validate it);
+* ``--run``       drive a tiny telemetry-enabled hierarchical run —
+                  with a :class:`HealthEngine` attached, so the bundle
+                  carries ``learning.*`` metrics, ALERT instants, and a
+                  non-empty ``alerts.jsonl`` — flush it into a temp dir,
+                  validate it, and check ``query health`` renders it;
 * ``--dir D``     validate an existing bundle directory: the Perfetto
                   JSON must parse and type-check (metadata declares
                   every (pid, tid); X spans carry numeric ts/dur >= 0;
                   instants carry s:"t"), the JSONL twin must line-parse
                   with the span/instant schema, metrics.jsonl must
-                  line-parse, and manifest.json must pass
-                  ``validate_manifest``;
+                  line-parse, ``alerts.jsonl`` (when present) must
+                  line-parse with the exact ``ALERT_KEYS`` schema, and
+                  manifest.json must pass ``validate_manifest``;
 * ``--artifacts G``  glob of benchmark artifacts (default
                   ``experiments/fl/*.json``): every one must embed a
                   manifest with all required keys.
@@ -31,7 +35,7 @@ import tempfile
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.telemetry import validate_manifest  # noqa: E402
+from repro.telemetry import ALERT_KEYS, validate_manifest  # noqa: E402
 
 SPAN_KEYS = {"name", "cat", "ph", "ts", "dur", "pid", "tid"}
 INSTANT_KEYS = {"name", "cat", "ph", "s", "ts", "pid", "tid"}
@@ -76,6 +80,29 @@ def validate_perfetto(path: str) -> dict:
     return counts
 
 
+def validate_alerts(path: str) -> int:
+    """Schema-check every ``alerts.jsonl`` record (PR 8 health engine):
+    exact key set, typed round/value/threshold, known severity."""
+    n = 0
+    with open(path) as f:
+        for line in f:
+            if not line.strip():
+                continue
+            rec = json.loads(line)
+            if set(rec) != set(ALERT_KEYS):
+                fail(f"{path}: alert keys {sorted(rec)} != "
+                     f"{sorted(ALERT_KEYS)}")
+            if not isinstance(rec["round"], int):
+                fail(f"{path}: non-integer round in {rec}")
+            for key in ("t", "value", "threshold"):
+                if not isinstance(rec[key], (int, float)):
+                    fail(f"{path}: non-numeric {key!r} in {rec}")
+            if rec["severity"] not in ("warning", "critical"):
+                fail(f"{path}: bad severity in {rec}")
+            n += 1
+    return n
+
+
 def validate_bundle(out_dir: str) -> None:
     perfetto = os.path.join(out_dir, "trace.perfetto.json")
     counts = validate_perfetto(perfetto)
@@ -93,6 +120,9 @@ def validate_bundle(out_dir: str) -> None:
              f"{counts['X'] + counts['i']} events")
     with open(os.path.join(out_dir, "metrics.jsonl")) as f:
         n_metrics = sum(1 for line in f if json.loads(line))
+    alerts_path = os.path.join(out_dir, "alerts.jsonl")
+    n_alerts = validate_alerts(alerts_path) \
+        if os.path.exists(alerts_path) else None
     manifest_path = os.path.join(out_dir, "manifest.json")
     if os.path.exists(manifest_path):
         with open(manifest_path) as f:
@@ -100,7 +130,8 @@ def validate_bundle(out_dir: str) -> None:
         if missing:
             fail(f"{manifest_path} missing keys {missing}")
     print(f"OK bundle {out_dir}: {counts['X']} spans, {counts['i']} "
-          f"instants, {n_metrics} metric records")
+          f"instants, {n_metrics} metric records"
+          + (f", {n_alerts} alerts" if n_alerts is not None else ""))
 
 
 def validate_artifacts(pattern: str) -> None:
@@ -120,7 +151,8 @@ def validate_artifacts(pattern: str) -> None:
 def tiny_run(out_dir: str) -> None:
     from repro.orchestrator import OrchestratorConfig, run_orchestrated
     from repro.sysmodel.population import FleetConfig
-    from repro.telemetry import Telemetry, build_manifest
+    from repro.telemetry import (HealthEngine, HealthRule, Telemetry,
+                                 build_manifest)
     from repro.topology import TopologyConfig
     from repro.train.fl_loop import FLRunConfig
 
@@ -131,9 +163,35 @@ def tiny_run(out_dir: str) -> None:
                         topology=TopologyConfig(kind="hier", n_cells=2))
     orch = OrchestratorConfig(policy="sync")
     tel = Telemetry(out_dir)
+    # a zero-threshold saturation rule fires on every hierarchical round
+    # (any backhaul at all), so the validated bundle always carries a
+    # non-empty alerts.jsonl exercising the full --health path
+    tel.health = HealthEngine((
+        HealthRule("any-backhaul", "backhaul_saturation",
+                   params={"threshold": 0.0}),))
     hist = run_orchestrated(run_cfg, fleet, orch, telemetry=tel)
+    if not tel.health.alerts():
+        fail("tiny --health run produced no alerts (zero-threshold "
+             "saturation rule must fire on a hierarchical run)")
+    if not any(n.startswith("learning.") for n in tel.registry.names()):
+        fail("tiny --health run emitted no learning.* metrics")
     tel.flush(manifest=build_manifest(run_cfg, fleet, orch,
                                       trace_signature=hist.trace))
+
+
+def check_query_health(out_dir: str) -> None:
+    """``query health`` must render the freshly flushed alerts."""
+    import contextlib
+    import io
+
+    from repro.telemetry import query
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        rc = query.main(["health", "--telemetry-dir", out_dir])
+    out = buf.getvalue()
+    if rc != 0 or "[health]" not in out or "alert" not in out:
+        fail(f"query health on {out_dir} returned {rc}: {out!r}")
+    print(f"OK query health {out_dir}: {out.splitlines()[0]}")
 
 
 def main() -> None:
@@ -152,6 +210,7 @@ def main() -> None:
         with tempfile.TemporaryDirectory() as d:
             tiny_run(d)
             validate_bundle(d)
+            check_query_health(d)
     if args.dir:
         validate_bundle(args.dir)
     if args.artifacts:

@@ -40,6 +40,7 @@ batched ``aio_aggregate`` consumes; the batched path stays as the oracle.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Sequence
 
 import jax
@@ -215,3 +216,34 @@ def finalize_trees(num: PyTree, den: PyTree) -> PyTree:
 def partial_finalize(part: PartialAgg) -> PyTree:
     """Eq. 5's ratio: num/den where any device covered, else 0."""
     return finalize_trees(part.num, part.den)
+
+
+def alignment_stats(a: PyTree, b: PyTree) -> tuple:
+    """(cosine, relative L2 distance) between two update pytrees.
+
+    The learning-dynamics diagnostics use this both for per-device
+    alignment (device update vs. the round aggregate) and per-cell
+    divergence (a cell's finalized partial vs. the global aggregate).
+    Cosine is 0 when either side is all-zero; the relative distance is
+    ``||a - b|| / ||b||`` with the same zero guard, so a cell that
+    exactly matches the global aggregate reads (1.0, 0.0).  Pure jnp —
+    jit-friendly, consumes no RNG.
+    """
+    def sq(t):
+        parts = jax.tree.map(
+            lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), t)
+        return functools.reduce(jnp.add,
+                                jax.tree_util.tree_leaves(parts))
+
+    dots = jax.tree.map(
+        lambda x, y: jnp.vdot(x.astype(jnp.float32),
+                              y.astype(jnp.float32)), a, b)
+    dot = functools.reduce(jnp.add, jax.tree_util.tree_leaves(dots))
+    na = jnp.sqrt(sq(a))
+    nb = jnp.sqrt(sq(b))
+    diff = jnp.sqrt(sq(jax.tree.map(
+        lambda x, y: x.astype(jnp.float32) - y.astype(jnp.float32), a, b)))
+    cos = jnp.where((na > 0) & (nb > 0),
+                    dot / jnp.maximum(na * nb, 1e-30), 0.0)
+    rel = jnp.where(nb > 0, diff / jnp.maximum(nb, 1e-30), 0.0)
+    return cos, rel

@@ -228,6 +228,66 @@ def compress_update(update: PyTree, beta, key,
                             bits=bits, rho=rho, n_levels=n_levels)
 
 
+# ------------------------------------------------------ error decomposition
+
+class StageErrors(NamedTuple):
+    """Single-pass energies of one device's compression pipeline.
+
+    With ``u`` the full-coordinate update, ``w`` the {0,1} EMS width mask,
+    ``m`` the final transmitted mask (``w * sparsity``, so ``m <= w``) and
+    ``u_hat`` the decoded wire values (zeros outside ``m``), the three
+    stage supports ``(1-w)``, ``(w-m)``, ``m`` partition the coordinates,
+    so in exact arithmetic
+
+        e_shrink + e_sparsify + e_quantize == ||u - u_hat||^2
+
+    coordinate-exactly — not as a bound.  ``e_shrink`` is structurally 0
+    under the expand-update convention (``u`` is the *zero-padded*
+    sub-update, so nothing outside ``w`` carries mass); the axis keeps
+    the term the way the cost-attribution axis keeps its zero phases, so
+    a cost model that estimates the untrained coordinates can populate
+    it without a schema change.
+    """
+    update_norm_sq: jax.Array    # ||u||^2
+    e_shrink: jax.Array          # ||u * (1 - w)||^2
+    e_sparsify: jax.Array        # ||u * (w - m)||^2  (kernels dropped)
+    e_quantize: jax.Array        # ||u * m - u_hat||^2 (grid rounding)
+    e_total: jax.Array           # ||u - u_hat||^2 (single-reduction ref)
+
+
+def stage_error_energies(full_update: PyTree, width_mask: PyTree,
+                         mask: PyTree, decoded: PyTree) -> StageErrors:
+    """Per-stage error energies of the EMS->FGC pipeline (jit-friendly).
+
+    One pass over the update: every energy is a fused square-and-reduce
+    per leaf, summed across leaves — five scalars out, no intermediate
+    the size of the model materialized beyond the masked products XLA
+    fuses away.  ``decoded`` is the server-view wire values (already
+    masked); ``mask`` is the final transmitted mask.
+    """
+    def leaf(u, w, m, q):
+        u = u.astype(jnp.float32)
+        w = w.astype(jnp.float32)
+        m = m.astype(jnp.float32)
+        q = q.astype(jnp.float32)
+        return (jnp.sum(jnp.square(u)),
+                jnp.sum(jnp.square(u * (1.0 - w))),
+                jnp.sum(jnp.square(u * (w - m))),
+                jnp.sum(jnp.square(u * m - q)),
+                jnp.sum(jnp.square(u - q)))
+
+    parts = [leaf(u, w, m, q) for u, w, m, q in zip(
+        jax.tree_util.tree_leaves(full_update),
+        jax.tree_util.tree_leaves(width_mask),
+        jax.tree_util.tree_leaves(mask),
+        jax.tree_util.tree_leaves(decoded))]
+    if not parts:
+        z = jnp.float32(0.0)
+        return StageErrors(z, z, z, z, z)
+    sums = [functools.reduce(jnp.add, comp) for comp in zip(*parts)]
+    return StageErrors(*sums)
+
+
 # -------------------------------------------------------------- beta planner
 
 @dataclasses.dataclass

@@ -192,6 +192,38 @@ def expand_update(sub_update: PyTree, full_template: PyTree, alpha: float,
     return upd, mask
 
 
+def width_mask_template(full_template: PyTree, alpha: float,
+                        spec: ShrinkSpec) -> PyTree:
+    """The {0,1} coverage mask of the alpha sub-model, from the *full*
+    template alone.
+
+    Equals the ``width_mask`` :func:`expand_update` returns, but built
+    without a sub-update in hand: ones everywhere, zeroed outside the
+    kept channel slice of every group entry.  The learning-dynamics
+    diagnostics use it to reason about shrink coverage when only the
+    full-coordinate update is available (and tests pin it against the
+    expand path).
+    """
+    widths = spec.widths(alpha)
+    mask = jax.tree.map(lambda x: jnp.ones(jnp.shape(x), jnp.float32),
+                        full_template)
+    todo: dict[str, list] = {}
+    for g in spec.groups:
+        for e in g.entries:
+            todo.setdefault(e.path, []).append((e, g))
+    for path, pairs in todo.items():
+        x = _get(mask, path)
+        for e, g in pairs:
+            n = widths[g.name]
+            v = _view(x, e, g.size)
+            keep = (jnp.arange(g.size) < n).astype(jnp.float32)
+            shape = [1] * v.ndim
+            shape[e.axis + 1] = g.size
+            x = _unview(v * keep.reshape(shape), e)
+        _set(mask, path, x)
+    return mask
+
+
 def _all_paths(tree: PyTree, prefix: str = "") -> list[str]:
     if isinstance(tree, dict):
         out = []

@@ -188,6 +188,15 @@ def run_fl(args):
         event_trace_limit=args.event_trace_limit)
     tel = Telemetry(args.telemetry_dir, jax_profile=args.jax_profile) \
         if args.telemetry_dir else NULL_TELEMETRY
+    if args.health:
+        if not tel.enabled:
+            raise SystemExit("--health needs --telemetry-dir: the health "
+                             "engine evaluates the learning.* series a "
+                             "telemetry session records")
+        from repro.telemetry import DEFAULT_RULES, HealthEngine, load_rules
+        rules = load_rules(args.health_rules) if args.health_rules \
+            else DEFAULT_RULES
+        tel.health = HealthEngine(rules)
     hist = run_orchestrated(run_cfg, fleet, orch, verbose=True,
                             telemetry=tel)
     # time-to-accuracy: simulated wall-clock at fixed accuracy milestones
@@ -218,10 +227,17 @@ def run_fl(args):
               f"{totals['latency_s'][phase]:12.3f} "
               f"{totals['comm_bits'][phase] / 8e6:12.3f}")
     if tel.enabled:
+        if tel.health is not None:
+            for line in tel.health.summary_table():
+                print(line)
         manifest = build_manifest(run_cfg, fleet, orch,
                                   trace_signature=hist.trace,
                                   extra={"phase_totals": totals,
-                                         "best_acc": hist.best_acc})
+                                         "best_acc": hist.best_acc,
+                                         "n_alerts":
+                                         (len(tel.health.alerts())
+                                          if tel.health is not None
+                                          else None)})
         paths = tel.flush(manifest=manifest)
         for kind, path in sorted(paths.items()):
             print(f"[telemetry] {kind}: {path}")
@@ -382,6 +398,16 @@ def main():
                     help="additionally wrap the run in jax.profiler "
                          "(kernel-level host trace under "
                          "<telemetry-dir>/jax_profile)")
+    ap.add_argument("--health", action="store_true",
+                    help="attach the streaming health engine (needs "
+                         "--telemetry-dir): rule-based detectors over "
+                         "the learning.* / round.* series emit ALERT "
+                         "trace instants, an alerts.jsonl in the "
+                         "bundle, and a [health] end-of-run table")
+    ap.add_argument("--health-rules", default=None,
+                    help="JSON rule file overriding the default health "
+                         "detectors (see telemetry/health.py for the "
+                         "schema)")
     ap.add_argument("--event-trace-limit", type=int, default=None,
                     help="bound the in-memory event pop trace to the "
                          "newest N records (evicted records fold into a "

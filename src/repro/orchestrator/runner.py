@@ -234,6 +234,19 @@ class Simulation:
         # needs >= 2 visible devices to map cells onto a mesh axis)
         self.agg_route = "streaming"
 
+        # ---- learning-dynamics diagnostics.  Only an enabled session
+        # gets a recorder, and the import is deferred to that branch so
+        # the disabled path never loads the module (the CI memory guard
+        # attributes zero allocations to telemetry files on the
+        # streaming path).  The recorder's statistics run in their own
+        # jit'd passes — the training path's compiled programs are the
+        # same with or without it (bitwise-invisibility).
+        self.learn = None
+        if self.tel.enabled:
+            from repro.telemetry.learning import LearningRecorder
+            self.learn = LearningRecorder(self.spec,
+                                          self.fleet_cfg.n_devices)
+
     # ------------------------------------------------------- fleet dynamics
 
     def effective_T_max(self, t_wall: float) -> float:
@@ -613,8 +626,11 @@ def _hier_round_merge(sim: Simulation, policy, live, aborted,
                 # exact encoded bit count (planes + int8 scale headers)
                 # is what the link serializes and the tariff charges
                 enc = sim.encode_ship(k, edge.ship())
-                parts.append(enc)
+                parts.append((k, enc))
                 bits = enc.bits
+                if tel.enabled and sim.codec_ef is not None:
+                    sim.learn.record_ef_residual(tel, k, round_idx,
+                                                 sim.codec_ef)
             else:
                 route_pairs.extend(zip(acc_k, w_uns))
                 bits = codec_payload_bits(
@@ -641,6 +657,9 @@ def _hier_round_merge(sim: Simulation, policy, live, aborted,
                             phase="backhaul", round=round_idx)
                 tel.counter("backhaul.ships", 1.0, cell=k,
                             codec=topo.backhaul.codec, round=round_idx)
+            if tel.enabled:
+                for p, w_un in zip(acc_k, w_uns):
+                    sim.learn.note_contribution(p.client_id, w_un)
         else:
             lat = max(lat, lat_k)
             crit.append((lat_k, lat_k, 0.0,
@@ -655,10 +674,21 @@ def _hier_round_merge(sim: Simulation, policy, live, aborted,
         queue.pop()
     new_params = None
     if parts:
-        merged = cloud_merge([decode_partial(e) for e in parts],
+        decoded = [(k, decode_partial(e)) for k, e in parts]
+        cell_aggs = []
+        if tel.enabled:
+            # finalize each cell's aggregate while its buffers are still
+            # alive — the donated cloud merge below consumes them
+            cell_aggs = [(k, aggregation.finalize_trees(d.num, d.den))
+                         for k, d in decoded]
+        merged = cloud_merge([d for _, d in decoded],
                              use_kernel=sim.edge_kernel)
         new_params = finalize_apply(sorted_params, merged.num, merged.den,
                                     sim.server.server_lr)
+        if tel.enabled:
+            delta = tree_sub(sorted_params, new_params)
+            for k, cell_agg in cell_aggs:
+                sim.learn.record_cell(tel, k, round_idx, cell_agg, delta)
     elif route_pairs:
         if route == "mesh":
             new_params = _mesh_route_params(sim, route_pairs, sorted_params)
@@ -785,6 +815,15 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
             fl += p.update.flops
             cb += p.update.bits
             if tel.enabled:
+                sub_s = subs.get(p.alpha)
+                if sub_s is None:
+                    sub_s = shrinking.shrink(sorted_params, p.alpha,
+                                             sim.spec)
+                sim.learn.record_device(
+                    tel, p.client_id, t,
+                    sim.learn.device_stats(p.alpha, sub_s, tr,
+                                           p.update.values,
+                                           p.update.mask))
                 tel.span(f"device/{p.client_id}", "train", t_wall,
                          t_wall + p.t_cmp, round=t, cell=p.cell,
                          alpha=p.update.alpha, energy_j=p.e_cmp,
@@ -839,6 +878,7 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
             continue
 
         bh_bits, n_cells_rep, e_ship = 0.0, 0, 0.0
+        agg_delta = None
         if sim.topo is not None:
             (accepted, new_params, lat, e_ship, bh_bits, n_cells_rep,
              lat_parts) = _hier_round_merge(sim, policy, live, aborted,
@@ -850,6 +890,8 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
                 sim.fleet.debit(p.client_id, p.energy, t_wall)
             if new_params is not None:
                 params = new_params
+                if tel.enabled:
+                    agg_delta = tree_sub(sorted_params, new_params)
         else:
             accepted, scales, lat = policy.accept(live, 0.0)
             if aborted:
@@ -874,6 +916,11 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
                 w = apply_scales(w, scales)
                 params = sim.aggregate(sorted_params, accepted, w,
                                        fast=use_pool)
+                if tel.enabled:
+                    agg_delta = tree_sub(sorted_params, params)
+                    for p, wv in zip(accepted, np.asarray(w)):
+                        sim.learn.note_contribution(p.client_id,
+                                                    float(wv))
 
         log = hist.log_round(
             t, latency_s=lat, energy_j=en, flops=fl, comm_bits=cb,
@@ -895,9 +942,16 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
             latency_uplink_s=lat_parts[1],
             latency_backhaul_s=lat_parts[2])
         if tel.enabled:
+            if agg_delta is not None:
+                for p in accepted:
+                    sim.learn.record_alignment(tel, p.client_id, t,
+                                               p.update.values, agg_delta)
+            sim.learn.record_round(tel, t, agg_delta)
             tel.span("server", "round", t_wall - lat, t_wall, round=t,
                      n_clients=len(accepted), n_cells=n_cells_rep,
                      energy_j=en)
+            if tel.health is not None:
+                tel.health.evaluate(t, t_wall, sim.registry, tel)
         if t % rc.eval_every == 0 or t == rc.rounds - 1:
             acc, loss = sim.evaluate(params)
             hist.log_eval(log, acc, loss)
@@ -1168,6 +1222,11 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
             fl += b.update.flops
             cb += b.update.bits
             if tel.enabled:
+                sim.learn.record_device(
+                    tel, b.client_id, n_agg,
+                    sim.learn.device_stats(b.alpha, j.sub_params, tr,
+                                           b.update.values,
+                                           b.update.mask))
                 tel.span(f"device/{b.client_id}", "train",
                          b.dispatched_at, b.dispatched_at + b.t_cmp,
                          version=b.version, staleness=b.staleness,
@@ -1187,11 +1246,27 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
                                       b.fedhq_level) \
                 * staleness_scales([b.staleness], gamma)[0]
             stream_acc.absorb(b.update.values, b.update.mask, w_b)
-            b.update = dataclasses.replace(b.update, values=None,
-                                           mask=None)
+            if tel.enabled:
+                # keep the decoded pytrees alive until the post-merge
+                # alignment pass below — a telemetry-only memory cost of
+                # one buffer's worth of updates (the uninstrumented
+                # stream still drops them here)
+                sim.learn.note_contribution(b.client_id, float(w_b))
+            else:
+                b.update = dataclasses.replace(b.update, values=None,
+                                               mask=None)
         part = stream_acc.ship()
+        prev_current = current
         current = finalize_apply(current, part.num, part.den,
                                  sim.server.server_lr)
+        if tel.enabled:
+            agg_delta = tree_sub(prev_current, current)
+            for b in buffer:
+                sim.learn.record_alignment(tel, b.client_id, n_agg,
+                                           b.update.values, agg_delta)
+                b.update = dataclasses.replace(b.update, values=None,
+                                               mask=None)
+            sim.learn.record_round(tel, n_agg, agg_delta)
         version += 1
         version_params[version] = current
         # retain only versions still referenced by an in-flight client (a
@@ -1205,10 +1280,23 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
             tel.instant("server", "BUFFER_MERGE", now, version=version,
                         n_updates=len(buffer))
 
-        # fedbuff latency components log as zeros: the inter-merge
-        # interval is an arrival-process statistic, not a critical path
+        # Inter-merge latency attribution: the merge fires the instant
+        # its K-th update lands, so the triggering arrival (buffer[-1],
+        # whose COMPLETE is this event) is the interval's critical path.
+        # Its training time inside [last_agg_t, now] is the compute
+        # share; the remainder — its wire time plus the window's wait on
+        # the earlier K-1 arrivals — is the uplink share (the same
+        # convention the round-based split uses for barrier wait).
+        # fedbuff has no backhaul tier, so that component is 0; the
+        # three components sum to latency_s exactly (pinned by
+        # tests/test_telemetry.py).
+        lat = now - last_agg_t
+        trig = buffer[-1]
+        lo = max(trig.dispatched_at, last_agg_t)
+        compute_end = min(trig.dispatched_at + trig.t_cmp, now)
+        lat_train = max(0.0, compute_end - lo)
         log = hist.log_round(
-            n_agg - 1, latency_s=now - last_agg_t, energy_j=en,
+            n_agg - 1, latency_s=lat, energy_j=en,
             flops=fl, comm_bits=cb,
             mean_alpha=float(np.mean([b.update.alpha for b in buffer])),
             mean_beta=float(np.mean([b.update.beta_realized
@@ -1221,7 +1309,11 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
             mean_soc=(sim.fleet.battery.mean_soc_frac(now)
                       if sim.fleet.battery is not None else 1.0),
             t_max_effective=sim.effective_T_max(now),
-            energy_train_j=en_cmp, energy_uplink_j=en_com)
+            energy_train_j=en_cmp, energy_uplink_j=en_com,
+            latency_train_s=lat_train,
+            latency_uplink_s=lat - lat_train)
+        if tel.enabled and tel.health is not None:
+            tel.health.evaluate(n_agg - 1, now, sim.registry, tel)
         done = (orch.max_wallclock_s is None and n_agg >= rc.rounds)
         if (n_agg - 1) % rc.eval_every == 0 or done:
             acc, loss = sim.evaluate(current)

@@ -11,9 +11,19 @@ spans and instants exportable as Perfetto/Chrome-trace JSON and JSONL.
 :mod:`~repro.telemetry.profiler` optionally wraps a run in
 ``jax.profiler`` for kernel-level host timing.
 
+PR 8 adds the learning-dynamics layer on top: :mod:`~repro.telemetry.
+learning` (streaming update-norm / compression-error / contribution
+diagnostics — imported lazily by the orchestrator, only when a session
+is enabled, so the disabled path stays allocation-free) and
+:mod:`~repro.telemetry.health` (a rule-based :class:`HealthEngine`
+evaluating those series each round into ``ALERT`` trace instants and an
+``alerts.jsonl`` in the flush bundle).
+
 Disabled (the default) telemetry is :data:`NULL_TELEMETRY`: zero-cost
 no-ops, bitwise-invisible to the seeded simulation.
 """
+from repro.telemetry.health import (ALERT_KEYS, DEFAULT_RULES,
+                                    HealthEngine, HealthRule, load_rules)
 from repro.telemetry.manifest import (REQUIRED_KEYS, build_manifest,
                                       to_jsonable, trace_signature_hash,
                                       validate_manifest, write_manifest)
@@ -37,4 +47,6 @@ __all__ = [
     "Reference", "Verdict", "check_reference", "check_record",
     "extract_path", "DIRECTIONS", "LOWER", "HIGHER", "EXACT",
     "PASS", "FAIL", "SKIP",
+    "HealthEngine", "HealthRule", "DEFAULT_RULES", "load_rules",
+    "ALERT_KEYS",
 ]

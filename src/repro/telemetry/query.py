@@ -15,6 +15,14 @@ localized to a device/cell/phase **without re-running the simulation**:
   over a label dimension as CSV (histogram points print their stats).
 * ``spans [--top 10]`` — the slowest spans in ``trace.jsonl``, i.e.
   where the simulated timeline actually went.
+* ``health`` — the run's health alerts from ``alerts.jsonl`` (written
+  when the run was launched with ``--health``), one table row per
+  alert; ``--json`` dumps the raw records.
+
+Every subcommand degrades explicitly on empty or partial bundles — a
+bundle with no ``metrics.jsonl``, no ``round.*`` gauges, or no
+``dispatch.latency_s`` observations prints a "no data" line instead of
+raising (a half-flushed run is still inspectable).
 
 The phase axis and its RoundLog field mapping live here as the offline
 single source; ``repro.train.fl_loop`` keeps the live (identical)
@@ -46,8 +54,13 @@ PHASE_FIELDS = {
 
 
 def load_registry(telemetry_dir: str) -> MetricsRegistry:
-    """Rebuild the run's registry from ``<dir>/metrics.jsonl``."""
+    """Rebuild the run's registry from ``<dir>/metrics.jsonl``.
+
+    A missing file yields an *empty* registry rather than raising, so
+    the subcommands can report "no data" on partial bundles."""
     path = os.path.join(telemetry_dir, "metrics.jsonl")
+    if not os.path.exists(path):
+        return MetricsRegistry()
     with open(path) as f:
         return MetricsRegistry.from_records(
             json.loads(line) for line in f if line.strip())
@@ -121,13 +134,44 @@ def cmd_summary(args) -> int:
     totals = phase_totals(reg)
     if args.json:
         print(json.dumps(totals, indent=1))
+        return 0
+    if not round_indices(reg):
+        print("# no data: no round.* gauges in bundle "
+              f"({os.path.join(args.telemetry_dir, 'metrics.jsonl')})")
+    print(format_cost_table(totals))
+    hist = reg.summary("dispatch.latency_s")
+    if hist is not None:
+        print(f"[dispatch latency] n={hist['count']} "
+              f"p50={hist['p50']:.3f}s p95={hist['p95']:.3f}s "
+              f"p99={hist['p99']:.3f}s max={hist['max']:.3f}s")
     else:
-        print(format_cost_table(totals))
-        hist = reg.summary("dispatch.latency_s")
-        if hist is not None:
-            print(f"[dispatch latency] n={hist['count']} "
-                  f"p50={hist['p50']:.3f}s p95={hist['p95']:.3f}s "
-                  f"p99={hist['p99']:.3f}s max={hist['max']:.3f}s")
+        print("[dispatch latency] no observations")
+    return 0
+
+
+def cmd_health(args) -> int:
+    path = os.path.join(args.telemetry_dir, "alerts.jsonl")
+    if not os.path.exists(path):
+        print("# no alerts.jsonl in bundle (run with --health)")
+        return 0
+    alerts = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                alerts.append(json.loads(line))
+    if args.json:
+        print(json.dumps(alerts, indent=1))
+        return 0
+    if not alerts:
+        print("[health] 0 alerts")
+        return 0
+    print(f"[health] {len(alerts)} alert(s)")
+    print(f"  {'round':>5s} {'severity':>8s} {'rule':>20s} "
+          f"{'value':>12s} {'threshold':>12s}  message")
+    for a in alerts:
+        print(f"  {a['round']:>5d} {a['severity']:>8s} {a['rule']:>20s} "
+              f"{a['value']:>12.4g} {a['threshold']:>12.4g}  "
+              f"{a['message']}")
     return 0
 
 
@@ -154,6 +198,9 @@ def cmd_metric(args) -> int:
 
 def cmd_spans(args) -> int:
     path = os.path.join(args.telemetry_dir, "trace.jsonl")
+    if not os.path.exists(path):
+        print("# no trace.jsonl in bundle")
+        return 0
     spans = []
     with open(path) as f:
         for line in f:
@@ -198,6 +245,12 @@ def main(argv=None) -> int:
     p.add_argument("--telemetry-dir", required=True)
     p.add_argument("--top", type=int, default=10)
     p.set_defaults(fn=cmd_spans)
+
+    p = sub.add_parser("health", help="health alerts from alerts.jsonl")
+    p.add_argument("--telemetry-dir", required=True)
+    p.add_argument("--json", action="store_true",
+                   help="raw alert records instead of the table")
+    p.set_defaults(fn=cmd_health)
 
     args = ap.parse_args(argv)
     return args.fn(args)

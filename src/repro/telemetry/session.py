@@ -15,6 +15,9 @@ zero allocations from this module on the streaming aggregation path).
     <out_dir>/trace.jsonl           spans/instants, one JSON per line
     <out_dir>/metrics.jsonl         registry records, one JSON per line
     <out_dir>/manifest.json         provenance (see manifest.py)
+    <out_dir>/alerts.jsonl          health alerts (only when a
+                                    HealthEngine is attached via
+                                    ``tel.health``; see health.py)
 """
 from __future__ import annotations
 
@@ -37,6 +40,10 @@ class Telemetry:
         self.jax_profile = jax_profile
         self.registry = MetricsRegistry()
         self.sink = TraceSink()
+        # optional HealthEngine; attached by the launcher under --health
+        # (kept an attribute, not a constructor arg, so the session never
+        # imports the health module unless a run opts in)
+        self.health = None
 
     # ------------------------------------------------ emission (delegates)
 
@@ -76,6 +83,10 @@ class Telemetry:
         metrics = os.path.join(out_dir, "metrics.jsonl")
         self.registry.to_jsonl(metrics)
         paths["metrics_jsonl"] = metrics
+        if self.health is not None:
+            alerts = os.path.join(out_dir, "alerts.jsonl")
+            self.health.to_jsonl(alerts)
+            paths["alerts_jsonl"] = alerts
         if manifest is not None:
             paths["manifest"] = write_manifest(
                 os.path.join(out_dir, "manifest.json"), manifest)
@@ -90,6 +101,7 @@ class _NullTelemetry:
     jax_profile = False
     registry = None
     sink = None
+    health = None
 
     def span(self, track, name, t0, t1, **args):
         pass

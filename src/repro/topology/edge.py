@@ -139,6 +139,27 @@ class CodecErrorFeedback:
             jax.tree.map(jnp.subtract, part.den, dec.den))
         return enc
 
+    def residual_energy(self, cell_id: int) -> tuple[float, float]:
+        """``(||num_res||^2, ||den_res||^2)`` of the cell's stored
+        residual as host floats — the mass the wire still owes this
+        site's stream.  A healthy EF loop keeps it bounded by one
+        quantization step of the shipped planes; the health engine's
+        ``ef_residual_blowup`` detector watches the series for runaway
+        growth (a symptom of a moving sorted frame or a saturating
+        codec).  ``(0.0, 0.0)`` when no residual is stored (f32 wire,
+        or the cell never shipped).  Read-only: never touches the
+        stored pytrees' ownership, safe to call between rounds."""
+        stored = self._res.get(cell_id)
+        if stored is None:
+            return 0.0, 0.0
+
+        def energy(tree):
+            return float(sum(
+                float(jnp.sum(jnp.square(x.astype(jnp.float32))))
+                for x in jax.tree_util.tree_leaves(tree)))
+
+        return energy(stored[1]), energy(stored[2])
+
 
 def cloud_merge(partials: list[aggregation.PartialAgg], *,
                 use_kernel: bool = False) -> Optional[aggregation.PartialAgg]:

@@ -104,10 +104,14 @@ class RoundLog:
     # battery-aware deadline adaptation (equals fleet T_max when inactive)
     t_max_effective: float = 0.0  # T_max handed to the P4 solver this round
     # ---- per-phase cost attribution (telemetry subsystem).  Energy
-    # components sum to energy_j; latency components sum to latency_s
-    # (round-based policies; fedbuff's inter-merge interval has no
-    # critical-path decomposition and logs zeros); comm_bits is entirely
-    # uplink (backhaul traffic is the separate backhaul_bits field).
+    # components sum to energy_j and latency components sum to latency_s
+    # on every policy: round-based rounds split along the critical cell's
+    # path, and fedbuff attributes the inter-merge interval along its
+    # triggering arrival (its compute inside the window is the train
+    # share; wire time plus the wait on earlier arrivals is uplink;
+    # backhaul is 0 — there is no edge tier in the stream).  comm_bits
+    # is entirely uplink (backhaul traffic is the separate
+    # backhaul_bits field).
     energy_train_j: float = 0.0    # sum of client E_cmp (+ churn pro-rata)
     energy_uplink_j: float = 0.0   # sum of client E_com (+ churn pro-rata)
     energy_backhaul_j: float = 0.0  # edge->cloud shipping tariff
@@ -143,7 +147,7 @@ class RoundLog:
 
     def phase_latency(self) -> dict:
         """``{phase: seconds}`` of the round's critical path (sums to
-        latency_s for round-based policies)."""
+        latency_s on every policy)."""
         return {"shrink": 0.0, "train": self.latency_train_s,
                 "compress": 0.0, "uplink": self.latency_uplink_s,
                 "backhaul": self.latency_backhaul_s}

@@ -1,0 +1,421 @@
+"""Learning-dynamics observability (PR 8): exact stage-error
+decomposition, fairness/contribution accounting, the health engine's
+detectors, query-CLI degradation, and the end-to-end wiring."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression as C
+from repro.core import shrinking as S
+from repro.orchestrator import OrchestratorConfig, run_orchestrated
+from repro.sysmodel.population import FleetConfig
+from repro.telemetry import (ALERT_KEYS, NULL_TELEMETRY, HealthEngine,
+                             HealthRule, MetricsRegistry, Telemetry,
+                             load_rules)
+from repro.telemetry.learning import gini
+from repro.topology import BackhaulConfig, TopologyConfig
+from repro.train.fl_loop import FLRunConfig
+
+TINY = dict(rounds=3, n_train=128, n_test=64, eval_every=1, lr=0.1,
+            batch_size=32, seed=3, use_planner=False)
+
+
+# ------------------------------------------------ stage-error decomposition
+
+def _tree_normal(key, scale=1.0):
+    ka, kb = jax.random.split(key)
+    return {"a": jax.random.normal(ka, (8, 16)) * scale,
+            "b": jax.random.normal(kb, (16,)) * scale}
+
+
+def _flat64(tree):
+    return np.concatenate([np.asarray(x, np.float64).ravel()
+                           for x in jax.tree_util.tree_leaves(tree)])
+
+
+@pytest.mark.parametrize("seed,beta", [(0, 0.15), (1, 0.3), (2, 0.6),
+                                       (3, 0.9), (4, 1.0)])
+def test_stage_energies_partition_exactly(seed, beta):
+    """e_shrink + e_sparsify + e_quantize == ||u - u_hat||^2, checked
+    against an f64 reference over the real FGC pipeline with an
+    arbitrary width mask (so all three terms carry mass)."""
+    key = jax.random.PRNGKey(seed)
+    ku, kw, kq = jax.random.split(key, 3)
+    u = _tree_normal(ku)
+    leaves, treedef = jax.tree_util.tree_flatten(u)
+    w = jax.tree_util.tree_unflatten(treedef, [
+        (jax.random.uniform(jax.random.fold_in(kw, i), x.shape)
+         > 0.3).astype(jnp.float32)
+        for i, x in enumerate(leaves)])
+    comp = C.compress_update(jax.tree.map(jnp.multiply, u, w), beta, kq)
+    # final transmitted support is inside the width mask; decoded wire
+    # values are zero outside it
+    m = jax.tree.map(jnp.multiply, w, comp.mask)
+    q = jax.tree.map(jnp.multiply, comp.values, m)
+    st = C.stage_error_energies(u, w, m, q)
+
+    uf, wf, mf, qf = _flat64(u), _flat64(w), _flat64(m), _flat64(q)
+    ref = {
+        "norm": float(np.sum(uf ** 2)),
+        "shrink": float(np.sum((uf * (1 - wf)) ** 2)),
+        "sparsify": float(np.sum((uf * (wf - mf)) ** 2)),
+        "quantize": float(np.sum((uf * mf - qf) ** 2)),
+        "total": float(np.sum((uf - qf) ** 2)),
+    }
+    tol = dict(rel=1e-5, abs=1e-6 * max(ref["norm"], 1.0))
+    assert float(st.update_norm_sq) == pytest.approx(ref["norm"], **tol)
+    assert float(st.e_shrink) == pytest.approx(ref["shrink"], **tol)
+    assert float(st.e_sparsify) == pytest.approx(ref["sparsify"], **tol)
+    assert float(st.e_quantize) == pytest.approx(ref["quantize"], **tol)
+    assert float(st.e_total) == pytest.approx(ref["total"], **tol)
+    # the decomposition identity itself (f64 reference is exact; the f32
+    # realization only carries accumulation noise, ~1e-7 relative)
+    assert ref["shrink"] + ref["sparsify"] + ref["quantize"] \
+        == pytest.approx(ref["total"], rel=1e-12, abs=1e-12)
+    assert float(st.e_shrink) + float(st.e_sparsify) \
+        + float(st.e_quantize) \
+        == pytest.approx(float(st.e_total), rel=1e-5,
+                         abs=1e-6 * max(ref["norm"], 1.0))
+
+
+def test_stage_energies_empty_tree():
+    z = C.stage_error_energies({}, {}, {}, {})
+    assert all(float(v) == 0.0 for v in z)
+
+
+def test_width_mask_template_matches_expand_path():
+    """The template built from the full params alone equals the mask
+    ``expand_update`` returns from a real sub-update."""
+    from repro.configs import get_config
+    from repro.models.registry import build_model
+    cfg = get_config("fmnist-cnn")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    spec = S.cnn_shrink_spec(cfg)
+    sorted_p = S.sort_channels(params, spec)
+    for alpha in (0.25, 0.6, 1.0):
+        sub = S.shrink(sorted_p, alpha, spec)
+        _, mask = S.expand_update(sub, sorted_p, alpha, spec)
+        tmpl = S.width_mask_template(sorted_p, alpha, spec)
+        for a, b in zip(jax.tree_util.tree_leaves(mask),
+                        jax.tree_util.tree_leaves(tmpl)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------- EF residual energy
+
+def _partial(key, n=2048, count=2):
+    ku, kd = jax.random.split(key)
+    num = {"w": jax.random.normal(ku, (n,)) * 5.0,
+           "b": jax.random.normal(kd, (n // 8,))}
+    den = jax.tree.map(lambda x: jnp.abs(x) * 0.5, num)
+    from repro.core import aggregation as A
+    return A.PartialAgg(num=num, den=den, count=count)
+
+
+def test_ef_residual_energy_readout_is_passive():
+    """Reading ``residual_energy`` every round (what the recorder does)
+    must not disturb the PR 5 telescoping identity, and the readout must
+    equal the energy of the residual the wire actually still owes."""
+    from repro.topology import CodecErrorFeedback, decode_partial
+
+    key = jax.random.PRNGKey(0)
+    ef = CodecErrorFeedback()
+    cum_f32 = cum_ef = 0.0
+    worst_step = 0.0
+    for t in range(12):
+        key, k = jax.random.split(key)
+        part = _partial(k)
+        cum_f32 = cum_f32 + np.asarray(part.num["w"], np.float64)
+        enc = ef.encode_ship(0, part, "int8")
+        dec = decode_partial(enc)
+        cum_ef = cum_ef + np.asarray(dec.num["w"], np.float64)
+        worst_step = max(worst_step,
+                         float(np.abs(np.asarray(part.num["w"])).max())
+                         / 127.0)
+        # interleaved read-only probe, as the recorder performs it
+        e_num, e_den = ef.residual_energy(0)
+        assert e_num >= 0.0 and e_den >= 0.0
+        # the residual is exactly what the EF input owed minus what the
+        # wire delivered this round: recompute its num-plane energy
+        owed = {kk: np.asarray(v, np.float64)
+                for kk, v in part.num.items()}
+        # accumulate what was owed before this round's ship
+        if t == 0:
+            prev_owed = {kk: np.zeros_like(v) for kk, v in owed.items()}
+        carried = {kk: owed[kk] + prev_owed[kk] for kk in owed}
+        delivered = {kk: np.asarray(dec.num[kk], np.float64)
+                     for kk in owed}
+        prev_owed = {kk: carried[kk] - delivered[kk] for kk in owed}
+        expect = float(sum(np.sum(v ** 2) for v in prev_owed.values()))
+        assert e_num == pytest.approx(expect, rel=1e-3,
+                                      abs=1e-6 * max(expect, 1.0))
+    err_ef = np.abs(cum_ef - cum_f32).max()
+    assert err_ef <= 2.0 * worst_step + 1e-4, (err_ef, worst_step)
+    # never-shipped cell and exact f32 wire both read zero
+    assert ef.residual_energy(99) == (0.0, 0.0)
+    ef2 = CodecErrorFeedback()
+    ef2.encode_ship(1, _partial(jax.random.PRNGKey(7)), "f32")
+    assert ef2.residual_energy(1) == (0.0, 0.0)
+
+
+# ------------------------------------------------------------------ gini
+
+def test_gini_edge_cases():
+    assert gini(np.array([])) == 0.0
+    assert gini(np.zeros(5)) == 0.0
+    assert gini(np.ones(8)) == pytest.approx(0.0, abs=1e-12)
+    one_hot = np.zeros(4)
+    one_hot[2] = 3.0
+    assert gini(one_hot) == pytest.approx(0.75)      # (n-1)/n
+    assert 0.0 < gini(np.array([1.0, 2.0, 3.0, 10.0])) < 1.0
+
+
+# ---------------------------------------------------------- health engine
+
+def _reg(series: dict) -> MetricsRegistry:
+    """{name: [v0, v1, ...]} -> registry of round-labelled gauges."""
+    reg = MetricsRegistry()
+    for name, values in series.items():
+        for r, v in enumerate(values):
+            reg.gauge(name, v, round=r)
+    return reg
+
+
+def _sweep(engine: HealthEngine, reg: MetricsRegistry, n: int):
+    for r in range(n):
+        engine.evaluate(r, float(r), reg, NULL_TELEMETRY)
+    return engine.alerts()
+
+
+def test_health_divergence_spike_fires_on_jump():
+    reg = _reg({"learning.agg_update_norm": [1.0, 1.0, 1.0, 1.0, 10.0]})
+    engine = HealthEngine((HealthRule("div", "divergence_spike"),))
+    alerts = _sweep(engine, reg, 5)
+    assert [a["round"] for a in alerts] == [4]
+    a = alerts[0]
+    assert set(a) == set(ALERT_KEYS)
+    assert a["kind"] == "divergence_spike"
+    assert a["value"] == pytest.approx(10.0)
+    assert a["threshold"] == pytest.approx(3.0)      # 3x trailing median 1
+
+
+def test_health_spike_needs_history_and_ignores_flat():
+    reg = _reg({"learning.agg_update_norm": [10.0, 1.0, 1.0, 1.0, 1.0]})
+    engine = HealthEngine((HealthRule("div", "divergence_spike"),))
+    assert _sweep(engine, reg, 5) == []              # early jump: no history
+
+
+def test_health_silent_devices_after_grace_rounds():
+    reg = _reg({"learning.silent_fraction": [0.8, 0.8, 0.8, 0.2]})
+    engine = HealthEngine((HealthRule("sil", "silent_devices",
+                                      severity="critical"),))
+    alerts = _sweep(engine, reg, 4)
+    assert [a["round"] for a in alerts] == [2]       # min_round=2 gate
+    assert alerts[0]["severity"] == "critical"
+
+
+def test_health_backhaul_saturation_ratio():
+    reg = _reg({"round.latency_backhaul_s": [0.1, 0.9],
+                "round.latency_s": [1.0, 1.0]})
+    engine = HealthEngine((HealthRule("bh", "backhaul_saturation"),))
+    alerts = _sweep(engine, reg, 3)                  # round 2 has no data
+    assert [a["round"] for a in alerts] == [1]
+    assert alerts[0]["value"] == pytest.approx(0.9)
+
+
+def test_health_staleness_inflation_absolute_floor():
+    # inflating but below min_value=1.0 absolute floor: silent
+    reg = _reg({"round.mean_staleness": [0.1, 0.1, 0.1, 0.1, 0.5]})
+    engine = HealthEngine((HealthRule("st", "staleness_inflation"),))
+    assert _sweep(engine, reg, 5) == []
+    reg2 = _reg({"round.mean_staleness": [1.0, 1.0, 1.0, 1.0, 5.0]})
+    engine2 = HealthEngine((HealthRule("st", "staleness_inflation"),))
+    assert [a["round"] for a in _sweep(engine2, reg2, 5)] == [4]
+
+
+def test_health_ef_blowup_sums_cells():
+    reg = MetricsRegistry()
+    for r in range(5):
+        e = 10.0 if r == 4 else 1.0
+        for cell in (0, 1):
+            reg.gauge("learning.ef_residual_energy", e, cell=cell,
+                      round=r)
+    engine = HealthEngine((HealthRule("ef", "ef_residual_blowup"),))
+    alerts = _sweep(engine, reg, 5)
+    assert [a["round"] for a in alerts] == [4]
+    assert alerts[0]["value"] == pytest.approx(20.0)  # summed over cells
+
+
+def test_health_rule_validation():
+    with pytest.raises(ValueError):
+        HealthRule("x", "not_a_kind")
+    with pytest.raises(ValueError):
+        HealthRule("x", "divergence_spike", severity="fatal")
+    with pytest.raises(ValueError):
+        HealthRule("x", "divergence_spike", params={"windw": 3})
+    # param override + default fallback
+    r = HealthRule("x", "divergence_spike", params={"factor": 9.0})
+    assert r.param("factor") == 9.0 and r.param("window") == 5
+
+
+def test_load_rules_roundtrip_and_errors(tmp_path):
+    path = tmp_path / "rules.json"
+    path.write_text(json.dumps([
+        {"name": "bh0", "kind": "backhaul_saturation",
+         "params": {"threshold": 0.0}},
+        {"name": "div", "kind": "divergence_spike",
+         "severity": "critical"},
+    ]))
+    rules = load_rules(str(path))
+    assert [r.name for r in rules] == ["bh0", "div"]
+    assert rules[0].param("threshold") == 0.0
+    assert rules[1].severity == "critical"
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"name": "x"}))
+    with pytest.raises(ValueError):
+        load_rules(str(bad))
+    bad.write_text(json.dumps([{"kind": "divergence_spike"}]))
+    with pytest.raises(ValueError):
+        load_rules(str(bad))
+
+
+def test_health_summary_table():
+    engine = HealthEngine()
+    assert engine.summary_table() == ["[health] 0 alerts"]
+    reg = _reg({"learning.silent_fraction": [0.9, 0.9, 0.9, 0.9]})
+    engine = HealthEngine((HealthRule("sil", "silent_devices"),))
+    _sweep(engine, reg, 4)
+    lines = engine.summary_table()
+    assert lines[0] == "[health] 2 alert(s)"
+    assert any("sil" in ln and "x2" in ln for ln in lines[1:])
+
+
+# -------------------------------------------------- query CLI degradation
+
+def test_query_degrades_on_empty_bundle(tmp_path, capsys):
+    from repro.telemetry import query
+    d = str(tmp_path)
+    assert query.main(["summary", "--telemetry-dir", d]) == 0
+    out = capsys.readouterr().out
+    assert "# no data" in out and "[cost attribution]" in out
+    assert "no observations" in out
+    assert query.main(["health", "--telemetry-dir", d]) == 0
+    assert "no alerts.jsonl" in capsys.readouterr().out
+    assert query.main(["spans", "--telemetry-dir", d]) == 0
+    assert "no trace.jsonl" in capsys.readouterr().out
+
+
+def test_query_health_table_and_json(tmp_path, capsys):
+    from repro.telemetry import query
+    d = str(tmp_path)
+    reg = _reg({"learning.silent_fraction": [0.9, 0.9, 0.9]})
+    engine = HealthEngine((HealthRule("sil", "silent_devices"),))
+    _sweep(engine, reg, 3)
+    engine.to_jsonl(os.path.join(d, "alerts.jsonl"))
+    assert query.main(["health", "--telemetry-dir", d]) == 0
+    out = capsys.readouterr().out
+    assert "[health] 1 alert(s)" in out and "sil" in out
+    assert query.main(["health", "--telemetry-dir", d, "--json"]) == 0
+    rows = json.loads(capsys.readouterr().out)
+    assert len(rows) == 1 and set(rows[0]) == set(ALERT_KEYS)
+
+
+# ----------------------------------------------------- end-to-end wiring
+
+@pytest.mark.slow
+def test_learning_metrics_end_to_end_hier(tmp_path):
+    """A tiny instrumented hierarchical run emits the full ``learning.*``
+    set, its registry decomposition sums exactly, contribution shares
+    normalize, and the flush bundle carries a validating alerts.jsonl."""
+    tel = Telemetry(out_dir=str(tmp_path))
+    # a rule guaranteed to fire: any backhaul at all saturates at 0.0
+    tel.health = HealthEngine((
+        HealthRule("bh-any", "backhaul_saturation",
+                   params={"threshold": 0.0}),))
+    topo = TopologyConfig(kind="hier", n_cells=2,
+                          backhaul=BackhaulConfig(rate_bps=1e9,
+                                                  latency_s=0.01,
+                                                  codec="int8",
+                                                  error_feedback=True))
+    hist = run_orchestrated(
+        FLRunConfig(method="anycostfl", **TINY),
+        FleetConfig(n_devices=6, topology=topo),
+        OrchestratorConfig(policy="sync", use_pool=False),
+        telemetry=tel)
+    reg = tel.registry
+    rounds = sorted(reg.label_values("learning.update_norm", "round"))
+    assert rounds == list(range(TINY["rounds"]))
+    all_devices = reg.label_values("learning.update_norm", "device")
+    assert len(all_devices) == 6
+    prev_silent = 1.0
+    for r in rounds:
+        devices = [d for d in all_devices
+                   if reg.value("learning.update_norm", device=d,
+                                round=r) is not None]
+        assert devices
+        for d in devices:
+            total = reg.value("learning.error_total", device=d, round=r)
+            parts = [reg.value("learning.error_energy", device=d,
+                               round=r, phase=ph)
+                     for ph in ("shrink", "sparsify", "quantize")]
+            assert None not in parts and total is not None
+            assert sum(parts) == pytest.approx(total, rel=1e-4,
+                                               abs=1e-6)
+            cos = reg.value("learning.cosine_alignment", device=d,
+                            round=r)
+            assert cos is not None and -1.0 - 1e-5 <= cos <= 1.0 + 1e-5
+        shares = [v for (_, v) in reg.series(
+            "learning.contribution_share", "device", round=r)]
+        assert shares and sum(shares) == pytest.approx(1.0, rel=1e-9)
+        assert reg.value("learning.agg_update_norm", round=r) > 0.0
+        g = reg.value("learning.fairness_gini", round=r)
+        assert 0.0 <= g < 1.0
+        silent = reg.value("learning.silent_fraction", round=r)
+        assert 0.0 <= silent <= prev_silent  # cumulative: non-increasing
+        prev_silent = silent
+        for cell in (0, 1):
+            assert reg.value("learning.cell_divergence", cell=cell,
+                             round=r) is not None
+            assert reg.value("learning.ef_residual_energy", cell=cell,
+                             round=r) >= 0.0
+    assert hist.best_acc >= 0.0
+    # the saturation rule fired every round; the bundle carries it
+    assert len(tel.health.alerts()) == TINY["rounds"]
+    paths = tel.flush()
+    assert "alerts_jsonl" in paths
+    with open(paths["alerts_jsonl"]) as f:
+        recs = [json.loads(ln) for ln in f if ln.strip()]
+    assert len(recs) == TINY["rounds"]
+    assert all(set(rec) == set(ALERT_KEYS) for rec in recs)
+    # ALERT instants landed on the trace timeline
+    assert any(i.name == "ALERT" for i in tel.sink.instants)
+
+
+@pytest.mark.slow
+def test_learning_metrics_end_to_end_fedbuff():
+    tel = Telemetry()
+    hist = run_orchestrated(
+        FLRunConfig(method="anycostfl", **TINY),
+        FleetConfig(n_devices=6),
+        OrchestratorConfig(policy="fedbuff", buffer_size=3),
+        telemetry=tel)
+    assert hist.rounds
+    reg = tel.registry
+    rounds = sorted(reg.label_values("learning.agg_update_norm", "round"))
+    assert rounds, "fedbuff merges must close learning rounds"
+    for r in rounds:
+        assert reg.value("learning.agg_update_norm", round=r) > 0.0
+        # each merge admits buffer_size updates; a device buffered twice
+        # in one merge overwrites its share gauge, so the stored shares
+        # sum to at most 1 and hit exactly 1 on distinct-device merges
+        shares = [v for (_, v) in reg.series(
+            "learning.contribution_share", "device", round=r)]
+        assert 1 <= len(shares) <= 3
+        assert 0.0 < sum(shares) <= 1.0 + 1e-9
+        if len(shares) == 3:
+            assert sum(shares) == pytest.approx(1.0, rel=1e-9)

@@ -270,9 +270,12 @@ def test_fedbuff_energy_components_sum():
     for r in hist.rounds:
         assert r.energy_train_j + r.energy_uplink_j \
             == pytest.approx(r.energy_j, rel=1e-9, abs=1e-9)
-        # fedbuff logs no critical-path latency decomposition
-        assert r.latency_train_s == r.latency_uplink_s \
-            == r.latency_backhaul_s == 0.0
+        # critical-path latency attribution along the triggering arrival:
+        # components must sum exactly to the merge-to-merge latency
+        assert r.latency_train_s + r.latency_uplink_s \
+            + r.latency_backhaul_s \
+            == pytest.approx(r.latency_s, rel=1e-9, abs=1e-9)
+        assert r.latency_train_s >= 0.0 and r.latency_uplink_s >= 0.0
 
 
 # ------------------------------------------- RoundLog as registry view
