@@ -1,0 +1,16 @@
+#!/usr/bin/env python
+"""Thin wrapper: ``scripts/analysis_gate.py`` == ``python -m repro.analysis``.
+
+Keeps the invariant checker invokable from a bare checkout (no
+PYTHONPATH juggling): ``python scripts/analysis_gate.py src tests
+--baseline``.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main())

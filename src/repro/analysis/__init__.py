@@ -1,0 +1,53 @@
+"""repro.analysis — AST-based invariant checker for this repository.
+
+The repo runs on contracts that are otherwise enforced only dynamically
+or by convention; this package makes them machine-checked before any
+code executes:
+
+* **use-after-donate** — donated accumulators (``donate_argnums`` jits,
+  the Pallas ``input_output_aliases`` kernels, ``absorb_trees`` /
+  ``merge_trees``) are consumed by the call; reading the same buffer
+  again before rebinding raises a deleted-array error at runtime.  The
+  rule finds those reads statically.
+* **unseeded-randomness** — every stochastic draw must come from a
+  seeded ``np.random.default_rng([seed, stream, ...])`` stream (or a
+  ``jax.random`` key) so trace signatures replay; module-level
+  ``np.random.*`` / stdlib ``random.*`` state and wall-clock reads
+  (``time.time()`` / ``datetime.now()`` outside telemetry timestamps)
+  break that.
+* **unguarded-telemetry** — telemetry must stay bitwise-invisible and
+  allocation-free when disabled: every recording call on a telemetry /
+  registry / trace object in the orchestration layers must be dominated
+  by an ``if tel.enabled:`` test, and ``repro.telemetry.learning`` may
+  only be imported lazily (inside a function, under the guard).
+* **kernel-oracle-pairing** — every Pallas kernel exported from
+  ``kernels/`` must have a pure-jnp oracle registered in
+  ``kernels/ref.py`` (the ``ORACLES`` table) and an interpret-mode test
+  referencing it.
+* **io-alias-consistency** — ``input_output_aliases`` operand indices
+  inside a kernel must agree with the wrapping ``donate_argnums``:
+  exactly the donated parameters are aliased onto outputs.
+
+Run it as a CLI::
+
+    python -m repro.analysis [--format json] [--baseline [PATH]] [paths...]
+
+Findings are suppressed per line with ``# repro: ignore[rule-id]``
+(same line or a dedicated comment line directly above), and grandfathered
+via a committed baseline file (``--baseline`` / ``--write-baseline``).
+"""
+from repro.analysis.engine import (
+    Finding,
+    SourceFile,
+    collect_files,
+    run_analysis,
+)
+from repro.analysis.rules import ALL_RULES
+
+__all__ = [
+    "Finding",
+    "SourceFile",
+    "collect_files",
+    "run_analysis",
+    "ALL_RULES",
+]

@@ -1,0 +1,135 @@
+"""Shared AST helpers for the rule pack: dotted paths, scope/alias
+tracking primitives, and ``jax.jit(donate_argnums=...)`` detection.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+
+def dotted_path(node: ast.AST) -> Optional[str]:
+    """``self.part.num`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def last_segment(path: str) -> str:
+    return path.rsplit(".", 1)[-1]
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    """Dotted path of the callee (``jax.jit``, ``_absorb_jnp``, ...)."""
+    return dotted_path(call.func)
+
+
+def const_int_tuple(node: ast.AST) -> Optional[tuple[int, ...]]:
+    """Evaluate a literal int / (int, ...) node, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        vals = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, int) \
+                    and not isinstance(elt.value, bool):
+                vals.append(elt.value)
+            else:
+                return None
+        return tuple(vals)
+    return None
+
+
+def keyword_arg(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def donated_argnums(fn: ast.FunctionDef) -> Optional[tuple[int, ...]]:
+    """Donated positional argnums declared by a decorator.
+
+    Recognizes both spellings used in this repo::
+
+        @functools.partial(jax.jit, donate_argnums=(0, 1), ...)
+        @jax.jit            # with donate_argnums keyword
+
+    Returns None when the function is not a donating jit.
+    """
+    for dec in fn.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        callee = call_name(dec)
+        if callee is None:
+            continue
+        if last_segment(callee) == "partial":
+            # functools.partial(jax.jit, donate_argnums=...)
+            if dec.args and dotted_path(dec.args[0]) is not None \
+                    and last_segment(dotted_path(dec.args[0])) == "jit":
+                kw = keyword_arg(dec, "donate_argnums")
+                if kw is not None:
+                    return const_int_tuple(kw)
+        elif last_segment(callee) == "jit":
+            kw = keyword_arg(dec, "donate_argnums")
+            if kw is not None:
+                return const_int_tuple(kw)
+    return None
+
+
+def jit_assignment_donations(tree: ast.AST) -> dict[str, tuple[int, ...]]:
+    """``name -> donate_argnums`` for ``name = jax.jit(f, donate_argnums=...)``
+    bindings anywhere in ``tree`` (module level or inside functions)."""
+    out: dict[str, tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        target = node.targets[0]
+        if not isinstance(target, ast.Name):
+            continue
+        val = node.value
+        if not isinstance(val, ast.Call):
+            continue
+        callee = call_name(val)
+        if callee is None or last_segment(callee) != "jit":
+            continue
+        kw = keyword_arg(val, "donate_argnums")
+        if kw is None:
+            continue
+        nums = const_int_tuple(kw)
+        if nums is not None:
+            out[target.id] = nums
+    return out
+
+
+def assigned_paths(target: ast.AST) -> Iterator[str]:
+    """Dotted paths (re)bound by an assignment target (handles tuple /
+    list unpacking and starred targets)."""
+    if isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            yield from assigned_paths(elt)
+    elif isinstance(target, ast.Starred):
+        yield from assigned_paths(target.value)
+    else:
+        p = dotted_path(target)
+        if p is not None:
+            yield p
+
+
+def build_parents(tree: ast.AST) -> dict[ast.AST, ast.AST]:
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def functions(tree: ast.AST) -> Iterator[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node

@@ -1,0 +1,55 @@
+"""Rule registry: the invariant pack tailored to this codebase.
+
+Each rule is a :class:`Rule` wrapping a check function.  ``scope`` is
+``"file"`` (called once per parsed :class:`~repro.analysis.engine.
+SourceFile`) or ``"project"`` (called once with the whole scanned set —
+needed for cross-file contracts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.analysis.rules import (
+    donation,
+    io_alias,
+    kernel_oracle,
+    randomness,
+    telemetry_guard,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    scope: str                  # "file" | "project"
+    description: str
+    _fn: Callable = dataclasses.field(repr=False)
+
+    def check(self, src):
+        return self._fn(src)
+
+    def check_project(self, files):
+        return self._fn(files)
+
+
+ALL_RULES: tuple[Rule, ...] = (
+    Rule(donation.RULE_ID, "file",
+         "donated accumulators are consumed — no reads before rebinding",
+         donation.check),
+    Rule(io_alias.RULE_ID, "file",
+         "pallas input_output_aliases must agree with donate_argnums",
+         io_alias.check),
+    Rule(randomness.RULE_ID, "file",
+         "all randomness from seeded streams; no wall-clock reads",
+         randomness.check),
+    Rule(telemetry_guard.RULE_ID, "file",
+         "telemetry calls guarded by tel.enabled; learning imported "
+         "lazily",
+         telemetry_guard.check),
+    Rule(kernel_oracle.RULE_ID, "project",
+         "every Pallas kernel has a ref.py oracle + interpret-mode test",
+         kernel_oracle.check_project),
+)
+
+RULES_BY_ID = {r.id: r for r in ALL_RULES}

@@ -1,0 +1,187 @@
+"""io-alias-consistency: ``input_output_aliases`` must mirror
+``donate_argnums``.
+
+A donating jit around a ``pl.pallas_call`` is only in-place when the
+kernel aliases exactly the donated operands onto its outputs.  A donated
+parameter the kernel does not alias silently loses the in-place update
+(XLA frees the buffer, the kernel allocates a fresh output — the
+hier-scaling memory guard regresses); an aliased operand that is *not*
+donated shares a buffer the caller still owns (undefined contents).
+
+For every function decorated ``functools.partial(jax.jit,
+donate_argnums=...)`` (or ``jax.jit(donate_argnums=...)``) whose body
+invokes ``pl.pallas_call(...)(operands...)``, this rule resolves each
+pallas operand back to the function parameter it carries (tracking
+rebinding through padding — ``num = jnp.pad(num, ...)`` keeps the name —
+and ``*args`` splats bound to list literals, including
+length-preserving ``args = [f(x) for x in args]`` rewrites) and checks
+
+* every donated parameter appears as an alias key,
+* every alias key's operand resolves to a donated parameter,
+* a donating jit wrapping a pallas_call declares aliases at all.
+
+When operands cannot be resolved (opaque splat), the rule falls back to
+comparing counts: ``len(input_output_aliases) == len(donate_argnums)``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis import astutil
+from repro.analysis.engine import Finding, SourceFile
+
+RULE_ID = "io-alias-consistency"
+
+
+def _pallas_invocations(fn: ast.FunctionDef):
+    """Yield (pallas_call Call node, operand exprs or None) for
+    ``pl.pallas_call(...)(operands)`` patterns in ``fn``."""
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        inner = node.func
+        if isinstance(inner, ast.Call):
+            callee = astutil.call_name(inner)
+            if callee is not None and \
+                    astutil.last_segment(callee) == "pallas_call":
+                yield inner, list(node.args)
+                continue
+        callee = astutil.call_name(node)
+        if callee is not None and \
+                astutil.last_segment(callee) == "pallas_call":
+            # bare pallas_call(...) not immediately invoked: operands
+            # unknown (assigned and called later, or returned)
+            yield node, None
+
+
+def _alias_keys(call: ast.Call) -> Optional[list[int]]:
+    kw = astutil.keyword_arg(call, "input_output_aliases")
+    if kw is None:
+        return None
+    if not isinstance(kw, ast.Dict):
+        return []               # present but not a literal: count-check only
+    keys = []
+    for k in kw.keys:
+        if isinstance(k, ast.Constant) and isinstance(k.value, int):
+            keys.append(k.value)
+    return keys
+
+
+def _list_bindings(fn: ast.FunctionDef) -> dict[str, list]:
+    """name -> last list-literal the name was bound to, tracked through
+    length/order-preserving comprehensions over the same name."""
+    bindings: dict[str, list] = {}
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        t = node.targets[0]
+        if not isinstance(t, ast.Name):
+            continue
+        v = node.value
+        if isinstance(v, (ast.List, ast.Tuple)):
+            bindings[t.id] = list(v.elts)
+        elif isinstance(v, ast.ListComp) and len(v.generators) == 1:
+            gen = v.generators[0]
+            src_name = astutil.dotted_path(gen.iter)
+            if src_name == t.id and t.id in bindings:
+                pass            # element-wise rewrite keeps the mapping
+            elif src_name is not None and src_name in bindings:
+                bindings[t.id] = bindings[src_name]
+    return bindings
+
+
+def _param_names(fn: ast.FunctionDef) -> list[str]:
+    args = fn.args
+    return [a.arg for a in (*args.posonlyargs, *args.args)]
+
+
+def _resolve_operands(fn: ast.FunctionDef, operands: Optional[list]
+                      ) -> Optional[list[Optional[str]]]:
+    """Map pallas operands to parameter names; None entry = unresolved
+    operand, None return = operand list itself unknown/opaque."""
+    if operands is None:
+        return None
+    lists = _list_bindings(fn)
+    flat: list[Optional[ast.AST]] = []
+    for op in operands:
+        if isinstance(op, ast.Starred):
+            name = astutil.dotted_path(op.value)
+            if name is not None and name in lists:
+                flat.extend(lists[name])
+            else:
+                return None     # opaque splat: give up on positions
+        else:
+            flat.append(op)
+    params = set(_param_names(fn))
+    out: list[Optional[str]] = []
+    for op in flat:
+        p = astutil.dotted_path(op) if op is not None else None
+        out.append(p if p in params else None)
+    return out
+
+
+def check(src: SourceFile) -> Iterator[Finding]:
+    for fn in astutil.functions(src.tree):
+        donated = astutil.donated_argnums(fn)
+        params = _param_names(fn)
+        for pcall, operands in _pallas_invocations(fn):
+            keys = _alias_keys(pcall)
+            if donated is None and keys:
+                yield Finding(
+                    file=src.relpath, line=pcall.lineno, rule=RULE_ID,
+                    severity="error",
+                    message=(f"`{fn.name}` declares input_output_aliases "
+                             f"but is not wrapped in a donating jit "
+                             f"(donate_argnums) — the aliased operands "
+                             f"are buffers the caller still owns"))
+                continue
+            if donated is None:
+                continue
+            donated_params = [params[i] for i in donated
+                              if i < len(params)]
+            if keys is None:
+                yield Finding(
+                    file=src.relpath, line=pcall.lineno, rule=RULE_ID,
+                    severity="error",
+                    message=(f"`{fn.name}` donates "
+                             f"{tuple(donated_params)} but its "
+                             f"pallas_call has no input_output_aliases — "
+                             f"the donation is not in-place"))
+                continue
+            resolved = _resolve_operands(fn, operands)
+            if resolved is None:
+                if len(keys) != len(donated):
+                    yield Finding(
+                        file=src.relpath, line=pcall.lineno, rule=RULE_ID,
+                        severity="error",
+                        message=(f"`{fn.name}` donates {len(donated)} "
+                                 f"argument(s) but aliases {len(keys)} "
+                                 f"pallas operand(s)"))
+                continue
+            aliased_params = {resolved[k] for k in keys
+                              if 0 <= k < len(resolved)}
+            for k in keys:
+                if not 0 <= k < len(resolved):
+                    yield Finding(
+                        file=src.relpath, line=pcall.lineno, rule=RULE_ID,
+                        severity="error",
+                        message=(f"`{fn.name}`: alias key {k} is out of "
+                                 f"range for {len(resolved)} pallas "
+                                 f"operand(s)"))
+                elif resolved[k] is not None and \
+                        resolved[k] not in donated_params:
+                    yield Finding(
+                        file=src.relpath, line=pcall.lineno, rule=RULE_ID,
+                        severity="error",
+                        message=(f"`{fn.name}`: aliased operand {k} "
+                                 f"carries `{resolved[k]}`, which is not "
+                                 f"in donate_argnums {tuple(donated)}"))
+            for p in donated_params:
+                if p not in aliased_params:
+                    yield Finding(
+                        file=src.relpath, line=pcall.lineno, rule=RULE_ID,
+                        severity="error",
+                        message=(f"`{fn.name}`: donated parameter `{p}` "
+                                 f"is never aliased onto an output — its "
+                                 f"in-place update is silently dropped"))

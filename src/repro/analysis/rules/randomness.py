@@ -1,0 +1,143 @@
+"""unseeded-randomness: every stochastic draw must replay.
+
+Trace signatures (PR 1/5) replay a run bit-for-bit only if all
+randomness flows from seeded streams — ``np.random.default_rng([seed,
+stream, i])`` on the host, ``jax.random`` keys on device.  Three ways
+code breaks that, all caught here:
+
+* module-level numpy RNG state: any ``np.random.<fn>(...)`` call other
+  than ``default_rng`` (``np.random.rand``, ``np.random.seed``, ...),
+  and ``default_rng()`` called with *no* seed (OS-entropy seeded);
+* the stdlib ``random`` module: one process-global Mersenne Twister —
+  any ``random.<fn>(...)`` call, and unseeded ``random.Random()``;
+* wall-clock reads — ``time.time()`` / ``time.time_ns()`` /
+  ``time.monotonic()`` / ``time.perf_counter()`` / ``datetime.now()`` /
+  ``datetime.utcnow()``: values that differ per run.  The telemetry
+  package is exempt (timestamps are its job and are excluded from trace
+  signatures); everywhere else, wall-clock progress reporting needs an
+  explicit ``# repro: ignore[unseeded-randomness]`` stating why the
+  value never feeds simulation state.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis import astutil
+from repro.analysis.engine import Finding, SourceFile
+
+RULE_ID = "unseeded-randomness"
+
+#: path fragments whose files may read wall clocks (telemetry timestamps)
+WALLCLOCK_EXEMPT = ("/telemetry/",)
+
+_WALLCLOCK = {
+    ("time", "time"), ("time", "time_ns"), ("time", "monotonic"),
+    ("time", "monotonic_ns"), ("time", "perf_counter"),
+    ("time", "perf_counter_ns"),
+    ("datetime", "now"), ("datetime", "utcnow"), ("datetime", "today"),
+    ("date", "today"),
+}
+
+
+def _module_aliases(tree: ast.Module) -> dict[str, str]:
+    """local name -> canonical module ('np' -> 'numpy', 'random' ->
+    'random', ...) for plain imports."""
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                out[alias.asname or alias.name.split(".")[0]] = alias.name
+    return out
+
+
+def _from_imports(tree: ast.Module) -> dict[str, str]:
+    """local name -> 'module.name' for from-imports."""
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module:
+            for alias in node.names:
+                out[alias.asname or alias.name] = \
+                    f"{node.module}.{alias.name}"
+    return out
+
+
+def check(src: SourceFile) -> Iterator[Finding]:
+    aliases = _module_aliases(src.tree)
+    froms = _from_imports(src.tree)
+    wallclock_ok = any(frag in "/" + src.relpath
+                       for frag in WALLCLOCK_EXEMPT)
+    numpy_names = {n for n, mod in aliases.items()
+                   if mod in ("numpy", "numpy.random")}
+    has_std_random = any(mod == "random" for mod in aliases.values())
+
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        path = astutil.call_name(node)
+        if path is None:
+            continue
+        segs = path.split(".")
+
+        # --- numpy module-level RNG -----------------------------------
+        if len(segs) >= 3 and segs[0] in numpy_names \
+                and segs[-2] == "random" and segs[-1] != "default_rng" \
+                and segs[-1][:1].islower():
+            yield _f(src, node,
+                     f"`{path}(...)` uses numpy's module-level RNG "
+                     f"state; draw from a seeded "
+                     f"`np.random.default_rng([seed, stream])` instead")
+            continue
+        if segs[-1] == "default_rng" and not node.args and \
+                not node.keywords:
+            looks_numpy = (len(segs) == 1 and
+                           froms.get(path, "").endswith(
+                               "random.default_rng")) or \
+                          (len(segs) >= 2 and segs[-2] == "random")
+            if looks_numpy:
+                yield _f(src, node,
+                         "`default_rng()` with no seed draws from OS "
+                         "entropy; pass `[seed, stream]` so the trace "
+                         "signature replays")
+                continue
+
+        # --- stdlib random --------------------------------------------
+        if len(segs) == 2 and segs[0] == "random" and has_std_random \
+                and aliases.get("random") == "random":
+            if segs[1] == "Random" and not node.args:
+                yield _f(src, node,
+                         "unseeded `random.Random()`; pass an explicit "
+                         "seed derived from the run config")
+            elif segs[1][:1].islower():
+                yield _f(src, node,
+                         f"`{path}(...)` uses the process-global stdlib "
+                         f"RNG; use a seeded "
+                         f"`np.random.default_rng([...])` stream")
+            continue
+        if len(segs) == 1 and froms.get(path, "").startswith("random."):
+            yield _f(src, node,
+                     f"`{path}(...)` (from the stdlib `random` module) "
+                     f"uses process-global RNG state; use a seeded "
+                     f"`np.random.default_rng([...])` stream")
+            continue
+
+        # --- wall clock -----------------------------------------------
+        if wallclock_ok:
+            continue
+        if len(segs) >= 2 and (segs[-2], segs[-1]) in _WALLCLOCK:
+            yield _f(src, node,
+                     f"wall-clock `{path}()` outside the telemetry "
+                     f"package: per-run values break replay; use "
+                     f"simulated time, or justify with an ignore")
+        elif len(segs) == 1:
+            target = froms.get(path, "")
+            if target in ("time.time", "time.time_ns", "time.monotonic",
+                          "time.perf_counter"):
+                yield _f(src, node,
+                         f"wall-clock `{path}()` (from `time`) outside "
+                         f"the telemetry package breaks replay")
+
+
+def _f(src: SourceFile, node: ast.AST, message: str) -> Finding:
+    return Finding(file=src.relpath, line=node.lineno, rule=RULE_ID,
+                   severity="error", message=message)

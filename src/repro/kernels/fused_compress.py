@@ -82,11 +82,7 @@ def fused_sparsify_quantize(x: jax.Array, norms: jax.Array, thr: jax.Array,
 
 
 def fused_ref(x, norms, thr, u_min, u_max, n_levels, rand):
-    """Composition oracle: threshold_mask -> quantize (kernels/ref.py)."""
+    """Composition oracle — single home is kernels/ref.py (ORACLES)."""
     from repro.kernels import ref
-    xm, keep = ref.threshold_mask_ref(x, norms, thr)
-    mask = jnp.broadcast_to(keep[:, None], x.shape) * (jnp.abs(xm) > 0)
-    q, lvl = ref.quantize_ref(xm.reshape(-1), mask.reshape(-1), u_min,
-                              u_max, jnp.asarray(n_levels, jnp.float32),
-                              rand.reshape(-1))
-    return q.reshape(x.shape), lvl.reshape(x.shape)
+    return ref.fused_sparsify_quantize_ref(x, norms, thr, u_min, u_max,
+                                           n_levels, rand)

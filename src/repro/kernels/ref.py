@@ -9,9 +9,14 @@ import jax
 import jax.numpy as jnp
 
 
+def kernel_sumsq_ref(x: jax.Array) -> jax.Array:
+    """Row-wise sum of squares. x: (K, ksize) -> (K,) f32."""
+    return jnp.sum(jnp.square(x.astype(jnp.float32)), axis=-1)
+
+
 def kernel_l2_ref(x: jax.Array) -> jax.Array:
     """Row-wise L2 norms. x: (K, ksize) -> (K,) f32."""
-    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32)), axis=-1))
+    return jnp.sqrt(kernel_sumsq_ref(x))
 
 
 def threshold_mask_ref(x: jax.Array, norms: jax.Array, thr: jax.Array
@@ -66,3 +71,31 @@ def aio_merge_ref(num_a: jax.Array, den_a: jax.Array, num_b: jax.Array,
                   den_b: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Fuse two streaming-AIO accumulator pairs. All (N,)."""
     return num_a + num_b, den_a + den_b
+
+
+def fused_sparsify_quantize_ref(x, norms, thr, u_min, u_max, n_levels,
+                                rand):
+    """Composition oracle for the fused kernel: Eq. 2 thresholding into
+    Eq. 3-4 stochastic rounding (threshold_mask_ref -> quantize_ref)."""
+    xm, keep = threshold_mask_ref(x, norms, thr)
+    mask = jnp.broadcast_to(keep[:, None], x.shape) * (jnp.abs(xm) > 0)
+    q, lvl = quantize_ref(xm.reshape(-1), mask.reshape(-1), u_min,
+                          u_max, jnp.asarray(n_levels, jnp.float32),
+                          rand.reshape(-1))
+    return q.reshape(x.shape), lvl.reshape(x.shape)
+
+
+#: exported-kernel -> oracle pairing table.  The static invariant
+#: checker (``repro.analysis``, rule ``kernel-oracle-pairing``) enforces
+#: that every public Pallas kernel in this package has an entry here and
+#: an interpret-mode test; keep keys in sync with the kernel names.
+ORACLES = {
+    "aio_aggregate": aio_aggregate_ref,
+    "aio_absorb": aio_absorb_ref,
+    "aio_merge": aio_merge_ref,
+    "kernel_sumsq": kernel_sumsq_ref,
+    "kernel_l2": kernel_l2_ref,
+    "threshold_apply": threshold_mask_ref,
+    "prob_quantize": quantize_ref,
+    "fused_sparsify_quantize": fused_sparsify_quantize_ref,
+}

@@ -55,6 +55,8 @@ def run_pod(args):
         with mesh:
             jstep = jax.jit(step)
             losses = []
+            # repro: ignore[unseeded-randomness] — operator progress
+            # timing only; never feeds model or simulation state.
             t0 = time.time()
             for i in range(args.steps):
                 idx = rng.integers(0, docs.shape[0], args.batch)
@@ -65,6 +67,7 @@ def run_pod(args):
                 losses.append(float(loss))
                 if i % max(args.steps // 10, 1) == 0:
                     print(f"step {i:4d} loss {float(loss):.4f} "
+                          # repro: ignore[unseeded-randomness] — progress
                           f"({time.time() - t0:.1f}s)")
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
     if args.checkpoint:

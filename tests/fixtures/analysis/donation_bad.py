@@ -1,0 +1,15 @@
+"""Fixture: reads accumulators after a donating call (2 findings)."""
+from repro.topology.edge import absorb_trees, partial_merge
+
+
+def reads_after_absorb(num, den, update, mask, weight):
+    out = absorb_trees(num, den, update, mask, weight)
+    return out, num.sum()                     # `num` was donated
+
+
+def reads_donated_field_in_loop(parts):
+    acc = parts[0]
+    for p in parts[1:]:
+        partial_merge(acc, p)                 # consumes acc.num/acc.den
+        total = acc.num.sum()                 # back-edge + same-iter read
+    return total

@@ -1,0 +1,20 @@
+"""Fixture: donation done right — rebind before any further read."""
+from repro.topology.edge import absorb_trees, partial_merge
+
+
+def rebinds_after_absorb(num, den, update, mask, weight):
+    num, den = absorb_trees(num, den, update, mask, weight)
+    return num.sum() + den.sum()
+
+
+def carries_partial_forward(parts):
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = partial_merge(acc, p)
+    return acc.count                          # .count is never donated
+
+
+def branch_exit_is_not_fallthrough(num, den, u, m, w, use_fast):
+    if use_fast:
+        return absorb_trees(num, den, u, m, w)
+    return num + w * m * u, den + w * m       # fast path returned above

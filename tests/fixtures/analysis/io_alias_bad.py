@@ -1,0 +1,21 @@
+"""Fixture: donate_argnums / input_output_aliases disagreements
+(2 findings: missing aliases; alias on a non-donated operand)."""
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, u_ref, o_ref):
+    o_ref[...] = a_ref[...] + u_ref[...]
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def donates_without_alias(acc, update):
+    return pl.pallas_call(_kernel, out_shape=acc)(acc, update)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def aliases_wrong_operand(acc, update):
+    return pl.pallas_call(_kernel, out_shape=acc,
+                          input_output_aliases={1: 0})(acc, update)

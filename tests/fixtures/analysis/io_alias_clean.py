@@ -1,0 +1,19 @@
+"""Fixture: donation and aliasing agree — true in-place update."""
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, u_ref, o_ref):
+    o_ref[...] = a_ref[...] + u_ref[...]
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def inplace_accumulate(acc, update):
+    return pl.pallas_call(_kernel, out_shape=acc,
+                          input_output_aliases={0: 0})(acc, update)
+
+
+def plain_call_no_donation(acc, update):
+    return pl.pallas_call(_kernel, out_shape=acc)(acc, update)

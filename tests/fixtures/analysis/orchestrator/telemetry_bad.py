@@ -1,0 +1,11 @@
+"""Fixture: telemetry calls outside any `.enabled` guard (3 findings:
+two unguarded calls + one module-level learning import)."""
+import repro.telemetry.learning               # materializes when off
+
+
+def run_round(sim, tel, t):
+    tel.span("round", index=t)                # no guard at all
+    result = sim.step(t)
+    if t % 10 == 0:
+        sim.registry.observe("round.ms", 1.0)  # recorder write, unguarded
+    return result

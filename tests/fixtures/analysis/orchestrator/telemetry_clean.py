@@ -1,0 +1,15 @@
+"""Fixture: every telemetry touch dominated by an `.enabled` test."""
+
+
+def run_round(sim, tel, t):
+    if tel.enabled:
+        tel.span("round", index=t)
+        if tel.enabled:
+            from repro.telemetry import learning  # lazy, guarded
+            learning.gini([1.0])
+    result = sim.step(t)
+    tel.enabled and tel.instant("stepped")    # boolean-guard form
+    if not tel.enabled:
+        return result
+    tel.flush()                               # early-exit guard above
+    return result

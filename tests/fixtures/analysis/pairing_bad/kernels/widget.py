@@ -1,0 +1,10 @@
+"""Fixture: Pallas kernel exported with no sibling ref.py oracle."""
+from jax.experimental import pallas as pl
+
+
+def _body(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def widget_double(x):
+    return pl.pallas_call(_body, out_shape=x)(x)

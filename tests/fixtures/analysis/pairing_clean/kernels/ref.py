@@ -1,0 +1,10 @@
+"""Fixture oracle table for the pairing_clean kernels package."""
+
+
+def widget_double_ref(x):
+    return x * 2
+
+
+ORACLES = {
+    "widget_double": widget_double_ref,
+}

@@ -1,0 +1,14 @@
+"""Fixture: unseeded / wall-clock nondeterminism (4+ findings)."""
+import random
+import time
+
+import numpy as np
+from numpy.random import default_rng
+
+
+def unseeded_everything(n):
+    a = np.random.rand(n)                     # legacy global RNG
+    rng = default_rng()                       # OS-entropy seed
+    b = random.random()                       # stdlib global RNG
+    t0 = time.time()                          # wall clock
+    return a, rng, b, t0

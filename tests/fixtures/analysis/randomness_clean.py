@@ -1,0 +1,11 @@
+"""Fixture: explicit seeds everywhere — nothing to flag."""
+import random
+
+import numpy as np
+
+
+def seeded_everything(seed, n):
+    rng = np.random.default_rng(seed)
+    r = random.Random(seed)
+    local = rng.normal(size=n)                # method on a seeded rng
+    return local, r.random()

@@ -1,0 +1,249 @@
+"""repro.analysis: every rule fires on its violating fixture and stays
+silent on its clean twin; suppressions, baselines, and the CLI contract
+(exit codes, JSON, the committed-baseline self-check); and the
+acceptance drills — injecting a use-after-donate into a scratch copy of
+topology/edge.py and an unguarded telemetry call into a scratch copy of
+orchestrator/runner.py must be caught."""
+import json
+import os
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import run_analysis
+from repro.analysis.baseline import (apply_baseline, load_baseline,
+                                     save_baseline)
+from repro.analysis.engine import collect_files
+from repro.analysis.rules import ALL_RULES, RULES_BY_ID
+
+REPO = Path(__file__).resolve().parent.parent
+FIX = REPO / "tests" / "fixtures" / "analysis"
+
+RULE_IDS = ("use-after-donate", "unseeded-randomness",
+            "unguarded-telemetry", "kernel-oracle-pairing",
+            "io-alias-consistency")
+
+
+def _scan(paths, rule_id=None):
+    rules = [RULES_BY_ID[rule_id]] if rule_id else None
+    return run_analysis([str(p) for p in paths], rules=rules,
+                        root=str(REPO))
+
+
+def _cli(*args, cwd=REPO):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run([sys.executable, "-m", "repro.analysis",
+                           *[str(a) for a in args]],
+                          cwd=cwd, env=env, capture_output=True,
+                          text=True)
+
+
+# ---------------------------------------------------------------- rules
+
+def test_registry_covers_the_contracted_rules():
+    assert {r.id for r in ALL_RULES} == set(RULE_IDS)
+
+
+@pytest.mark.parametrize("rule_id,bad,clean,min_hits", [
+    ("use-after-donate", "donation_bad.py", "donation_clean.py", 2),
+    ("unseeded-randomness", "randomness_bad.py",
+     "randomness_clean.py", 4),
+    ("unguarded-telemetry", "orchestrator/telemetry_bad.py",
+     "orchestrator/telemetry_clean.py", 3),
+    ("io-alias-consistency", "io_alias_bad.py", "io_alias_clean.py", 2),
+])
+def test_rule_fires_and_stays_silent(rule_id, bad, clean, min_hits):
+    hits = _scan([FIX / bad], rule_id)
+    assert len(hits) >= min_hits
+    assert all(f.rule == rule_id for f in hits)
+    assert _scan([FIX / clean], rule_id) == []
+
+
+def test_kernel_oracle_pairing_fires_without_ref():
+    hits = _scan([FIX / "pairing_bad/kernels/widget.py"],
+                 "kernel-oracle-pairing")
+    assert len(hits) == 1
+    assert "no sibling kernels/ref.py" in hits[0].message
+
+
+def test_kernel_oracle_pairing_silent_with_oracle():
+    files = [FIX / "pairing_clean/kernels/widget.py",
+             FIX / "pairing_clean/kernels/ref.py"]
+    assert _scan(files, "kernel-oracle-pairing") == []
+
+
+def test_kernel_oracle_pairing_requires_interpret_test(tmp_path):
+    """With a test file in the scanned set, an untested kernel is
+    flagged even when its oracle exists."""
+    pkg = tmp_path / "kernels"
+    pkg.mkdir()
+    shutil.copy(FIX / "pairing_clean/kernels/widget.py", pkg)
+    shutil.copy(FIX / "pairing_clean/kernels/ref.py", pkg)
+    (tmp_path / "test_other.py").write_text(
+        "from kernels.ref import widget_double_ref\n"
+        "def test_nothing():\n"
+        "    assert callable(widget_double_ref)\n")
+    hits = _scan([pkg / "widget.py", pkg / "ref.py",
+                  tmp_path / "test_other.py"], "kernel-oracle-pairing")
+    assert any("interpret-mode test" in f.message for f in hits)
+
+
+# ---------------------------------------- engine: suppression, baseline
+
+def test_inline_suppression_silences_a_finding(tmp_path):
+    f = tmp_path / "snippet.py"
+    f.write_text("import numpy as np\n"
+                 "def f(n):\n"
+                 "    # repro: ignore[unseeded-randomness] justified\n"
+                 "    return np.random.rand(n)\n")
+    assert _scan([f], "unseeded-randomness") == []
+    f.write_text("import numpy as np\n"
+                 "def f(n):\n"
+                 "    return np.random.rand(n)\n")
+    assert len(_scan([f], "unseeded-randomness")) == 1
+
+
+def test_suppression_scans_contiguous_comment_block(tmp_path):
+    f = tmp_path / "snippet.py"
+    f.write_text("import time\n"
+                 "def f():\n"
+                 "    # repro: ignore[unseeded-randomness] — this is a\n"
+                 "    # multi-line justification for the wall clock\n"
+                 "    # read below; the tag sits two lines up.\n"
+                 "    return time.time()\n")
+    assert _scan([f], "unseeded-randomness") == []
+
+
+def test_parse_error_becomes_a_finding(tmp_path):
+    f = tmp_path / "broken.py"
+    f.write_text("def f(:\n")
+    hits = run_analysis([str(f)], root=str(tmp_path))
+    assert [h.rule for h in hits] == ["parse-error"]
+
+
+def test_fixture_corpus_is_excluded_from_directory_walks():
+    files = collect_files([str(REPO / "tests")], root=str(REPO))
+    assert not any("fixtures/analysis" in s.relpath for s in files)
+    explicit = collect_files([str(FIX / "donation_bad.py")],
+                             root=str(REPO))
+    assert len(explicit) == 1
+
+
+def test_baseline_roundtrip_grandfathers_and_reports_stale(tmp_path):
+    hits = _scan([FIX / "randomness_bad.py"], "unseeded-randomness")
+    bl = tmp_path / "bl.json"
+    save_baseline(str(bl), hits)
+    base = load_baseline(str(bl))
+    new, old, stale = apply_baseline(hits, base)
+    assert new == [] and len(old) == len(hits) and not stale
+    # fixing one finding leaves a stale entry; a fresh one is new
+    new, old, stale = apply_baseline(hits[1:], base)
+    assert new == [] and sum(stale.values()) == 1
+    fresh = _scan([FIX / "donation_bad.py"], "use-after-donate")
+    new, old, _ = apply_baseline(hits + fresh, base)
+    assert new == fresh
+
+
+def test_line_shifts_do_not_churn_baseline_keys(tmp_path):
+    f = tmp_path / "snippet.py"
+    f.write_text("import numpy as np\n"
+                 "def f(n):\n"
+                 "    return np.random.rand(n)\n")
+    before = run_analysis([str(f)], root=str(tmp_path))
+    f.write_text("import numpy as np\n\n\n"
+                 "def f(n):\n"
+                 "    return np.random.rand(n)\n")
+    after = run_analysis([str(f)], root=str(tmp_path))
+    assert [x.key() for x in before] == [x.key() for x in after]
+    assert before[0].line != after[0].line
+
+
+# ------------------------------------------------------------------ CLI
+
+def test_cli_lists_all_rules():
+    p = _cli("--list-rules")
+    assert p.returncode == 0
+    for rid in RULE_IDS:
+        assert rid in p.stdout
+
+
+def test_cli_src_tree_is_clean():
+    """The acceptance bar: zero unbaselined findings on the final tree."""
+    p = _cli("src")
+    assert p.returncode == 0, p.stdout + p.stderr
+
+
+def test_cli_src_and_tests_pass_against_committed_baseline():
+    p = _cli("src", "tests", "--baseline")
+    assert p.returncode == 0, p.stdout + p.stderr
+
+
+def test_cli_exit_one_and_json_on_findings():
+    p = _cli(FIX / "donation_bad.py", "--format", "json")
+    assert p.returncode == 1
+    doc = json.loads(p.stdout)
+    assert doc["findings"] and all(
+        f["rule"] == "use-after-donate" for f in doc["findings"])
+
+
+def test_cli_unknown_rule_is_usage_error():
+    p = _cli("--rule", "no-such-rule", "src")
+    assert p.returncode == 2
+
+
+def test_cli_write_baseline_then_clean(tmp_path):
+    bl = tmp_path / "bl.json"
+    p = _cli(FIX / "randomness_bad.py", "--write-baseline", bl)
+    assert p.returncode == 0
+    p = _cli(FIX / "randomness_bad.py", "--baseline", bl)
+    assert p.returncode == 0
+    p = _cli(FIX / "randomness_bad.py", FIX / "donation_bad.py",
+             "--baseline", bl)
+    assert p.returncode == 1
+
+
+# ------------------------------------------- acceptance: injected bugs
+
+def test_injected_use_after_donate_is_caught(tmp_path):
+    scratch = tmp_path / "topology"
+    scratch.mkdir()
+    dst = scratch / "edge.py"
+    shutil.copy(REPO / "src/repro/topology/edge.py", dst)
+    with open(dst, "a") as fh:
+        fh.write("\n\ndef _injected(num, den, u, m, w):\n"
+                 "    out = absorb_trees(num, den, u, m, w)\n"
+                 "    return out, num.sum()\n")
+    p = _cli(dst)
+    assert p.returncode == 1
+    assert "use-after-donate" in p.stdout
+    assert "`num.sum` was donated to `absorb_trees`" in p.stdout
+
+
+def test_injected_unguarded_telemetry_is_caught(tmp_path):
+    scratch = tmp_path / "orchestrator"
+    scratch.mkdir()
+    dst = scratch / "runner.py"
+    shutil.copy(REPO / "src/repro/orchestrator/runner.py", dst)
+    with open(dst, "a") as fh:
+        fh.write("\n\ndef _injected(sim, tel):\n"
+                 "    tel.span('injected')\n"
+                 "    return sim\n")
+    p = _cli(dst)
+    assert p.returncode == 1
+    assert "unguarded-telemetry" in p.stdout
+
+
+def test_unmodified_scratch_copies_are_clean(tmp_path):
+    """The injection drills above prove detection, not pre-existing
+    noise: pristine copies of the same files must scan clean."""
+    for sub, name in (("topology", "edge.py"),
+                      ("orchestrator", "runner.py")):
+        d = tmp_path / sub
+        d.mkdir()
+        shutil.copy(REPO / "src/repro" / sub / name, d / name)
+        p = _cli(d / name)
+        assert p.returncode == 0, p.stdout

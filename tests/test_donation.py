@@ -54,6 +54,7 @@ def test_pallas_absorb_aliases_accumulator():
     want = ref.aio_absorb_ref(num, den, u, m, 0.7)
     got = aio_agg.aio_absorb(num, den, u, m, 0.7, interpret=True,
                              block_n=1024)
+    # repro: ignore[use-after-donate] — this test *asserts* the deletion
     assert num.is_deleted() and den.is_deleted()
     for g, w in zip(got, want):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-5)
@@ -65,6 +66,7 @@ def test_pallas_merge_aliases_a_side():
     na, da, nb, db = (jax.random.normal(k, (N,)) for k in ks)
     want = ref.aio_merge_ref(na, da, nb, db)
     got = aio_agg.aio_merge(na, da, nb, db, interpret=True, block_n=1024)
+    # repro: ignore[use-after-donate] — this test *asserts* the deletion
     assert na.is_deleted() and da.is_deleted()
     assert not nb.is_deleted() and not db.is_deleted()  # b side read-only
     for g, w in zip(got, want):

@@ -75,11 +75,15 @@ def test_chained_absorb_matches_batched_kernel():
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_kernel_sumsq(K, C, dtype):
     x = jax.random.normal(KEY, (K, C), dtype)
+    rtol = 3e-3 if dtype == jnp.bfloat16 else 1e-5
+    ss = sparsify.kernel_sumsq(x, interpret=True)
+    np.testing.assert_allclose(np.asarray(ss),
+                               np.asarray(ref.kernel_sumsq_ref(x)),
+                               rtol=rtol, atol=1e-4)
     out = sparsify.kernel_l2(x, interpret=True)
     expect = ref.kernel_l2_ref(x)
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
-                               rtol=3e-3 if dtype == jnp.bfloat16 else 1e-5,
-                               atol=1e-4)
+                               rtol=rtol, atol=1e-4)
 
 
 @pytest.mark.parametrize("K,C", [(64, 256), (37, 129)])
@@ -131,12 +135,17 @@ def test_ops_absorb_merge_dispatch_matches_ref():
     u = jax.random.normal(ks[2], (300,))
     m = (jax.random.uniform(ks[3], (300,)) > 0.5).astype(jnp.float32)
     a = ops.aio_absorb_op(num, den, u, m, 0.6, use_pallas=False)
-    # the pallas routes donate their accumulator operands — feed copies
+    # the pallas routes donate their accumulator operands — feed copies.
+    # use_pallas=False above is the non-donating ref route, so num/den
+    # are still live here.
+    # repro: ignore[use-after-donate]
     b = ops.aio_absorb_op(jnp.copy(num), jnp.copy(den), u, m, 0.6,
                           use_pallas=True)
     for x, y in zip(a, b):
         np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+    # repro: ignore[use-after-donate] — same: ref route does not donate
     a2 = ops.aio_merge_op(num, den, u, m, use_pallas=False)
+    # repro: ignore[use-after-donate] — same: ref route does not donate
     b2 = ops.aio_merge_op(jnp.copy(num), jnp.copy(den), u, m,
                           use_pallas=True)
     for x, y in zip(a2, b2):

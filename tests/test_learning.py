@@ -17,6 +17,7 @@ from repro.sysmodel.population import FleetConfig
 from repro.telemetry import (ALERT_KEYS, NULL_TELEMETRY, HealthEngine,
                              HealthRule, MetricsRegistry, Telemetry,
                              load_rules)
+# repro: ignore[unguarded-telemetry] — this file tests learning itself
 from repro.telemetry.learning import gini
 from repro.topology import BackhaulConfig, TopologyConfig
 from repro.train.fl_loop import FLRunConfig
