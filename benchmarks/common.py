@@ -23,6 +23,11 @@ from repro.train.fl_loop import run_fl, FLRunConfig  # noqa: E402
 
 CACHE_DIR = "experiments/fl"
 
+# BENCH_TELEMETRY=1 flushes one telemetry bundle per cached run here
+# (rollup + sampled, so the bundle stays bounded at any fleet size);
+# two bundles diff with `python -m repro.telemetry.query diff A/ B/`
+TELEMETRY_DIR = os.path.join(CACHE_DIR, "telemetry")
+
 # manifest-keyed benchmark trajectory files (BENCH_<section>.json) live
 # at the repo root so the perf history is a tracked, diffable file set;
 # BENCH_TRAJECTORY_ROOT redirects them (tests, scratch runs)
@@ -193,7 +198,18 @@ def run_cached(method: str, *, seed: int = 0, iid: bool = True,
                           n_test=sc["n_test"], eval_every=sc["eval_every"],
                           lr=0.1, **run_kw)
     fleet = FleetConfig(n_devices=sc["n_devices"], **fleet_kw)
-    hist = run_fl(run_cfg, fleet)
+    telemetry = None
+    if os.environ.get("BENCH_TELEMETRY"):
+        from repro.telemetry import RollupPolicy, Telemetry
+        telemetry = Telemetry(
+            os.path.join(TELEMETRY_DIR, name),
+            rollup=RollupPolicy(seed=seed),
+            trace_sample=0.1, trace_seed=seed)
+    hist = run_fl(run_cfg, fleet, telemetry=telemetry)
+    if telemetry is not None:
+        telemetry.flush(manifest=build_manifest(
+            run_cfg, fleet, trace_signature=hist.trace,
+            extra={"benchmark": "run_cached", "name": name}))
     result = {
         "method": method, "tag": tag, "iid": iid, "seed": seed,
         "best_acc": hist.best_acc,

@@ -204,6 +204,110 @@ def measure_telemetry_overhead(n_absorbs: int = 64, n: int = 16384,
             "telemetry_alloc_bytes": int(tel_bytes)}
 
 
+# --------------------------- 1b') telemetry memory vs fleet size (PR 10)
+
+def measure_telemetry_scaling(fleet_sizes=(1000, 10000), rounds: int = 3,
+                              target_traced: int = 32,
+                              seed: int = 0) -> dict:
+    """Telemetry peak host memory vs synthetic fleet size, rollup on.
+
+    Drives a registry + trace sink with per-device emissions (latency
+    observation, energy counter, train span per device per round — the
+    runner's shapes) at each fleet size, with a
+    :class:`~repro.telemetry.sketch.RollupPolicy` folding the device
+    label into per-cell sketches and ``--trace-sample``-style hash
+    sampling holding the traced-device budget constant.  Gateable
+    booleans:
+
+    * ``peak_flat`` — tracemalloc peak of the sketch path flat in device
+      count (vs the exact path's linear growth, also measured);
+    * ``rank_err_ok`` — pooled sketch quantiles within the declared
+      rank-error bound of ``numpy.percentile`` over the full stream;
+    * ``replay_stable`` — a second identical pass reproduces the metric
+      records (sketch digests included) and the sampled track set
+      bitwise.
+    """
+    import tracemalloc
+
+    from repro.telemetry import RollupPolicy, Telemetry
+
+    def emit(n, vals, rollup: bool):
+        tel = Telemetry(
+            rollup=RollupPolicy(device_threshold=1, sketch_capacity=256,
+                                top_k=8, seed=seed) if rollup else None,
+            trace_sample=min(1.0, target_traced / n) if rollup else None,
+            trace_seed=seed)
+        tel.set_fleet_size(n)
+        for r in range(rounds):
+            row = vals[r]
+            for d in range(n):
+                v = row[d]
+                tel.observe("dispatch.latency_s", v, device=d,
+                            cell=d % 4, round=r)
+                tel.counter("cost.energy_j", 2.0 * v, device=d,
+                            cell=d % 4, phase="train", round=r)
+                tel.span(f"device/{d}", "train", float(r),
+                         float(r) + v, round=r)
+        return tel
+
+    rows = []
+    tel_big = None
+    vals_big = None
+    for n in fleet_sizes:
+        rng = np.random.default_rng([seed, 0x7E1, n])
+        # python floats materialized before the traced window so the
+        # measurement sees telemetry structures, not the input stream
+        vals = rng.gamma(2.0, 0.5, size=(rounds, n)).tolist()
+        tracemalloc.start()
+        tel = emit(n, vals, rollup=True)
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        tracemalloc.start()
+        exact = emit(n, vals, rollup=False)
+        _, exact_peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        rows.append({"n_devices": n, "rollup_peak_bytes": int(peak),
+                     "exact_peak_bytes": int(exact_peak),
+                     "n_spans": len(tel.sink.spans),
+                     "n_registry_cells": len(tel.registry)})
+        tel_big, vals_big = tel, vals
+        del exact
+
+    peak_ratio = rows[-1]["rollup_peak_bytes"] \
+        / max(rows[0]["rollup_peak_bytes"], 1)
+    device_ratio = fleet_sizes[-1] / fleet_sizes[0]
+
+    # pooled sketch quantiles vs numpy.percentile on the full stream
+    stream = np.sort(np.ravel(vals_big))
+    summ = tel_big.registry.summary("dispatch.latency_s")
+    sketches = [v for v in
+                tel_big.registry._metrics["dispatch.latency_s"].values()]
+    bound = max(sk.rank_error_bound() for sk in sketches)
+    rank_err = 0.0
+    for q in (0.5, 0.95, 0.99):
+        est = summ[f"p{q * 100:g}"]
+        pos = np.searchsorted(stream, est) / max(len(stream) - 1, 1)
+        rank_err = max(rank_err, abs(float(pos) - q))
+
+    # replay: same seed, same stream -> bitwise-identical records and
+    # identical sampled trace rows
+    tel_replay = emit(fleet_sizes[-1], vals_big, rollup=True)
+    replay_stable = (
+        list(tel_replay.registry.records())
+        == list(tel_big.registry.records())
+        and [s.track for s in tel_replay.sink.spans]
+        == [s.track for s in tel_big.sink.spans])
+
+    return {"rows": rows, "rounds": rounds,
+            "target_traced": target_traced,
+            "peak_ratio": peak_ratio,
+            "device_ratio": device_ratio,
+            "peak_flat": peak_ratio <= 1.5,
+            "rank_err": rank_err, "rank_err_bound": bound,
+            "rank_err_ok": rank_err <= bound,
+            "replay_stable": replay_stable}
+
+
 # ------------------------------------- 1c) learning-dynamics diagnostics
 
 def measure_learning(seed: int = 0) -> dict:
@@ -380,7 +484,8 @@ def main(seed: int = 0) -> dict:
             and "donated_in_place" in cached \
             and "telemetry_overhead" in cached \
             and "dispatch_p95_s" in cached \
-            and "learning" in cached:
+            and "learning" in cached \
+            and "telemetry_scaling" in cached:
         result = cached
     if result is None:
         mem = [measure_memory(i, sc["mem_n"], seed)
@@ -391,6 +496,7 @@ def main(seed: int = 0) -> dict:
             "scale": scale_tag,
             "memory": mem,
             "telemetry_overhead": measure_telemetry_overhead(),
+            "telemetry_scaling": measure_telemetry_scaling(seed=seed),
             # the acceptance claims: the streaming path's peak is flat in
             # client count while the batched stack grows linearly, and the
             # donated absorb demonstrably reuses its buffers (in place)
@@ -438,6 +544,20 @@ def main(seed: int = 0) -> dict:
                       "phase_energy_j": result["phase_energy_j"]}))
     assert result["telemetry_overhead"]["telemetry_alloc_bytes"] == 0, \
         "disabled telemetry must allocate nothing on the streaming path"
+    ts = result["telemetry_scaling"]
+    print(json.dumps({"telemetry_scaling":
+                      {k: v for k, v in ts.items() if k != "rows"}}))
+    for row in ts["rows"]:
+        print(json.dumps(row))
+    assert ts["peak_flat"], \
+        "rollup telemetry peak must stay flat in device count " \
+        f"(ratio {ts['peak_ratio']:.2f} over {ts['device_ratio']:.0f}x " \
+        "devices)"
+    assert ts["rank_err_ok"], \
+        "sketch quantiles must stay within the declared rank-error " \
+        f"bound ({ts['rank_err']:.4f} > {ts['rank_err_bound']:.4f})"
+    assert ts["replay_stable"], \
+        "rollup + hash-sampled telemetry must replay bitwise"
     print(json.dumps({"learning": result["learning"]}))
     assert result["learning"]["decomp_residual_rel"] <= 1e-5, \
         "stage-energy decomposition must match the fused total"

@@ -85,6 +85,18 @@ _spec(
                    "(band absorbs f32 accumulation ulps)"),
     Reference("learning.alerts_valid", direction=EXACT, baseline=1.0,
               note="health engine fires and alerts.jsonl schema-checks"),
+    Reference("telemetry_scaling.peak_flat", direction=EXACT,
+              baseline=1.0,
+              note="rollup+sampling telemetry peak flat in device "
+                   "count at 10^4 synthetic devices"),
+    Reference("telemetry_scaling.rank_err_ok", direction=EXACT,
+              baseline=1.0,
+              note="sketch quantiles within declared rank error of "
+                   "numpy.percentile on the full stream"),
+    Reference("telemetry_scaling.replay_stable", direction=EXACT,
+              baseline=1.0,
+              note="sampled trace set + sketch state bitwise-identical "
+                   "on replay (hash-based, never RNG-state-dependent)"),
     # trajectory references against the pinned baseline record
     Reference("memory.-1.streaming_peak_bytes", direction=LOWER,
               rel_tol=0.05, unit="B",

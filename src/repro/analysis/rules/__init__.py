@@ -16,6 +16,7 @@ from repro.analysis.rules import (
     kernel_oracle,
     randomness,
     telemetry_guard,
+    unbounded,
 )
 
 
@@ -50,6 +51,10 @@ ALL_RULES: tuple[Rule, ...] = (
     Rule(kernel_oracle.RULE_ID, "project",
          "every Pallas kernel has a ref.py oracle + interpret-mode test",
          kernel_oracle.check_project),
+    Rule(unbounded.RULE_ID, "file",
+         "no label-keyed list aggregation in telemetry/ — bounded "
+         "sketches only",
+         unbounded.check),
 )
 
 RULES_BY_ID = {r.id: r for r in ALL_RULES}

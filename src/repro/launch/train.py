@@ -189,8 +189,19 @@ def run_fl(args):
         agg_route=args.agg_route,
         use_pool=False if args.no_pool else None,
         event_trace_limit=args.event_trace_limit)
-    tel = Telemetry(args.telemetry_dir, jax_profile=args.jax_profile) \
-        if args.telemetry_dir else NULL_TELEMETRY
+    if args.telemetry_dir:
+        rollup = None
+        if args.telemetry_rollup is not None:
+            from repro.telemetry import RollupPolicy
+            rollup = RollupPolicy(device_threshold=args.telemetry_rollup,
+                                  seed=args.seed)
+        tel = Telemetry(args.telemetry_dir,
+                        jax_profile=args.jax_profile,
+                        rollup=rollup,
+                        trace_sample=args.trace_sample,
+                        trace_seed=args.seed)
+    else:
+        tel = NULL_TELEMETRY
     if args.health:
         if not tel.enabled:
             raise SystemExit("--health needs --telemetry-dir: the health "
@@ -411,6 +422,23 @@ def main():
                     help="JSON rule file overriding the default health "
                          "detectors (see telemetry/health.py for the "
                          "schema)")
+    ap.add_argument("--telemetry-rollup", type=int, default=None,
+                    metavar="N",
+                    help="fleet-size threshold at which device-labeled "
+                         "metrics fold into bounded per-cell quantile "
+                         "sketches + top-K straggler/energy-hog "
+                         "trackers (memory O(cells), not O(devices)); "
+                         "below N — or without this flag — telemetry "
+                         "keeps the exact per-device cells, "
+                         "bitwise-identical to before")
+    ap.add_argument("--trace-sample", type=float, default=None,
+                    metavar="RATE",
+                    help="keep only this fraction of device/<id> trace "
+                         "rows, chosen by the deterministic hash "
+                         "blake2b(seed, device_id) < RATE — never an "
+                         "RNG stream — so replays of a seeded run "
+                         "trace the same devices and sampled traces "
+                         "stay comparable across runs")
     ap.add_argument("--event-trace-limit", type=int, default=None,
                     help="bound the in-memory event pop trace to the "
                          "newest N records (evicted records fold into a "

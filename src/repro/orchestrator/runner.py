@@ -155,6 +155,10 @@ class Simulation:
         self.test_y = jnp.asarray(self.test.y)
 
         fleet_cfg = self.fleet_cfg = fleet_cfg or FleetConfig()
+        # fleet-size report engages the registry's rollup policy (if one
+        # was configured via --telemetry-rollup) past its threshold;
+        # pure bookkeeping, records nothing, so no guard is needed
+        self.registry.set_fleet_size(fleet_cfg.n_devices)
         if run_cfg.iid:
             self.parts = partition_iid(rng, run_cfg.n_train,
                                        fleet_cfg.n_devices)
@@ -808,6 +812,7 @@ def _run_round_based(sim: Simulation, policy, orch: OrchestratorConfig,
             # latency is queryable/gateable without a telemetry session
             # repro: ignore[unguarded-telemetry] — always-live by design
             sim.registry.observe("dispatch.latency_s", p.duration,
+                                 device=p.client_id, cell=p.cell,
                                  round=t)
             queue.push(p.completes_at, ev_mod.COMPLETE, p.client_id, p)
             en += p.energy
@@ -1016,7 +1021,7 @@ def _run_fedbuff(sim: Simulation, policy, orch: OrchestratorConfig,
         # telemetry session
         # repro: ignore[unguarded-telemetry] — always-live by design
         sim.registry.observe("dispatch.latency_s", p.completes_at - now,
-                             version=p.version)
+                             device=p.client_id, version=p.version)
         t_off = sim.fleet.next_departure(i, now)
         if t_off < p.completes_at:
             queue.push(t_off, ev_mod.CHURN, i, p)

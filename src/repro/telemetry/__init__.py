@@ -24,7 +24,8 @@ no-ops, bitwise-invisible to the seeded simulation.
 """
 from repro.telemetry.health import (ALERT_KEYS, DEFAULT_RULES,
                                     HealthEngine, HealthRule, load_rules)
-from repro.telemetry.manifest import (REQUIRED_KEYS, build_manifest,
+from repro.telemetry.manifest import (COMPARABLE_KEYS, REQUIRED_KEYS,
+                                      build_manifest, manifest_mismatches,
                                       to_jsonable, trace_signature_hash,
                                       validate_manifest, write_manifest)
 from repro.telemetry.profiler import profile_trace
@@ -34,14 +35,20 @@ from repro.telemetry.references import (DIRECTIONS, EXACT, FAIL, HIGHER,
                                         check_reference, extract_path)
 from repro.telemetry.registry import (COUNTER, GAUGE, HISTOGRAM,
                                       MetricsRegistry)
+from repro.telemetry.sampling import TraceSampler, sampled
 from repro.telemetry.session import NULL_TELEMETRY, Telemetry
+from repro.telemetry.sketch import (QuantileSketch, RollupPolicy, TopK,
+                                    bottom_k, hash01)
 from repro.telemetry.trace import Instant, Span, TraceSink
 
 __all__ = [
     "COUNTER", "GAUGE", "HISTOGRAM", "MetricsRegistry",
     "TraceSink", "Span", "Instant",
     "Telemetry", "NULL_TELEMETRY",
+    "QuantileSketch", "TopK", "RollupPolicy", "bottom_k", "hash01",
+    "TraceSampler", "sampled",
     "build_manifest", "write_manifest", "validate_manifest",
+    "manifest_mismatches", "COMPARABLE_KEYS",
     "to_jsonable", "trace_signature_hash", "REQUIRED_KEYS",
     "profile_trace",
     "Reference", "Verdict", "check_reference", "check_record",

@@ -157,6 +157,41 @@ def _collect_seeds(run_cfg, fleet_cfg) -> dict:
     return seeds
 
 
+#: manifest keys that must agree for two bundles to be comparable —
+#: anything differing here means a `query diff` compares apples to
+#: oranges (different code, config, seeds, or numeric stack)
+COMPARABLE_KEYS = ("schema", "config", "seeds", "jax", "jaxlib",
+                   "numpy", "python", "backend", "git_sha")
+
+
+def manifest_mismatches(a: Optional[dict], b: Optional[dict],
+                        keys: tuple = COMPARABLE_KEYS) -> list[str]:
+    """Human-readable ``"key: a=... b=..."`` lines for every comparable
+    key on which two manifests disagree (empty list = aligned).  A
+    missing manifest mismatches on every key."""
+    out = []
+    a = a if isinstance(a, dict) else {}
+    b = b if isinstance(b, dict) else {}
+    for key in keys:
+        va, vb = a.get(key), b.get(key)
+        if va == vb:
+            continue
+        if key == "config" and isinstance(va, dict) \
+                and isinstance(vb, dict):
+            inner = sorted(set(va) | set(vb))
+            diff = [k for k in inner if va.get(k) != vb.get(k)]
+            out.append(f"config: sections differ: {', '.join(diff)}")
+            continue
+        out.append(f"{key}: a={_short(va)} b={_short(vb)}")
+    return out
+
+
+def _short(v, limit: int = 60) -> str:
+    s = json.dumps(v, default=repr) if isinstance(v, (dict, list)) \
+        else repr(v)
+    return s if len(s) <= limit else s[:limit - 3] + "..."
+
+
 def validate_manifest(manifest: dict) -> list[str]:
     """Missing required keys (empty list = valid)."""
     if not isinstance(manifest, dict):

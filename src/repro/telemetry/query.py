@@ -18,11 +18,19 @@ localized to a device/cell/phase **without re-running the simulation**:
 * ``health`` — the run's health alerts from ``alerts.jsonl`` (written
   when the run was launched with ``--health``), one table row per
   alert; ``--json`` dumps the raw records.
+* ``diff A/ B/`` — the cross-run differential: aligns two flush
+  bundles by manifest (``# manifest mismatch`` warnings when the
+  configs/seeds/versions disagree — the deltas are then apples to
+  oranges) and reports per-phase cost-attribution deltas (**bitwise**:
+  each side replays the live summation, the delta is one subtraction),
+  per-cell energy deltas, dispatch-latency quantile deltas, and health
+  alert-count deltas.  ``--json`` dumps the full diff document.
 
 Every subcommand degrades explicitly on empty or partial bundles — a
 bundle with no ``metrics.jsonl``, no ``round.*`` gauges, or no
 ``dispatch.latency_s`` observations prints a "no data" line instead of
-raising (a half-flushed run is still inspectable).
+raising (a half-flushed run is still inspectable, and ``diff`` against
+a half-flushed run reports what it can).
 
 The phase axis and its RoundLog field mapping live here as the offline
 single source; ``repro.train.fl_loop`` keeps the live (identical)
@@ -35,7 +43,9 @@ import json
 import os
 from typing import Optional
 
+from repro.telemetry.manifest import manifest_mismatches
 from repro.telemetry.registry import MetricsRegistry
+from repro.telemetry.sketch import QuantileSketch
 
 ROUND_PREFIX = "round."
 
@@ -64,6 +74,19 @@ def load_registry(telemetry_dir: str) -> MetricsRegistry:
     with open(path) as f:
         return MetricsRegistry.from_records(
             json.loads(line) for line in f if line.strip())
+
+
+def load_manifest(telemetry_dir: str) -> Optional[dict]:
+    """``<dir>/manifest.json`` as a dict, or None when absent/unreadable
+    (the diff degrades with a "# no data" line instead of raising)."""
+    path = os.path.join(telemetry_dir, "manifest.json")
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
 
 
 def round_indices(reg: MetricsRegistry) -> list:
@@ -146,6 +169,10 @@ def cmd_summary(args) -> int:
               f"p99={hist['p99']:.3f}s max={hist['max']:.3f}s")
     else:
         print("[dispatch latency] no observations")
+    top = reg.top_devices("dispatch.latency_s", k=5)
+    if top:
+        print("[top stragglers] "
+              + "  ".join(f"device {dev}: {v:.3f}s" for dev, v in top))
     return 0
 
 
@@ -185,7 +212,12 @@ def cmd_metric(args) -> int:
     rows = reg.series(args.name, args.over, **labels)
     print(f"{args.over},value")
     for over_value, value in rows:
-        if isinstance(value, list):           # histogram cell
+        if isinstance(value, QuantileSketch):  # rolled-up cell
+            stats = {"count": value.count, "sum": value.sum,
+                     "p50": value.quantile(0.5),
+                     "p95": value.quantile(0.95)}
+            print(f"{over_value},{json.dumps(stats)}")
+        elif isinstance(value, list):          # histogram cell
             stats = {"count": len(value), "sum": sum(value)}
             print(f"{over_value},{json.dumps(stats)}")
         else:
@@ -220,6 +252,139 @@ def cmd_spans(args) -> int:
     return 0
 
 
+# ------------------------------------------------------------------ diff
+
+def _alert_counts(telemetry_dir: str) -> Optional[dict]:
+    """``{rule: count}`` from ``alerts.jsonl``; None when absent."""
+    path = os.path.join(telemetry_dir, "alerts.jsonl")
+    if not os.path.exists(path):
+        return None
+    counts: dict = {}
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                rule = json.loads(line).get("rule", "?")
+                counts[rule] = counts.get(rule, 0) + 1
+    return counts
+
+
+def bundle_diff(dir_a: str, dir_b: str) -> dict:
+    """The full cross-run differential of two flush bundles as a dict.
+
+    Pure function of the two bundles' files; every delta is ``b - a``.
+    The phase-attribution deltas are bitwise-faithful: each side is
+    :func:`phase_totals` (the pinned replay of the live summation) and
+    the delta is a single float subtraction — no re-simulation, no
+    re-accumulation.  Missing pieces land in ``no_data`` instead of
+    raising."""
+    no_data: list[str] = []
+    regs = {}
+    for tag, d in (("a", dir_a), ("b", dir_b)):
+        if not os.path.exists(os.path.join(d, "metrics.jsonl")):
+            no_data.append(f"{tag}: no metrics.jsonl in {d}")
+        regs[tag] = load_registry(d)
+    manifests = {tag: load_manifest(d)
+                 for tag, d in (("a", dir_a), ("b", dir_b))}
+    for tag, d in (("a", dir_a), ("b", dir_b)):
+        if manifests[tag] is None:
+            no_data.append(f"{tag}: no manifest.json in {d}")
+    mismatches = manifest_mismatches(manifests["a"], manifests["b"]) \
+        if None not in manifests.values() else []
+
+    totals = {tag: phase_totals(regs[tag]) for tag in ("a", "b")}
+    for tag in ("a", "b"):
+        if not round_indices(regs[tag]):
+            no_data.append(f"{tag}: no round.* gauges")
+    delta = {metric: {phase: totals["b"][metric][phase]
+                      - totals["a"][metric][phase]
+                      for phase in PHASES}
+             for metric in PHASE_FIELDS}
+
+    cells: dict = {}
+    cell_ids = sorted(set(regs["a"].label_values("cost.energy_j", "cell"))
+                      | set(regs["b"].label_values("cost.energy_j",
+                                                   "cell")))
+    for c in cell_ids:
+        ea = regs["a"].total("cost.energy_j", cell=c)
+        eb = regs["b"].total("cost.energy_j", cell=c)
+        cells[str(c)] = {"a": ea, "b": eb, "delta": eb - ea}
+
+    dispatch = {tag: regs[tag].summary("dispatch.latency_s")
+                for tag in ("a", "b")}
+    dispatch["delta"] = None
+    if dispatch["a"] is not None and dispatch["b"] is not None:
+        dispatch["delta"] = {k: dispatch["b"][k] - dispatch["a"][k]
+                             for k in ("p50", "p95", "p99", "max")}
+
+    alerts = {tag: _alert_counts(d)
+              for tag, d in (("a", dir_a), ("b", dir_b))}
+    alert_delta = None
+    if alerts["a"] is not None and alerts["b"] is not None:
+        rules = sorted(set(alerts["a"]) | set(alerts["b"]))
+        alert_delta = {r: alerts["b"].get(r, 0) - alerts["a"].get(r, 0)
+                       for r in rules}
+
+    return {"a": dir_a, "b": dir_b,
+            "manifest_mismatches": mismatches,
+            "no_data": no_data,
+            "phase_totals": {"a": totals["a"], "b": totals["b"],
+                             "delta": delta},
+            "cell_energy_j": cells,
+            "dispatch": dispatch,
+            "alerts": {"a": alerts["a"], "b": alerts["b"],
+                       "delta": alert_delta}}
+
+
+def cmd_diff(args) -> int:
+    doc = bundle_diff(args.dir_a, args.dir_b)
+    if args.json:
+        print(json.dumps(doc, indent=1))
+        return 0
+    for line in doc["no_data"]:
+        print(f"# no data: {line}")
+    for line in doc["manifest_mismatches"]:
+        print(f"# manifest mismatch: {line}")
+    if doc["manifest_mismatches"]:
+        print("# manifest mismatch: deltas below compare bundles from "
+              "DIFFERENT configurations — interpret with care")
+    print(f"[phase attribution delta] b - a  (a={doc['a']} b={doc['b']})")
+    print(f"  {'phase':>9s} {'d_energy_j':>12s} {'d_latency_s':>12s} "
+          f"{'d_comm_mb':>12s}")
+    d = doc["phase_totals"]["delta"]
+    for phase in PHASES:
+        print(f"  {phase:>9s} {d['energy_j'][phase]:12.3f} "
+              f"{d['latency_s'][phase]:12.3f} "
+              f"{d['comm_bits'][phase] / 8e6:12.3f}")
+    if doc["cell_energy_j"]:
+        print("[cell energy delta]")
+        print(f"  {'cell':>6s} {'a':>12s} {'b':>12s} {'delta':>12s}")
+        for c, row in doc["cell_energy_j"].items():
+            print(f"  {c:>6s} {row['a']:12.3f} {row['b']:12.3f} "
+                  f"{row['delta']:12.3f}")
+    else:
+        print("# no data: no per-cell cost.energy_j in either bundle")
+    disp = doc["dispatch"]
+    if disp["delta"] is not None:
+        print("[dispatch latency delta] "
+              + " ".join(f"d_{k}={disp['delta'][k]:+.4f}s"
+                         for k in ("p50", "p95", "p99", "max"))
+              + f"  (n: {disp['a']['count']} -> {disp['b']['count']})")
+    else:
+        print("# no data: dispatch.latency_s missing from a bundle")
+    al = doc["alerts"]
+    if al["delta"] is not None:
+        if al["delta"]:
+            print("[health alert delta]")
+            for rule, dv in al["delta"].items():
+                print(f"  {rule:>24s} {dv:+d}")
+        else:
+            print("[health alert delta] none (0 alerts on both sides)")
+    else:
+        print("# no data: alerts.jsonl missing from a bundle "
+              "(run with --health)")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.telemetry.query",
@@ -245,6 +410,14 @@ def main(argv=None) -> int:
     p.add_argument("--telemetry-dir", required=True)
     p.add_argument("--top", type=int, default=10)
     p.set_defaults(fn=cmd_spans)
+
+    p = sub.add_parser("diff", help="cross-run differential of two "
+                                    "flush bundles (deltas are b - a)")
+    p.add_argument("dir_a", help="baseline bundle directory (a)")
+    p.add_argument("dir_b", help="candidate bundle directory (b)")
+    p.add_argument("--json", action="store_true",
+                   help="full-precision diff document instead of tables")
+    p.set_defaults(fn=cmd_diff)
 
     p = sub.add_parser("health", help="health alerts from alerts.jsonl")
     p.add_argument("--telemetry-dir", required=True)

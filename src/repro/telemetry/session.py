@@ -35,15 +35,32 @@ class Telemetry:
     enabled = True
 
     def __init__(self, out_dir: Optional[str] = None, *,
-                 jax_profile: bool = False):
+                 jax_profile: bool = False, rollup=None,
+                 trace_sample: Optional[float] = None,
+                 trace_seed: int = 0):
         self.out_dir = out_dir
         self.jax_profile = jax_profile
-        self.registry = MetricsRegistry()
-        self.sink = TraceSink()
+        # fleet-scale bounds (both off by default — exact telemetry):
+        # `rollup` is a RollupPolicy folding device-labeled metrics into
+        # per-cell sketches once set_fleet_size crosses its threshold;
+        # `trace_sample` keeps only the deterministic blake2b hash-slice
+        # of device/<id> trace rows (see sampling.py).
+        self.registry = MetricsRegistry(rollup=rollup)
+        sampler = None
+        if trace_sample is not None:
+            from repro.telemetry.sampling import TraceSampler
+            sampler = TraceSampler(trace_sample, seed=trace_seed)
+        self.sink = TraceSink(sampler=sampler)
         # optional HealthEngine; attached by the launcher under --health
         # (kept an attribute, not a constructor arg, so the session never
         # imports the health module unless a run opts in)
         self.health = None
+
+    def set_fleet_size(self, n: int) -> None:
+        """Report the fleet size (engages rollup past its threshold).
+
+        Pure bookkeeping — records nothing, so it is safe unguarded."""
+        self.registry.set_fleet_size(n)
 
     # ------------------------------------------------ emission (delegates)
 
@@ -102,6 +119,9 @@ class _NullTelemetry:
     registry = None
     sink = None
     health = None
+
+    def set_fleet_size(self, n):
+        pass
 
     def span(self, track, name, t0, t1, **args):
         pass

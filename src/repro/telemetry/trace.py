@@ -49,11 +49,19 @@ class Instant:
 
 
 class TraceSink:
-    """Append-only collector of spans/instants on named tracks."""
+    """Append-only collector of spans/instants on named tracks.
 
-    def __init__(self):
+    An optional :class:`~repro.telemetry.sampling.TraceSampler` bounds
+    the high-cardinality ``device/<id>`` rows: events on sampled-out
+    tracks are dropped at emission (never buffered), the decision being
+    the deterministic ``blake2b(seed, device_id) < rate`` hash — so a
+    replay of a seeded run traces the same devices and the resulting
+    timelines stay directly comparable."""
+
+    def __init__(self, sampler=None):
         self.spans: list[Span] = []
         self.instants: list[Instant] = []
+        self.sampler = sampler
 
     def __len__(self) -> int:
         return len(self.spans) + len(self.instants)
@@ -61,11 +69,15 @@ class TraceSink:
     def span(self, track: str, name: str, t0: float, t1: float,
              **args) -> None:
         """Record a ``[t0, t1]`` interval (simulated seconds) on a track."""
+        if self.sampler is not None and not self.sampler.keep(track):
+            return
         self.spans.append(Span(track, name, float(t0), float(t1),
                                args or None))
 
     def instant(self, track: str, name: str, t: float, **args) -> None:
         """Record a point event at simulated time ``t`` on a track."""
+        if self.sampler is not None and not self.sampler.keep(track):
+            return
         self.instants.append(Instant(track, name, float(t), args or None))
 
     # ------------------------------------------------------------- exports
@@ -112,9 +124,12 @@ class TraceSink:
             if i.args:
                 ev["args"] = _jsonable_args(i.args)
             events.append(ev)
+        other = {"clock": "simulated",
+                 "time_unit": "1 sim second = 1 us x 1e6"}
+        if self.sampler is not None:
+            other["trace_sample"] = self.sampler.describe()
         return {"traceEvents": events, "displayTimeUnit": "ms",
-                "otherData": {"clock": "simulated",
-                              "time_unit": "1 sim second = 1 us x 1e6"}}
+                "otherData": other}
 
     def write_perfetto(self, path: str) -> None:
         with open(path, "w") as f:

@@ -1,0 +1,20 @@
+"""Violating fixture for unbounded-telemetry: label-keyed list appends
+inside a telemetry/ directory — each shape the rule must flag."""
+
+
+class BadRegistry:
+    def __init__(self):
+        self.cells = {}
+
+    def observe(self, key, value):
+        # get-or-create on a label-keyed dict: grows one entry per
+        # observation, unbounded in label cardinality
+        self.cells.setdefault(key, []).append(value)
+
+    def observe_subscript(self, key, value):
+        if key not in self.cells:
+            self.cells[key] = []
+        self.cells[key].append(value)
+
+    def observe_get(self, key, value):
+        self.cells.get(key, []).append(value)

@@ -1,0 +1,26 @@
+"""Clean twin for unbounded-telemetry: bounded or non-keyed
+aggregation inside a telemetry/ directory — none of it flagged."""
+
+
+class CleanSink:
+    def __init__(self, sketch_factory):
+        self.spans = []
+        self.cells = {}
+        self._make_sketch = sketch_factory
+
+    def span(self, item):
+        # plain-name append: an event list, not label-keyed aggregation
+        self.spans.append(item)
+
+    def observe(self, key, value):
+        # bounded sketch cell: fixed capacity regardless of cardinality
+        cell = self.cells.get(key)
+        if cell is None:
+            cell = self.cells[key] = self._make_sketch()
+        cell.add(value)
+
+    def drain(self, rows):
+        out = []
+        for row in rows:
+            out.append(row)
+        return out

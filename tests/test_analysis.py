@@ -24,7 +24,7 @@ FIX = REPO / "tests" / "fixtures" / "analysis"
 
 RULE_IDS = ("use-after-donate", "unseeded-randomness",
             "unguarded-telemetry", "kernel-oracle-pairing",
-            "io-alias-consistency")
+            "io-alias-consistency", "unbounded-telemetry")
 
 
 def _scan(paths, rule_id=None):
@@ -55,6 +55,8 @@ def test_registry_covers_the_contracted_rules():
     ("unguarded-telemetry", "orchestrator/telemetry_bad.py",
      "orchestrator/telemetry_clean.py", 3),
     ("io-alias-consistency", "io_alias_bad.py", "io_alias_clean.py", 2),
+    ("unbounded-telemetry", "telemetry/unbounded_bad.py",
+     "telemetry/unbounded_clean.py", 3),
 ])
 def test_rule_fires_and_stays_silent(rule_id, bad, clean, min_hits):
     hits = _scan([FIX / bad], rule_id)

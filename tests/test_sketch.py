@@ -1,0 +1,299 @@
+"""Fleet-scale telemetry primitives (PR 10): sketch merge algebra,
+determinism, rank-error bounds, bottom-k stability, rollup semantics,
+histogram-cap bitwise guard, trace sampling, and the query diff CLI."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # offline container: seeded-random fallback
+    from _hypothesis_shim import given, settings, strategies as st
+
+from repro.telemetry import (MetricsRegistry, QuantileSketch,
+                             RollupPolicy, Telemetry, TopK, TraceSampler,
+                             bottom_k, sampled)
+from repro.telemetry.query import bundle_diff, main as query_main
+
+finite = st.floats(min_value=-1e6, max_value=1e6)
+streams = st.lists(finite, min_size=0, max_size=80)
+
+
+def _sketch(values, capacity=16, salt="t"):
+    sk = QuantileSketch(capacity, salt=salt)
+    for v in values:
+        sk.add(v)
+    return sk
+
+
+def _state(sk):
+    """Bitwise-comparable identity (sum excluded: float addition is
+    only associative to ~1 ulp; asserted separately with a tolerance)."""
+    return (sk.count, sk.min, sk.max, sk._entries)
+
+
+# ----------------------------------------------------- merge algebra
+
+@settings(max_examples=30)
+@given(streams, streams, streams)
+def test_merge_associative_and_commutative(xs, ys, zs):
+    a, b, c = _sketch(xs), _sketch(ys), _sketch(zs)
+    ab_c = a.merge(b).merge(c)
+    a_bc = a.merge(b.merge(c))
+    assert _state(ab_c) == _state(a_bc)
+    assert abs(ab_c.sum - a_bc.sum) <= 1e-9 * (1.0 + abs(ab_c.sum))
+    assert _state(a.merge(b)) == _state(b.merge(a))
+
+
+@settings(max_examples=20)
+@given(streams)
+def test_insertion_gives_same_state_as_replay(xs):
+    """Determinism: the sketch is a pure function of the value sequence
+    — two passes over the same stream agree bitwise, including the
+    retained digests serialized through JSON."""
+    s1, s2 = _sketch(xs), _sketch(xs)
+    assert _state(s1) == _state(s2) and s1.sum == s2.sum
+    doc = json.loads(json.dumps(s1.to_dict()))
+    assert _state(QuantileSketch.from_dict(doc)) == _state(s1)
+
+
+def test_exact_below_capacity():
+    sk = _sketch(range(16), capacity=16)
+    assert sk.exact and sk.rank_error_bound() == 0.0
+    assert sorted(sk.values()) == [float(i) for i in range(16)]
+    sk.add(99.0)
+    assert not sk.exact and len(sk.values()) == 16
+    assert sk.count == 17 and sk.max == 99.0
+
+
+# ------------------------------------------- rank error vs numpy
+
+@pytest.mark.parametrize("name,stream", [
+    ("sorted", np.arange(20000.0)),
+    ("reversed", np.arange(20000.0)[::-1]),
+    ("constant", np.full(20000, 3.25)),
+    ("bimodal", np.concatenate([np.full(10000, -5.0),
+                                np.full(10000, 7.0)])),
+    ("gamma", np.random.default_rng(7).gamma(2.0, 1.0, 20000)),
+])
+def test_quantile_rank_error_bound(name, stream):
+    """Adversarial streams: every estimated quantile's empirical rank
+    sits within the declared bound of the requested rank."""
+    sk = _sketch(stream, capacity=512, salt=name)
+    bound = sk.rank_error_bound()
+    srt = np.sort(stream)
+    n = len(srt)
+    for q in (0.01, 0.25, 0.5, 0.75, 0.95, 0.99):
+        est = sk.quantile(q)
+        lo = np.searchsorted(srt, est, side="left") / (n - 1)
+        hi = np.searchsorted(srt, est, side="right") / (n - 1)
+        # distance from q to the estimate's rank interval (ties span it)
+        err = max(lo - q, q - hi, 0.0)
+        assert err <= bound, (name, q, est, err, bound)
+        exact = float(np.percentile(srt, q * 100))
+        # and the value itself matches numpy exactly while exact
+        if sk.exact:
+            assert est == exact
+
+
+# ------------------------------------------------ bottom-k stability
+
+@settings(max_examples=20)
+@given(st.integers(min_value=1, max_value=60),
+       st.integers(min_value=0, max_value=60),
+       st.integers(min_value=1, max_value=12))
+def test_bottom_k_sampling_stable_under_growth(n, extra, k):
+    """Growing the device set never rewrites history: survivors of the
+    grown set that existed before were already in the original sample."""
+    small = set(bottom_k(range(n), k, seed=5))
+    grown = set(bottom_k(range(n + extra), k, seed=5))
+    assert (grown & set(range(n))) <= small
+    assert len(small) == min(k, n)
+
+
+def test_hash_sampling_deterministic_and_calibrated():
+    keeps = [d for d in range(20000) if sampled(3, d, 0.05)]
+    again = [d for d in range(20000) if sampled(3, d, 0.05)]
+    assert keeps == again
+    assert 0.03 < len(keeps) / 20000 < 0.07
+    assert all(sampled(3, d, 1.0) for d in range(10))
+    assert not any(sampled(3, d, 0.0) for d in range(10))
+
+
+# ------------------------------------------------------------- top-k
+
+def test_topk_tracks_largest_and_merges():
+    tk = TopK(3, salt="s")
+    for d, v in [(1, 5.0), (2, 9.0), (3, 1.0), (4, 7.0), (2, 2.0)]:
+        tk.add(d, v)
+    assert tk.items() == [("2", 9.0), ("4", 7.0), ("1", 5.0)]
+    other = TopK(3, salt="s")
+    other.add(9, 8.5)
+    merged = tk.merge(other)
+    assert merged.items() == [("2", 9.0), ("9", 8.5), ("4", 7.0)]
+    doc = json.loads(json.dumps(merged.to_dict()))
+    assert TopK.from_dict(doc).items() == merged.items()
+
+
+# ----------------------------------------------- registry integration
+
+def _fill(reg, n_devices=200, rounds=2):
+    for r in range(rounds):
+        for d in range(n_devices):
+            v = ((d * 37) % 11) * 0.5 + r
+            reg.observe("lat", v, device=d, cell=d % 2, round=r)
+            reg.counter("en", 2.0 * v, device=d, cell=d % 2,
+                        phase="train")
+
+
+def test_rollup_bounds_cells_and_preserves_totals():
+    pol = RollupPolicy(device_threshold=100, sketch_capacity=64,
+                       top_k=4, seed=1)
+    exact, rolled = MetricsRegistry(), MetricsRegistry(rollup=pol)
+    rolled.set_fleet_size(200)
+    _fill(exact), _fill(rolled)
+    assert len(rolled._metrics["lat"]) == 4      # (cell, round) cells
+    assert len(exact._metrics["lat"]) == 400     # per (device, ...) rows
+    assert rolled.total("en", cell=1) == pytest.approx(
+        exact.total("en", cell=1), rel=1e-12)
+    se, sr = exact.summary("lat"), rolled.summary("lat")
+    assert sr["count"] == se["count"] and sr["min"] == se["min"] \
+        and sr["max"] == se["max"]
+    top = rolled.top_devices("lat", k=4, cell=1, round=1)
+    assert len(top) == 4 and top == sorted(top, key=lambda kv: -kv[1])
+    # below threshold: bitwise-identical to a policy-free registry
+    under = MetricsRegistry(rollup=pol)
+    under.set_fleet_size(50)
+    _fill(under)
+    assert list(under.records()) == list(exact.records())
+
+
+def test_rollup_roundtrips_through_jsonl(tmp_path):
+    pol = RollupPolicy(device_threshold=1, sketch_capacity=32, top_k=3)
+    reg = MetricsRegistry(rollup=pol)
+    reg.set_fleet_size(64)
+    _fill(reg, n_devices=64, rounds=1)
+    path = tmp_path / "metrics.jsonl"
+    reg.to_jsonl(str(path))
+    with open(path) as f:
+        back = MetricsRegistry.from_records(
+            json.loads(line) for line in f)
+    assert list(back.records()) == list(reg.records())
+    assert back.summary("lat") == reg.summary("lat")
+    assert back.top_devices("lat", cell=0, round=0) \
+        == reg.top_devices("lat", cell=0, round=0)
+
+
+def test_histogram_cap_is_bitwise_below_and_bounded_above():
+    vals = [((i * 17) % 23) * 0.25 for i in range(300)]
+    capped = MetricsRegistry(histogram_cap=100)
+    uncapped = MetricsRegistry(histogram_cap=10**9)
+    for i, v in enumerate(vals[:100]):
+        capped.observe("m", v, round=i)
+        uncapped.observe("m", v, round=i)
+    # at the cap: summaries (and the records) are bitwise-identical
+    assert capped.summary("m") == uncapped.summary("m")
+    assert list(capped.records()) == list(uncapped.records())
+    for i, v in enumerate(vals[100:], start=100):
+        capped.observe("m", v, round=i)
+        uncapped.observe("m", v, round=i)
+    # past it: one bounded overflow cell, exact moments, quantiles
+    # within the sketch's declared rank error
+    assert len(capped._metrics["m"]) == 1
+    s, e = capped.summary("m"), uncapped.summary("m")
+    assert s["count"] == 300 and s["min"] == e["min"] \
+        and s["max"] == e["max"]
+    assert s["sum"] == pytest.approx(e["sum"], rel=1e-12)
+    srt = sorted(vals)
+    bound = capped.value("m").rank_error_bound() \
+        if hasattr(capped.value("m"), "rank_error_bound") else 0.0
+    for q in (0.5, 0.95):
+        est = s[f"p{q * 100:g}"]
+        lo = np.searchsorted(srt, est, side="left") / (len(srt) - 1)
+        hi = np.searchsorted(srt, est, side="right") / (len(srt) - 1)
+        assert max(lo - q, q - hi, 0.0) <= bound
+
+
+# ------------------------------------------------------ trace sampling
+
+def test_trace_sampler_keeps_non_device_tracks():
+    tel1 = Telemetry(trace_sample=0.02, trace_seed=9)
+    tel2 = Telemetry(trace_sample=0.02, trace_seed=9)
+    for tel in (tel1, tel2):
+        for d in range(2000):
+            tel.span(f"device/{d}", "train", 0.0, 1.0)
+        tel.span("server", "round", 0.0, 2.0)
+        tel.instant("cell/1", "EDGE_MERGE", 1.5)
+    t1 = [s.track for s in tel1.sink.spans]
+    assert t1 == [s.track for s in tel2.sink.spans]   # replay-stable
+    assert "server" in t1
+    assert any(i.track == "cell/1" for i in tel1.sink.instants)
+    n_dev = sum(1 for t in t1 if t.startswith("device/"))
+    assert 0 < n_dev < 200
+    assert tel1.sink.sampler.n_dropped > 0
+    other = Telemetry(trace_sample=0.02, trace_seed=10)
+    for d in range(2000):
+        other.span(f"device/{d}", "train", 0.0, 1.0)
+    assert [s.track for s in other.sink.spans] != t1  # seed matters
+    assert TraceSampler(0.5, seed=0).keep("server")
+    perf = tel1.sink.to_perfetto()
+    assert perf["otherData"]["trace_sample"]["rate"] == 0.02
+
+
+# --------------------------------------------------------- query diff
+
+def _flush_bundle(tmp_path, tag, scale=1.0, seed=0):
+    from repro.telemetry.manifest import build_manifest
+    tel = Telemetry(str(tmp_path / tag))
+    for r in range(3):
+        tel.gauge("round.energy_train_j", 10.0 * scale + r, round=r)
+        tel.gauge("round.latency_train_s", 1.0 * scale, round=r)
+        tel.gauge("round.comm_bits", 8e6 * scale, round=r)
+        tel.observe("dispatch.latency_s", 0.5 * scale + 0.1 * r,
+                    device=r, round=r)
+        tel.counter("cost.energy_j", 5.0 * scale, device=r, cell=r % 2,
+                    phase="train", round=r)
+    run_cfg = dataclasses.make_dataclass("Cfg", [("seed", int)])(seed)
+    tel.flush(manifest=build_manifest(run_cfg))
+    return str(tmp_path / tag)
+
+
+def test_bundle_diff_reproduces_phase_deltas_bitwise(tmp_path):
+    from repro.telemetry.query import load_registry, phase_totals
+    a = _flush_bundle(tmp_path, "a", scale=1.0)
+    b = _flush_bundle(tmp_path, "b", scale=2.0)
+    doc = bundle_diff(a, b)
+    ta, tb = (phase_totals(load_registry(d)) for d in (a, b))
+    for metric in ta:
+        for phase in ta[metric]:
+            assert doc["phase_totals"]["delta"][metric][phase] \
+                == tb[metric][phase] - ta[metric][phase]   # bitwise
+    assert doc["manifest_mismatches"] == []     # same config/seed/code
+    assert doc["dispatch"]["delta"]["p95"] > 0
+    assert doc["cell_energy_j"]["0"]["delta"] > 0
+    assert query_main(["diff", a, b]) == 0
+
+
+def test_bundle_diff_warns_on_manifest_mismatch(tmp_path, capsys):
+    a = _flush_bundle(tmp_path, "a", seed=0)
+    b = _flush_bundle(tmp_path, "b", seed=1)
+    doc = bundle_diff(a, b)
+    assert any("seeds" in m for m in doc["manifest_mismatches"])
+    assert query_main(["diff", a, b]) == 0
+    out = capsys.readouterr().out
+    assert "# manifest mismatch" in out
+
+
+def test_bundle_diff_degrades_on_partial_bundles(tmp_path, capsys):
+    a = _flush_bundle(tmp_path, "a")
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    doc = bundle_diff(a, str(empty))
+    assert any("no metrics.jsonl" in m for m in doc["no_data"])
+    assert any("no manifest.json" in m for m in doc["no_data"])
+    assert query_main(["diff", a, str(empty)]) == 0   # never raises
+    out = capsys.readouterr().out
+    assert "# no data" in out
+    assert query_main(["diff", str(empty), str(empty), "--json"]) == 0
